@@ -1,0 +1,73 @@
+"""Index-creation benchmarks — the paper's Fig. 4/5/6/7 family.
+
+Measures, per dataset (Synthetic / SALD-like / Seismic-like) and size:
+  * serial      — chunked build, each chunk staged + summarized
+                  synchronously (the ADS+-style non-overlapped baseline);
+  * paris_plus  — ChunkedLoader double buffering + async dispatch
+                  (ingest/compute overlap — the ParIS+ mechanism);
+  * messi       — one-shot in-memory build (MESSI stage 1+2).
+
+On one CPU device the paper's #cores axis becomes the shard-partition axis
+of the distributed builder (bench_scaling.py); here we report wall time and
+the overlap gain serial -> paris_plus, which is the paper's Fig. 4 claim
+("ParIS+ completely masks the CPU cost") in this container's terms.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as core
+from benchmarks.common import print_table, timeit, write_rows
+from repro.data import make_dataset
+from repro.data.loader import ChunkedLoader, IncrementalBuilder
+
+
+def build_serial(raw: np.ndarray, capacity: int):
+    builder = IncrementalBuilder(capacity=capacity)
+    for start in range(0, len(raw), 1 << 14):
+        chunk = jax.device_put(raw[start:start + (1 << 14)])
+        jax.block_until_ready(chunk)                  # no overlap
+        builder.add_chunk(chunk)
+        jax.block_until_ready(builder._sax[-1])
+    return builder.finalize()
+
+
+def build_overlapped(raw: np.ndarray, capacity: int):
+    loader = ChunkedLoader(raw, chunk=1 << 14)
+    builder = IncrementalBuilder(capacity=capacity)
+    for chunk in loader:                              # staged async
+        builder.add_chunk(chunk)                      # dispatched async
+    return builder.finalize()
+
+
+def run(sizes=(50_000, 200_000), datasets=("synthetic", "sald", "seismic"),
+        capacity: int = 1024) -> list[dict]:
+    rows = []
+    for ds in datasets:
+        for n in sizes:
+            length = 128 if ds == "sald" else 256
+            raw = make_dataset(ds, n, length)
+            t_serial, _ = timeit(build_serial, raw, capacity, iters=2)
+            t_overlap, _ = timeit(build_overlapped, raw, capacity, iters=2)
+            t_messi, idx = timeit(
+                lambda r: core.build(jnp.asarray(r), capacity=capacity),
+                raw, iters=2)
+            rows.append({
+                "dataset": ds, "n_series": n, "length": length,
+                "serial_s": t_serial, "paris_plus_s": t_overlap,
+                "messi_s": t_messi,
+                "overlap_gain": t_serial / t_overlap,
+                "throughput_Mseries_s": n / t_messi / 1e6,
+                "blocks": int(idx.n_blocks),
+            })
+    print_table("index build (Fig. 4-7)", rows,
+                ["dataset", "n_series", "serial_s", "paris_plus_s",
+                 "messi_s", "overlap_gain", "throughput_Mseries_s"])
+    write_rows("build", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

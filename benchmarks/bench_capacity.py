@@ -1,0 +1,52 @@
+"""Leaf-capacity ablation — the paper's leaf-size knob (max leaf capacity),
+which trades pruning granularity (small leaves prune tighter) against
+per-visit efficiency (large leaves amortize fetch + MXU panel setup).
+
+Measured for both schedules; the block-major optimum is what
+`search_sharded` defaults to.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as core
+from benchmarks.common import print_table, timeit, write_rows
+from repro.core.search import search_block_major
+from repro.core.ucr import search_scan
+from repro.data import make_dataset
+
+
+def run(n: int = 100_000, capacities=(128, 256, 512, 1024, 2048),
+        n_queries: int = 16) -> list[dict]:
+    raw_np = make_dataset("synthetic", n, 256)
+    raw = jnp.asarray(raw_np)
+    rng = np.random.default_rng(5)
+    qs = jnp.asarray(raw_np[rng.choice(n, n_queries, replace=False)]
+                     + 0.05 * rng.standard_normal((n_queries, 256))
+                     .astype(np.float32))
+    oracle = search_scan(raw, qs)
+    rows = []
+    for cap in capacities:
+        idx = core.build(raw, capacity=cap)
+        t_qm, r_qm = timeit(core.search, idx, qs, iters=2)
+        t_bm, r_bm = timeit(search_block_major, idx, qs, iters=2)
+        assert np.array_equal(np.asarray(r_bm.idx), np.asarray(oracle.idx))
+        rows.append({
+            "capacity": cap, "blocks": int(idx.n_blocks),
+            "query_major_ms": t_qm / n_queries * 1e3,
+            "block_major_ms": t_bm / n_queries * 1e3,
+            "bm_refined_frac": float(np.mean(np.asarray(
+                r_bm.stats.series_refined))) / n,
+            "bm_blocks_visited": float(np.mean(np.asarray(
+                r_bm.stats.blocks_visited))),
+        })
+    print_table("leaf capacity ablation", rows,
+                ["capacity", "blocks", "query_major_ms", "block_major_ms",
+                 "bm_refined_frac", "bm_blocks_visited"])
+    write_rows("capacity", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

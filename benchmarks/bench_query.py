@@ -1,0 +1,77 @@
+"""Query-answering benchmarks — the paper's Fig. 8/9/10/11/12 family.
+
+Exact 1-NN latency of the three systems on the three datasets:
+  UCR-Suite-p  (brute-force MXU scan)      — paper's serial-scan baseline
+  ParIS        (flat SAX lower-bound scan) — paper's on-disk index, in-mem
+  MESSI        (ordered block pruning)     — paper's in-memory index
+
+plus the work statistics that explain the ratios (lower bounds computed,
+real distances computed — the paper's §IV mechanism discussion).  The
+paper's headline ratios to compare against: MESSI 55-80x faster than
+UCR-p, 6.4-11x faster than ParIS.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as core
+from benchmarks.common import print_table, timeit, write_rows
+from repro.core.paris import search_paris
+from repro.core.ucr import search_scan
+from repro.data import make_dataset
+
+
+def run(sizes=(100_000, 400_000), datasets=("synthetic", "sald", "seismic"),
+        n_queries: int = 16, capacity: int = 1024) -> list[dict]:
+    rows = []
+    for ds in datasets:
+        for n in sizes:
+            length = 128 if ds == "sald" else 256
+            raw = make_dataset(ds, n, length)
+            rng = np.random.default_rng(99)
+            qs = jnp.asarray(
+                raw[rng.choice(n, n_queries, replace=False)]
+                + 0.05 * rng.standard_normal((n_queries, length))
+                .astype(np.float32))
+            raw_j = jnp.asarray(raw)
+            idx = core.build(raw_j, capacity=capacity)
+
+            t_ucr, r_ucr = timeit(search_scan, raw_j, qs)
+            t_paris, r_paris = timeit(search_paris, idx, qs)
+            t_messi, r_messi = timeit(core.search, idx, qs)
+            from repro.core.search import search_block_major
+            t_bm, r_bm = timeit(search_block_major, idx, qs)
+
+            assert np.array_equal(np.asarray(r_messi.idx),
+                                  np.asarray(r_ucr.idx)), "exactness!"
+            assert np.array_equal(np.asarray(r_bm.idx),
+                                  np.asarray(r_ucr.idx)), "exactness (bm)!"
+            per_q = lambda t: t / n_queries * 1e3
+            rows.append({
+                "dataset": ds, "n_series": n,
+                "ucr_ms": per_q(t_ucr), "paris_ms": per_q(t_paris),
+                "messi_ms": per_q(t_messi),
+                "messi_bm_ms": per_q(t_bm),
+                "messi_vs_ucr": t_ucr / t_messi,
+                "messi_bm_vs_ucr": t_ucr / t_bm,
+                "messi_vs_paris": t_paris / t_messi,
+                "paris_vs_ucr": t_ucr / t_paris,
+                "refined_frac_messi": float(np.mean(np.asarray(
+                    r_messi.stats.series_refined))) / n,
+                "refined_frac_paris": float(np.mean(np.asarray(
+                    r_paris.stats.series_refined))) / n,
+                "lb_frac_messi": float(np.mean(np.asarray(
+                    r_messi.stats.lb_series))) / n,
+            })
+    print_table("query answering (Fig. 8-12)", rows,
+                ["dataset", "n_series", "ucr_ms", "paris_ms", "messi_ms",
+                 "messi_bm_ms", "messi_vs_ucr", "messi_bm_vs_ucr",
+                 "refined_frac_messi", "refined_frac_paris"])
+    write_rows("query", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

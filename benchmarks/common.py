@@ -1,0 +1,52 @@
+"""Shared benchmark utilities: timing, dataset cache, CSV output."""
+from __future__ import annotations
+
+import json
+import os
+import time
+from typing import Callable
+
+import jax
+import numpy as np
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                       "bench")
+
+
+def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3,
+           **kw) -> tuple[float, object]:
+    """Median wall time (s) of ``fn(*args)`` with block_until_ready."""
+    out = None
+    for _ in range(warmup):
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args, **kw)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts)), out
+
+
+def write_rows(name: str, rows: list[dict]) -> str:
+    os.makedirs(OUT_DIR, exist_ok=True)
+    path = os.path.join(OUT_DIR, f"{name}.json")
+    with open(path, "w") as f:
+        json.dump(rows, f, indent=1)
+    return path
+
+
+def print_table(title: str, rows: list[dict], cols: list[str]) -> None:
+    print(f"\n== {title} ==")
+    widths = {c: max(len(c), *(len(_fmt(r.get(c))) for r in rows))
+              for c in cols}
+    print("  ".join(c.ljust(widths[c]) for c in cols))
+    for r in rows:
+        print("  ".join(_fmt(r.get(c)).ljust(widths[c]) for c in cols))
+
+
+def _fmt(v) -> str:
+    if isinstance(v, float):
+        return f"{v:.4g}"
+    return str(v)

@@ -1,0 +1,40 @@
+"""Run every benchmark family (one per paper figure group) and summarize.
+
+    PYTHONPATH=src python -m benchmarks.run            # full set
+    PYTHONPATH=src python -m benchmarks.run --quick    # reduced sizes
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--quick", action="store_true")
+    args = ap.parse_args(argv)
+
+    from benchmarks import (bench_build, bench_capacity, bench_dtw,
+                            bench_query, bench_scaling)
+
+    t0 = time.time()
+    if args.quick:
+        bench_build.run(sizes=(20_000,), datasets=("synthetic",))
+        bench_query.run(sizes=(50_000,), datasets=("synthetic",))
+        bench_dtw.run(n=5_000)
+        bench_capacity.run(n=50_000, capacities=(256, 1024))
+        bench_scaling.run(device_counts=(1, 4))
+    else:
+        bench_build.run()
+        bench_query.run()
+        bench_dtw.run()
+        bench_capacity.run()
+        bench_scaling.run()
+    print(f"\nall benchmarks done in {time.time() - t0:.0f}s; "
+          f"JSON in experiments/bench/")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,50 @@
+"""Render the dry-run JSONL records into the EXPERIMENTS.md tables."""
+import json
+import sys
+
+
+def load(path):
+    rows = []
+    seen = {}
+    for line in open(path):
+        r = json.loads(line)
+        seen[(r["arch"], r["shape"], r.get("mesh", "?"))] = r  # last wins
+    return list(seen.values())
+
+
+def fmt_bytes(b):
+    if b is None:
+        return "-"
+    return f"{b / 2**30:.2f}"
+
+
+def roofline_table(rows, mesh):
+    out = ["| arch | shape | kind | peak GiB/dev | FLOPs/dev | compute ms | "
+           "memory ms | coll ms | bottleneck | useful |",
+           "|---|---|---|---|---|---|---|---|---|---|"]
+    for r in sorted(rows, key=lambda r: (r["arch"], r["shape"])):
+        if r.get("mesh") != mesh or r.get("status") != "ok":
+            continue
+        out.append(
+            f"| {r['arch']} | {r['shape']} | {r['kind']} | "
+            f"{fmt_bytes(r['bytes_per_device']['peak'])} | "
+            f"{r['flops_per_dev']:.2e} | {r['compute_s']*1e3:.1f} | "
+            f"{r['memory_s']*1e3:.1f} | {r['collective_s']*1e3:.1f} | "
+            f"{r['bottleneck']} | {r['useful_ratio']:.2f} |")
+    return "\n".join(out)
+
+
+def summary(rows):
+    ok = [r for r in rows if r.get("status") == "ok"]
+    fail = [r for r in rows if r.get("status") != "ok"]
+    return f"{len(ok)} ok / {len(fail)} failed"
+
+
+if __name__ == "__main__":
+    rows = load(sys.argv[1] if len(sys.argv) > 1
+                else "experiments/dryrun_final.jsonl")
+    print("### single-pod 16x16 (256 chips)\n")
+    print(roofline_table(rows, "16x16"))
+    print("\n### multi-pod 2x16x16 (512 chips)\n")
+    print(roofline_table(rows, "2x16x16"))
+    print("\n", summary(rows))

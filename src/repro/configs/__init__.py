@@ -1,0 +1,12 @@
+"""Assigned-architecture registry.  Importing this package registers all 10
+architectures (plus reduced smoke variants); ``base.get_config(name)``
+resolves them."""
+from repro.configs.base import (ModelConfig, ShapeCell, SHAPES, get_config,
+                                list_archs, count_params, active_params)
+from repro.configs import (pixtral_12b, moonshot_v1_16b_a3b,
+                           granite_moe_1b_a400m, command_r_35b,
+                           h2o_danube_1_8b, gemma3_27b, nemotron_4_340b,
+                           whisper_medium, hymba_1_5b, rwkv6_7b)  # noqa: F401
+
+__all__ = ["ModelConfig", "ShapeCell", "SHAPES", "get_config", "list_archs",
+           "count_params", "active_params"]

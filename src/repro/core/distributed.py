@@ -1,0 +1,162 @@
+"""Multi-device / multi-pod index build and query answering (DESIGN.md §5).
+
+The paper's worker threads become mesh devices.  Every device is symmetric
+(as every core is in the paper): the dataset is range-sharded over ALL mesh
+axes flattened, each device builds its own BlockIndex shard completely
+independently (the paper's "workers process distinct subtrees ... no need for
+synchronization"), and query answering uses the two-round shared-BSF
+protocol:
+
+  round 1: every shard computes its approximate BSF (stage A) ->
+           pmin all-reduce (one scalar per query)           [paper: initial
+           BSF from the query's home leaf, shared variable]
+  round 2: every shard runs the exact ordered-pruning search seeded with the
+           GLOBAL BSF (so pruning is as tight as the paper's shared-memory
+           BSF reads) -> final (dist, id) min-reduce.
+
+Total communication per query batch: two scalar all-reduces + one id
+all-reduce — independent of dataset size and device count, which is what
+makes this design runnable at 1000+ nodes.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+import repro.core.index as index_lib
+from repro.core.search import approximate_search as _approx_search
+from repro.core.search import search as _block_search
+from repro.core.index import BlockIndex
+from repro.core.search import SearchResult, SearchStats
+
+
+def _all_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(mesh.axis_names)
+
+
+def index_pspecs(mesh: Mesh, like: BlockIndex | None = None,
+                 **meta: Any) -> BlockIndex:
+    """PartitionSpecs for each BlockIndex field (shard over all axes).
+
+    shard_map spec pytrees must carry the same static metadata as the real
+    index, so pass either ``like`` (an existing index) or explicit meta.
+    """
+    ax = _all_axes(mesh)
+    if like is not None:
+        meta = dict(n=like.n, w=like.w, card=like.card,
+                    capacity=like.capacity, n_real=like.n_real)
+    return BlockIndex(
+        raw=P(ax), slo=P(ax), shi=P(ax),
+        elo=P(None, ax), ehi=P(None, ax), ids=P(ax), **meta)
+
+
+def build_sharded(raw: jax.Array, mesh: Mesh, *, w: int = 16, card: int = 256,
+                  capacity: int = 512, normalize: bool = True) -> BlockIndex:
+    """Build one index shard per device from globally-sharded raw data.
+
+    raw (N, n) with N divisible by the device count.  Each shard's series
+    keep their GLOBAL ids so query answers are mesh-shape-independent.
+    """
+    ax = _all_axes(mesh)
+    n_series, n = raw.shape
+    n_dev = mesh.size
+    if n_series % n_dev:
+        raise ValueError(f"N={n_series} must divide device count {n_dev}")
+    shard_n = n_series // n_dev
+    cap = min(capacity, shard_n)
+    ids = jnp.arange(n_series, dtype=jnp.int32)
+
+    def _build(local_raw, local_ids):
+        return index_lib.build(local_raw, w=w, card=card, capacity=capacity,
+                               normalize=normalize, ids=local_ids)
+
+    out_specs = index_pspecs(mesh, n=n, w=w, card=card, capacity=cap,
+                             n_real=shard_n)
+    fn = jax.shard_map(_build, mesh=mesh, in_specs=(P(ax), P(ax)),
+                       out_specs=out_specs)
+    return fn(raw, ids)
+
+
+def search_sharded(sharded_index: BlockIndex, queries: jax.Array, mesh: Mesh,
+                   *, blocks_per_iter: int = 4, lb_filter: bool = True,
+                   deadline_blocks: int | None = None,
+                   schedule: str = "block_major") -> SearchResult:
+    """Exact global 1-NN over all shards. queries (Q, n) replicated.
+
+    ``schedule``: "block_major" (optimized batched schedule, the production
+    default — see search.py) or "query_major" (the paper-faithful
+    priority-queue order, kept as the measured baseline)."""
+    ax = _all_axes(mesh)
+    specs = index_pspecs(mesh, like=sharded_index)
+
+    def _search(local_index, q):
+        from repro.core import isax
+        from repro.core.search import search_block_major
+        qz = isax.znorm(q).astype(jnp.float32)
+        q_paa = isax.paa(qz, local_index.w)
+        # round 1: local approximate BSF -> global scalar all-reduce
+        bsf_l, _, _ = _approx_search(local_index, qz, q_paa)
+        bsf_g = jax.lax.pmin(bsf_l, ax)
+        # round 2: exact local search seeded with the global BSF
+        if schedule == "block_major":
+            res = search_block_major(local_index, q, lb_filter=lb_filter,
+                                     initial_bsf=bsf_g,
+                                     deadline_blocks=deadline_blocks)
+        else:
+            res = _block_search(local_index, q,
+                                blocks_per_iter=blocks_per_iter,
+                                lb_filter=lb_filter, initial_bsf=bsf_g,
+                                deadline_blocks=deadline_blocks)
+        # round 3: (dist, id) min-reduce; invalid local ids never win
+        dist_g = jax.lax.pmin(res.dist, ax)
+        big = jnp.int32(jnp.iinfo(jnp.int32).max)
+        cand = jnp.where((res.dist <= dist_g) & (res.idx >= 0), res.idx, big)
+        idx_g = jax.lax.pmin(cand, ax)
+        stats = SearchStats(
+            blocks_visited=jax.lax.psum(res.stats.blocks_visited, ax),
+            series_refined=jax.lax.psum(res.stats.series_refined, ax),
+            lb_series=jax.lax.psum(res.stats.lb_series, ax),
+            iters=jax.lax.pmax(res.stats.iters, ax),
+        )
+        return SearchResult(dist=dist_g, idx=idx_g, stats=stats)
+
+    out = SearchResult(
+        dist=P(None), idx=P(None),
+        stats=SearchStats(blocks_visited=P(None), series_refined=P(None),
+                          lb_series=P(None), iters=P()))
+    fn = jax.shard_map(_search, mesh=mesh, in_specs=(specs, P(None)),
+                       out_specs=out, check_vma=False)
+    return fn(sharded_index, queries)
+
+
+def search_sharded_scan(raw: jax.Array, queries: jax.Array, mesh: Mesh,
+                        *, chunk: int = 4096) -> SearchResult:
+    """Distributed UCR-Suite-p brute force (baseline + oracle), same protocol."""
+    from repro.core import ucr
+    ax = _all_axes(mesh)
+    n_series = raw.shape[0]
+    ids = jnp.arange(n_series, dtype=jnp.int32)
+
+    def _scan(local_raw, local_ids, q):
+        res = ucr.search_scan(local_raw, q, chunk=min(chunk, local_raw.shape[0]),
+                              ids=local_ids)
+        dist_g = jax.lax.pmin(res.dist, ax)
+        big = jnp.int32(jnp.iinfo(jnp.int32).max)
+        cand = jnp.where((res.dist <= dist_g) & (res.idx >= 0), res.idx, big)
+        idx_g = jax.lax.pmin(cand, ax)
+        return dist_g, idx_g
+
+    fn = jax.shard_map(_scan, mesh=mesh, in_specs=(P(ax), P(ax), P(None)),
+                       out_specs=(P(None), P(None)), check_vma=False)
+    dist, idx = fn(raw, ids, queries)
+    qn = queries.shape[0]
+    stats = SearchStats(
+        blocks_visited=jnp.zeros((qn,), jnp.int32),
+        series_refined=jnp.full((qn,), n_series, jnp.int32),
+        lb_series=jnp.zeros((qn,), jnp.int32),
+        iters=jnp.zeros((), jnp.int32))
+    return SearchResult(dist=dist, idx=idx, stats=stats)

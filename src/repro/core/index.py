@@ -1,0 +1,157 @@
+"""Block index construction — the TPU-native ParIS/MESSI index (DESIGN.md §4).
+
+The pointer-based iSAX tree of the paper becomes a two-level flat structure:
+
+  level 1: fixed-capacity *blocks* (= leaves), formed by sorting series by
+           their bit-interleaved iSAX word (the breadth-first tree order) and
+           cutting the sorted sequence every ``capacity`` series;
+  level 2: per-block *envelopes* (= leaf iSAX summaries): segment-wise
+           [min lo, max hi] over the member series' symbol regions.
+
+Because the envelope contains every member's region, the envelope MINDIST is
+<= every member's MINDIST <= the true distance: the no-false-dismissal
+guarantee of the iSAX tree carries over unchanged (property-tested).
+
+The raw series are physically permuted into block order so refinement reads
+contiguous HBM, and the per-series bounds are stored planar (w on sublanes,
+series on lanes) for the Pallas lower-bound kernel.
+
+Everything here is jit-compatible so the distributed builder can run it
+inside shard_map — that is the paper's "every worker builds its own subtrees
+independently, no synchronization" property, obtained by construction.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import isax
+from repro.kernels import ops
+
+RAW_PAD = 1.0e4   # pad-series point value: squared distance >> any real one
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["raw", "slo", "shi", "elo", "ehi", "ids"],
+    meta_fields=["n", "w", "card", "capacity", "n_real"],
+)
+@dataclasses.dataclass
+class BlockIndex:
+    """The in-memory index (one shard of it, in the distributed setting)."""
+    raw: jax.Array   # (B, C, n) f32   z-normed series, block order, padded
+    slo: jax.Array   # (B, w, C) f32   per-series region lower bounds
+    shi: jax.Array   # (B, w, C) f32   per-series region upper bounds
+    elo: jax.Array   # (w, B)  f32     block envelope lower bounds (planar)
+    ehi: jax.Array   # (w, B)  f32     block envelope upper bounds (planar)
+    ids: jax.Array   # (B, C) int32    original series ids (-1 = padding)
+    n: int           # series length
+    w: int
+    card: int
+    capacity: int
+    n_real: int      # number of non-padding series
+
+    @property
+    def n_blocks(self) -> int:
+        return self.raw.shape[0]
+
+
+@functools.partial(
+    jax.tree_util.register_dataclass,
+    data_fields=["raw", "lo", "hi", "ids"],
+    meta_fields=["n", "w", "card", "n_real"],
+)
+@dataclasses.dataclass
+class FlatIndex:
+    """ParIS view: the SAX-array scan needs no blocks, just planar bounds."""
+    raw: jax.Array   # (Np, n) f32
+    lo: jax.Array    # (w, Np) f32
+    hi: jax.Array    # (w, Np) f32
+    ids: jax.Array   # (Np,) int32
+    n: int
+    w: int
+    card: int
+    n_real: int
+
+
+def build(raw: jax.Array, *, w: int = isax.W, card: int = isax.CARD,
+          capacity: int = 512, normalize: bool = True,
+          ids: jax.Array | None = None) -> BlockIndex:
+    """Build the block index from raw series (N, n). Jit-compatible."""
+    n_series, n = raw.shape
+    if ids is None:
+        ids = jnp.arange(n_series, dtype=jnp.int32)
+
+    xn = isax.znorm(raw) if normalize else raw.astype(jnp.float32)
+    _, sax = ops.summarize(xn, w=w, card=card, normalize=False)
+    bounds = isax.bounds_from_sax(sax, card)                  # (N, w, 2)
+
+    order = isax.sort_order(sax, w)
+    return assemble_blocks(xn[order], bounds[order], ids[order],
+                           n=n, w=w, card=card, capacity=capacity)
+
+
+def assemble_blocks(xn: jax.Array, bounds: jax.Array, ids: jax.Array, *,
+                    n: int, w: int, card: int, capacity: int) -> BlockIndex:
+    """Cut iSAX-sorted series into fixed-capacity blocks (+ envelopes).
+
+    Inputs are already in sorted (tree) order; this is the IndexConstruction
+    stage shared by the one-shot and the incremental (ParIS+) builders.
+    """
+    n_series = xn.shape[0]
+    cap = min(capacity, n_series)
+    pad = (-n_series) % cap
+    if pad:
+        xn = jnp.concatenate(
+            [xn, jnp.full((pad, n), RAW_PAD, jnp.float32)], axis=0)
+        bounds = jnp.concatenate(
+            [bounds, jnp.full((pad, w, 2), isax.SENTINEL, jnp.float32)], axis=0)
+        ids = jnp.concatenate([ids, jnp.full((pad,), -1, jnp.int32)], axis=0)
+
+    b = xn.shape[0] // cap
+    raw_b = xn.reshape(b, cap, n)
+    bounds_b = bounds.reshape(b, cap, w, 2)
+    slo = jnp.transpose(bounds_b[..., 0], (0, 2, 1))          # (B, w, C)
+    shi = jnp.transpose(bounds_b[..., 1], (0, 2, 1))
+    # pad members are identified by id < 0, NOT by sentinel values: a REAL
+    # series in the top (or bottom) symbol region legitimately carries a
+    # +/-SENTINEL edge, and excluding it would shrink the envelope below a
+    # member's region — a false-dismissal bug (caught by the hypothesis
+    # envelope-containment property).
+    real = (ids.reshape(b, cap) >= 0)[:, None, :]             # (B, 1, C)
+    elo = jnp.min(jnp.where(real, slo, isax.SENTINEL), axis=2).T   # (w, B)
+    ehi = jnp.max(jnp.where(real, shi, -isax.SENTINEL), axis=2).T  # (w, B)
+    # blocks that are pure padding: sentinel envelope (never selected)
+    any_real = jnp.any(ids.reshape(b, cap) >= 0, axis=1)      # (B,)
+    elo = jnp.where(any_real[None, :], elo, isax.SENTINEL)
+    ehi = jnp.where(any_real[None, :], ehi, isax.SENTINEL)
+
+    return BlockIndex(raw=raw_b, slo=slo, shi=shi, elo=elo, ehi=ehi,
+                      ids=ids.reshape(b, cap), n=n, w=w, card=card,
+                      capacity=cap, n_real=n_series)
+
+
+def flat_view(index: BlockIndex) -> FlatIndex:
+    """Reinterpret the block index as a ParIS-style flat SAX array."""
+    b, c, n = index.raw.shape
+    w = index.w
+    lo = jnp.transpose(index.slo, (1, 0, 2)).reshape(w, b * c)
+    hi = jnp.transpose(index.shi, (1, 0, 2)).reshape(w, b * c)
+    return FlatIndex(raw=index.raw.reshape(b * c, n), lo=lo, hi=hi,
+                     ids=index.ids.reshape(b * c), n=index.n, w=w,
+                     card=index.card, n_real=index.n_real)
+
+
+def build_flat(raw: jax.Array, *, w: int = isax.W, card: int = isax.CARD,
+               normalize: bool = True) -> FlatIndex:
+    """Build only the ParIS flat SAX array (no sort, as in the paper)."""
+    n_series, n = raw.shape
+    xn = isax.znorm(raw) if normalize else raw.astype(jnp.float32)
+    _, sax = ops.summarize(xn, w=w, card=card, normalize=False)
+    bounds = isax.bounds_from_sax(sax, card)                  # (N, w, 2)
+    return FlatIndex(raw=xn, lo=bounds[..., 0].T, hi=bounds[..., 1].T,
+                     ids=jnp.arange(n_series, dtype=jnp.int32),
+                     n=n, w=w, card=card, n_real=n_series)

@@ -1,0 +1,113 @@
+"""ParIS/ParIS+-style query answering: flat SAX-array lower-bound scan.
+
+Paper mapping: "lower bound calculation workers compute the lower bound
+distances between the query and the iSAX summary of EACH data series in the
+dataset (stored in the SAX array), and prune ... the series that are not
+pruned are stored in a candidate list, which real distance calculation
+workers consume in parallel".
+
+TPU adaptation: the LB scan over the whole array is one Pallas kernel pass
+(the most SIMD-friendly phase of the paper — it is why ParIS exists).  The
+candidate list becomes a chunked lax.scan with a conditional refine per chunk
+(a chunk with no survivors is skipped wholesale), carrying the running BSF —
+the analogue of the workers' shared-BSF updates.  No ordering, no envelopes:
+the structural contrast with MESSI (search.py) is exactly the paper's.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import isax
+from repro.core.index import BlockIndex, FlatIndex, flat_view
+from repro.core.search import INF, SearchStats, SearchResult, approximate_search
+from repro.kernels import ops
+
+
+@functools.partial(jax.jit, static_argnames=("chunk",))
+def search_flat(index: FlatIndex, queries: jax.Array, *,
+                block_index: BlockIndex | None = None,
+                initial_bsf: jax.Array | None = None,
+                chunk: int = 4096) -> SearchResult:
+    """Exact 1-NN via the ParIS algorithm. queries (Q, n)."""
+    q = isax.znorm(queries).astype(jnp.float32)
+    q_paa = isax.paa(q, index.w)
+    npad, n = index.raw.shape
+    qn = q.shape[0]
+    c = min(chunk, npad)
+    pad = (-npad) % c
+
+    lo, hi, raw, ids = index.lo, index.hi, index.raw, index.ids
+    if pad:
+        lo = jnp.concatenate([lo, jnp.full((index.w, pad), isax.SENTINEL)], 1)
+        hi = jnp.concatenate([hi, jnp.full((index.w, pad), isax.SENTINEL)], 1)
+        raw = jnp.concatenate(
+            [raw, jnp.full((pad, n), 1.0e4, jnp.float32)], 0)
+        ids = jnp.concatenate([ids, jnp.full((pad,), -1, jnp.int32)], 0)
+
+    # Phase 1 — approximate BSF.  The paper seeds from the best leaf; we use
+    # the same stage-A routine as MESSI when a block index is available, else
+    # the first chunk's best real distance.
+    if initial_bsf is not None:
+        bsf = initial_bsf
+        best = jnp.full((qn,), -2, jnp.int32)
+    elif block_index is not None:
+        bsf, best, _ = approximate_search(block_index, q, q_paa)
+    else:
+        d0 = ops.batch_l2(q, raw[:c])
+        d0 = jnp.where(ids[None, :c] >= 0, d0, INF)
+        j = jnp.argmin(d0, axis=1)
+        bsf = jnp.take_along_axis(d0, j[:, None], 1)[:, 0]
+        best = ids[j]
+
+    # Phase 2 — the flat LB scan over the ENTIRE SAX array (one kernel pass).
+    lb = ops.lb_scan_planar(q_paa, lo, hi, n=n)               # (Q, Np+pad)
+
+    # Phase 3 — chunked candidate refinement with running BSF.
+    nchunks = raw.shape[0] // c
+    raw_c = raw.reshape(nchunks, c, n)
+    ids_c = ids.reshape(nchunks, c)
+    lb_c = lb.reshape(qn, nchunks, c)
+
+    def step(carry, inp):
+        bsf_i, best_i, refined = carry
+        raw_k, ids_k, lb_k = inp                              # (C,n),(C,),(Q,C)
+        act = (lb_k < bsf_i[:, None]) & (ids_k[None, :] >= 0)
+
+        def refine(cr):
+            bsf_j, best_j, refined_j = cr
+            d = ops.batch_l2(q, raw_k)                        # (Q, C)
+            d = jnp.where(act, d, INF)
+            j = jnp.argmin(d, axis=1)
+            dmin = jnp.take_along_axis(d, j[:, None], 1)[:, 0]
+            better = dmin < bsf_j
+            return (jnp.where(better, dmin, bsf_j),
+                    jnp.where(better, ids_k[j], best_j),
+                    refined_j + jnp.sum(act, axis=1, dtype=jnp.int32))
+
+        carry = jax.lax.cond(jnp.any(act), refine, lambda cr: cr,
+                             (bsf_i, best_i, refined))
+        return carry, None
+
+    (bsf, best, refined), _ = jax.lax.scan(
+        step, (bsf, best, jnp.zeros((qn,), jnp.int32)),
+        (raw_c, ids_c, jnp.moveaxis(lb_c, 1, 0)))
+
+    stats = SearchStats(
+        blocks_visited=jnp.full((qn,), nchunks, jnp.int32),
+        series_refined=refined,
+        lb_series=jnp.full((qn,), index.n_real, jnp.int32),   # whole array
+        iters=jnp.asarray(nchunks, jnp.int32),
+    )
+    return SearchResult(dist=jnp.sqrt(bsf), idx=best, stats=stats)
+
+
+def search_paris(index: BlockIndex, queries: jax.Array, *,
+                 chunk: int = 4096,
+                 initial_bsf: jax.Array | None = None) -> SearchResult:
+    """Convenience: run the ParIS algorithm against a BlockIndex's flat view."""
+    return search_flat(flat_view(index), queries, block_index=index,
+                       chunk=chunk, initial_bsf=initial_bsf)

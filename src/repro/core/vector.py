@@ -1,0 +1,47 @@
+"""Generic high-dimensional vector search — the paper's §V application
+("our techniques are applicable to high-dimensional vectors in general ...
+such as similarity search for deep learning embeddings").
+
+A d-dim embedding is treated as a 'series' of length d: PAA segments become
+contiguous dim groups. Z-normalization is OFF (embeddings are not shift/scale
+invariant); unit-normalization gives cosine search since
+||a - b||^2 = 2 - 2 cos(a, b) on the unit sphere.
+
+Used by examples/serve_with_index.py to serve k-NN over LM hidden states.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import index as index_lib
+from repro.core.index import BlockIndex
+from repro.core.search import SearchResult
+from repro.core.search import search as _search
+
+
+def _prep(v: jax.Array, unit_norm: bool) -> jax.Array:
+    v = v.astype(jnp.float32)
+    if unit_norm:
+        v = v / jnp.maximum(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-8)
+        # rescale so per-dim values are ~N(0,1)-sized: iSAX breakpoints are
+        # standard-normal quantiles and unit vectors (entries ~ 1/sqrt(d))
+        # would otherwise collapse into the central regions. A global scale
+        # preserves the NN ordering exactly.
+        v = v * jnp.sqrt(jnp.float32(v.shape[-1]))
+    return v
+
+
+def build_vector_index(embs: jax.Array, *, w: int = 16, card: int = 256,
+                       capacity: int = 512,
+                       unit_norm: bool = True) -> BlockIndex:
+    """embs (N, d) with d divisible by w."""
+    return index_lib.build(_prep(embs, unit_norm), w=w, card=card,
+                           capacity=capacity, normalize=False)
+
+
+def search_vectors(index: BlockIndex, queries: jax.Array, *,
+                   unit_norm: bool = True, **kw) -> SearchResult:
+    """Exact 1-NN over the vector index. queries (Q, d)."""
+    q = _prep(queries, unit_norm)
+    return _search(index, q, normalize_queries=False, **kw)

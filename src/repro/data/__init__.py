@@ -1,0 +1,8 @@
+from repro.data.generators import random_walk, sald_like, seismic_like, make_dataset
+from repro.data.loader import ChunkedLoader, IncrementalBuilder
+from repro.data.tokens import synthetic_token_batches
+
+__all__ = [
+    "random_walk", "sald_like", "seismic_like", "make_dataset",
+    "ChunkedLoader", "IncrementalBuilder", "synthetic_token_batches",
+]

@@ -1,0 +1,80 @@
+"""Pallas TPU kernel: fused z-norm + PAA + iSAX symbol quantization.
+
+This is Stage 1/2 of the paper's pipeline (IndexBulkLoading workers computing
+iSAX summarizations with SIMD) mapped onto the VPU: one grid step summarizes a
+tile of series resident in VMEM, producing PAA values and symbols in one pass
+over the raw data (the raw tile is read exactly once from HBM).
+
+Layout notes (TPU):
+  * the series tile is (TN, n): lane dimension = series points, 128-aligned
+    for typical n (128/256/...);
+  * breakpoints are passed as a (1, card) row (card=256 = two lanes rows),
+    broadcast-compared against PAA values; the trailing slot is a +SENTINEL
+    pad so a full 256-wide compare is safe for card-1=255 true breakpoints;
+  * quantization = sum(paa >= bp) — a reduction over the lane axis, no gather.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(x_ref, bp_ref, paa_ref, sax_ref, *, w: int, normalize: bool):
+    x = x_ref[...].astype(jnp.float32)          # (TN, n)
+    tn, n = x.shape
+    if normalize:
+        mu = jnp.mean(x, axis=-1, keepdims=True)
+        var = jnp.mean(x * x, axis=-1, keepdims=True) - mu * mu
+        x = (x - mu) / jnp.maximum(jnp.sqrt(jnp.maximum(var, 0.0)), 1e-8)
+    p = jnp.mean(x.reshape(tn, w, n // w), axis=-1)          # (TN, w)
+    bps = bp_ref[...]                                        # (1, card)
+    ge = p[:, :, None] >= bps[None, :, :]                    # (TN, w, card)
+    s = jnp.sum(ge.astype(jnp.int32), axis=-1)               # (TN, w)
+    paa_ref[...] = p
+    sax_ref[...] = s
+
+
+@functools.partial(jax.jit, static_argnames=("w", "card", "normalize", "tile_n", "interpret"))
+def isax_summarize(x: jax.Array, *, w: int = 16, card: int = 256,
+                   normalize: bool = True, tile_n: int = 256,
+                   interpret: bool = False) -> tuple[jax.Array, jax.Array]:
+    """(N, n) raw series -> (PAA (N, w) f32, symbols (N, w) int32).
+
+    N is padded to a tile multiple internally; callers receive unpadded
+    results.
+    """
+    from repro.core import isax as _isax
+
+    n_series, n = x.shape
+    tile = min(tile_n, max(8, n_series))
+    pad = (-n_series) % tile
+    if pad:
+        x = jnp.concatenate([x, jnp.zeros((pad, n), x.dtype)], axis=0)
+    npad = x.shape[0]
+
+    bps = jnp.asarray(_isax.breakpoints(card))               # (card-1,)
+    bps = jnp.concatenate([bps, jnp.full((1,), _isax.SENTINEL, jnp.float32)])
+    bps = bps.reshape(1, card)
+
+    grid = (npad // tile,)
+    paa_out, sax_out = pl.pallas_call(
+        functools.partial(_kernel, w=w, normalize=normalize),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile, n), lambda i: (i, 0)),
+            pl.BlockSpec((1, card), lambda i: (0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tile, w), lambda i: (i, 0)),
+            pl.BlockSpec((tile, w), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((npad, w), jnp.float32),
+            jax.ShapeDtypeStruct((npad, w), jnp.int32),
+        ],
+        interpret=interpret,
+    )(x, bps)
+    return paa_out[:n_series], sax_out[:n_series]

@@ -1,0 +1,77 @@
+"""Pallas TPU kernel: iSAX lower-bound scan (the ParIS hot loop).
+
+Computes squared MINDIST lower bounds between Q query PAAs and N stored
+region envelopes:  out[q, i] = (n/w) * sum_seg max(0, lo - q, q - hi)^2.
+
+This is the paper's SIMD "lower bound distance calculation" phase.  ParIS runs
+it over the *entire* SAX array; MESSI runs it over block envelopes and then
+only over surviving blocks' series.  Both call this kernel — the input is
+either per-series bounds or per-block envelopes.
+
+Layout notes (TPU):
+  * bounds are stored PLANAR-TRANSPOSED: lo, hi of shape (w, N) so the lane
+    axis is the (large, 128-aligned) series axis and w=16 sits on sublanes —
+    a (w, TN) f32 tile is 16x512x4 = 32 KiB, and the compare/max/square/
+    accumulate runs full-width on the VPU with zero gathers or transposes;
+  * queries live in a small (TQ, w) tile; the (TQ, w, TN) intermediate stays
+    in VREGs/VMEM (8x16x512x4 = 256 KiB at the default tile sizes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(q_ref, lo_ref, hi_ref, out_ref, *, scale: float):
+    q = q_ref[...]                    # (TQ, w)
+    lo = lo_ref[...]                  # (w, TN)
+    hi = hi_ref[...]                  # (w, TN)
+    qe = q[:, :, None]                # (TQ, w, 1)
+    d = jnp.maximum(jnp.maximum(lo[None] - qe, qe - hi[None]), 0.0)
+    out_ref[...] = scale * jnp.sum(d * d, axis=1)   # (TQ, TN)
+
+
+@functools.partial(jax.jit, static_argnames=("n", "tile_q", "tile_n", "interpret"))
+def lb_scan(q_paa: jax.Array, lo: jax.Array, hi: jax.Array, *, n: int,
+            tile_q: int = 8, tile_n: int = 512,
+            interpret: bool = False) -> jax.Array:
+    """q_paa (Q, w); lo, hi (w, N) planar bounds -> (Q, N) squared LBs.
+
+    ``n`` is the raw series length (for the n/w MINDIST scale factor).
+    Pads Q and N to tile multiples internally; pad rows of lo/hi must already
+    be +SENTINEL (the index builder guarantees this) so padded entries yield
+    huge LBs and are never selected.
+    """
+    q_count, w = q_paa.shape
+    n_items = lo.shape[1]
+    tq = min(tile_q, max(1, q_count))
+    tn = min(tile_n, max(128, n_items))
+
+    qpad = (-q_count) % tq
+    if qpad:
+        q_paa = jnp.concatenate([q_paa, jnp.zeros((qpad, w), q_paa.dtype)], axis=0)
+    npad = (-n_items) % tn
+    if npad:
+        from repro.core.isax import SENTINEL
+        pad_lo = jnp.full((w, npad), SENTINEL, lo.dtype)
+        pad_hi = jnp.full((w, npad), SENTINEL, hi.dtype)
+        lo = jnp.concatenate([lo, pad_lo], axis=1)
+        hi = jnp.concatenate([hi, pad_hi], axis=1)
+
+    grid = (q_paa.shape[0] // tq, lo.shape[1] // tn)
+    out = pl.pallas_call(
+        functools.partial(_kernel, scale=float(n) / float(w)),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tq, w), lambda i, j: (i, 0)),
+            pl.BlockSpec((w, tn), lambda i, j: (0, j)),
+            pl.BlockSpec((w, tn), lambda i, j: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((tq, tn), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((q_paa.shape[0], lo.shape[1]), jnp.float32),
+        interpret=interpret,
+    )(q_paa, lo, hi)
+    return out[:q_count, :n_items]

@@ -1,0 +1,80 @@
+"""Jitted dispatch layer over the Pallas kernels and their jnp oracles.
+
+All core/ code calls these wrappers, never the kernels directly.  Dispatch:
+
+  * mode="auto"      : compiled Pallas on TPU, jnp oracle elsewhere (XLA:CPU
+                       compiles the oracle well; interpret-mode Pallas is for
+                       correctness, not speed).
+  * mode="ref"       : always the pure-jnp oracle.
+  * mode="interpret" : Pallas kernels in interpret mode (CPU correctness runs;
+                       the tests also call kernels directly with sweeps).
+  * mode="pallas"    : compiled Pallas unconditionally (real TPU runs).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ref
+from repro.kernels.batch_l2 import batch_l2 as _batch_l2_kernel
+from repro.kernels.isax_summarize import isax_summarize as _summ_kernel
+from repro.kernels.lb_scan import lb_scan as _lb_kernel
+
+_MODE = "auto"
+_VALID = ("auto", "ref", "interpret", "pallas")
+
+
+def set_mode(mode: str) -> None:
+    global _MODE
+    if mode not in _VALID:
+        raise ValueError(f"mode must be one of {_VALID}")
+    _MODE = mode
+
+
+def get_mode() -> str:
+    return _MODE
+
+
+def _use_pallas() -> tuple[bool, bool]:
+    """-> (use_pallas_kernel, interpret_flag)."""
+    if _MODE == "ref":
+        return False, False
+    if _MODE == "interpret":
+        return True, True
+    if _MODE == "pallas":
+        return True, False
+    # auto
+    platform = jax.default_backend()
+    return (platform == "tpu"), False
+
+
+def summarize(x: jax.Array, *, w: int, card: int, normalize: bool = True
+              ) -> tuple[jax.Array, jax.Array]:
+    """(N, n) -> (paa (N, w), sax (N, w) int32)."""
+    use, interp = _use_pallas()
+    if use:
+        return _summ_kernel(x, w=w, card=card, normalize=normalize,
+                            interpret=interp)
+    from repro.core import isax
+    xx = isax.znorm(x) if normalize else x
+    return ref.paa_sax_ref(xx, w, card)
+
+
+def lb_scan_planar(q_paa: jax.Array, lo: jax.Array, hi: jax.Array, *, n: int
+                   ) -> jax.Array:
+    """q_paa (Q, w); lo/hi (w, N) -> (Q, N) squared lower bounds."""
+    use, interp = _use_pallas()
+    if use:
+        return _lb_kernel(q_paa, lo, hi, n=n, interpret=interp)
+    w = q_paa.shape[1]
+    qe = q_paa[:, :, None]
+    d = jnp.maximum(jnp.maximum(lo[None] - qe, qe - hi[None]), 0.0)
+    return (float(n) / float(w)) * jnp.sum(d * d, axis=1)
+
+
+def batch_l2(q: jax.Array, x: jax.Array) -> jax.Array:
+    """q (Q, n), x (N, n) -> (Q, N) squared distances."""
+    use, interp = _use_pallas()
+    if use:
+        return _batch_l2_kernel(q, x, interpret=interp)
+    return ref.batch_l2_ref(q, x)

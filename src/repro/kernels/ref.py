@@ -1,0 +1,68 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+These are the ground truth the kernels are validated against (interpret mode on
+CPU, shape/dtype sweeps in tests/test_kernels_*.py) and the fallback
+implementation on platforms without Pallas support.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import isax
+
+
+def paa_sax_ref(x: jax.Array, w: int, card: int) -> tuple[jax.Array, jax.Array]:
+    """(N, n) f32 -> PAA (N, w) f32, symbols (N, w) int32. Input already z-normed."""
+    p = isax.paa(x, w)
+    return p, isax.sax_from_paa(p, card)
+
+
+def lb_block_ref(q_paa: jax.Array, env: jax.Array, n: int) -> jax.Array:
+    """Block-envelope lower bounds. q_paa (Q, w), env (B, w, 2) -> (Q, B) f32 (squared)."""
+    return isax.mindist_paa_bounds_sq(q_paa[:, None, :], env[None], n)
+
+
+def lb_series_ref(q_paa: jax.Array, bounds: jax.Array, n: int) -> jax.Array:
+    """Per-series lower bounds. q_paa (Q, w), bounds (N, w, 2) -> (Q, N) f32 (squared)."""
+    return isax.mindist_paa_bounds_sq(q_paa[:, None, :], bounds[None], n)
+
+
+def batch_l2_ref(q: jax.Array, x: jax.Array) -> jax.Array:
+    """Squared Euclidean distances. q (Q, n), x (N, n) -> (Q, N) f32.
+
+    Uses the expanded form ||q||^2 + ||x||^2 - 2 q.x (MXU-friendly, matches the
+    kernel) with a clamp at zero for numerical safety.
+    """
+    q = q.astype(jnp.float32)
+    x = x.astype(jnp.float32)
+    qq = jnp.sum(q * q, axis=-1, keepdims=True)          # (Q, 1)
+    xx = jnp.sum(x * x, axis=-1)[None, :]                # (1, N)
+    cross = q @ x.T                                      # (Q, N) on the MXU
+    return jnp.maximum(qq + xx - 2.0 * cross, 0.0)
+
+
+def batch_l2_exact_ref(q: jax.Array, x: jax.Array) -> jax.Array:
+    """Direct-subtraction oracle (most accurate; O(Q*N*n) memory)."""
+    d = q[:, None, :] - x[None, :, :]
+    return jnp.sum(d * d, axis=-1)
+
+
+def ssm_scan_ref(xc, dt, bm, cm, a_log):
+    """Sequential oracle for kernels/ssm_scan.py (same math as
+    models/mamba's recurrence with b = dt * xc * B)."""
+    f32 = jnp.float32
+    xc, dt, bm, cm = (t.astype(f32) for t in (xc, dt, bm, cm))
+    a = jnp.exp(dt[..., None] * a_log.astype(f32)[None, None])   # (B,S,D,N)
+    b = (dt * xc)[..., None] * bm[:, :, None, :]
+
+    def step(h, inp):
+        at, bt, ct = inp
+        h = at * h + bt
+        return h, jnp.sum(h * ct[:, None, :], axis=-1)
+
+    bsz, s, d = xc.shape
+    h0 = jnp.zeros((bsz, d, bm.shape[-1]), f32)
+    _, y = jax.lax.scan(step, h0, (a.swapaxes(0, 1), b.swapaxes(0, 1),
+                                   cm.swapaxes(0, 1)))
+    return y.swapaxes(0, 1)

@@ -1,0 +1,90 @@
+"""Pallas TPU kernel: fused selective-SSM scan (Mamba/Hymba hot loop).
+
+The pure-JAX path (models/mamba.py) materializes the discretized
+coefficients a, b with shape (B, S, D, N) in HBM — N=16 times the size of
+the activations, which is why hymba's train_4k cell is memory-bound by ~50x
+(EXPERIMENTS.md §Roofline / §Perf it.3).  This kernel fuses discretization,
+recurrence and output contraction in VMEM:
+
+    read : xc (B,S,D), dt (B,S,D), Bm (B,S,N), Cm (B,S,N), A (D,N)
+    state: h (TD, N) in VREGs/VMEM, never leaves the chip
+    write: y (B,S,D)
+
+HBM traffic ~ (2 + 2N/D)x the activations instead of ~8Nx: a ~30x reduction
+for D=100, N=16.
+
+Layout: grid (B, D/TD); each program scans its (S, TD) stripe sequentially
+with a fori_loop, carrying h.  ``interpret=True`` validates against
+``ref.ssm_scan_ref`` (== models/mamba oracle) in tests/test_kernels.py.
+
+Scope note: forward only (inference prefill / scoring).  The training path
+needs a custom VJP (the standard trick: save h at chunk boundaries and
+recompute inside — same structure Mamba's CUDA kernel uses); scoped in
+DESIGN.md §7 as the next §Perf lever, not wired by default.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _kernel(xc_ref, dt_ref, bm_ref, cm_ref, a_ref, y_ref, *, n_state: int):
+    s_len, td = xc_ref.shape
+    a_log = a_ref[...]                                 # (TD, N)
+
+    def step(t, h):
+        xt = xc_ref[t, :]                              # (TD,)
+        dtt = dt_ref[t, :]                             # (TD,)
+        bt = bm_ref[t, :]                              # (N,)
+        ct = cm_ref[t, :]                              # (N,)
+        a = jnp.exp(dtt[:, None] * a_log)              # (TD, N)
+        b = (dtt * xt)[:, None] * bt[None, :]          # (TD, N)
+        h = a * h + b
+        y_ref[t, :] = jnp.sum(h * ct[None, :], axis=1)
+        return h
+
+    h0 = jnp.zeros((td, n_state), jnp.float32)
+    jax.lax.fori_loop(0, s_len, step, h0)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_d", "interpret"))
+def ssm_scan(xc: jax.Array, dt: jax.Array, bm: jax.Array, cm: jax.Array,
+             a_log: jax.Array, *, tile_d: int = 128,
+             interpret: bool = False) -> jax.Array:
+    """xc, dt (B, S, D); bm, cm (B, S, N); a_log (D, N) -> y (B, S, D) f32.
+
+    y_t = sum_n h_t[d, n] * cm_t[n],  h_t = exp(dt A) h_{t-1} + dt xc bm.
+    D is padded to a tile multiple internally.
+    """
+    b, s, d = xc.shape
+    n = bm.shape[-1]
+    td = min(tile_d, d)
+    pad = (-d) % td
+    f32 = jnp.float32
+    if pad:
+        zc = jnp.zeros((b, s, pad), xc.dtype)
+        xc = jnp.concatenate([xc, zc], axis=-1)
+        dt = jnp.concatenate([dt, jnp.zeros((b, s, pad), dt.dtype)], axis=-1)
+        a_log = jnp.concatenate([a_log, jnp.zeros((pad, n), a_log.dtype)])
+    dp = xc.shape[-1]
+
+    grid = (b, dp // td)
+    out = pl.pallas_call(
+        functools.partial(_kernel, n_state=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((None, s, td), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((None, s, td), lambda i, j: (i, 0, j)),
+            pl.BlockSpec((None, s, n), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((None, s, n), lambda i, j: (i, 0, 0)),
+            pl.BlockSpec((td, n), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, s, td), lambda i, j: (i, 0, j)),
+        out_shape=jax.ShapeDtypeStruct((b, s, dp), f32),
+        interpret=interpret,
+    )(xc.astype(f32), dt.astype(f32), bm.astype(f32), cm.astype(f32),
+      a_log.astype(f32))
+    return out[..., :d]

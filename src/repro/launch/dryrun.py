@@ -1,0 +1,118 @@
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production mesh and extract memory / cost / collective analysis.
+
+The two ``os.environ`` lines below MUST stay the first statements: jax locks
+the device count at first init, and the dry-run needs 512 placeholder CPU
+devices to build the (2, 16, 16) mesh.  Nothing else in the repo sets this
+flag (smoke tests and benches see the single real device).
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun                   # all cells
+    PYTHONPATH=src python -m repro.launch.dryrun --arch gemma3-27b \
+        --shape train_4k --multi-pod
+    PYTHONPATH=src python -m repro.launch.dryrun --out results.json
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+
+from repro.configs import get_config, list_archs
+from repro.launch import roofline as rl
+from repro.launch.mesh import make_production_mesh
+from repro.launch.specs import build_cell, runnable_shapes
+
+
+def run_cell(arch: str, shape: str, *, multi_pod: bool,
+             verbose: bool = True) -> dict:
+    """Lower + compile one cell; return its dry-run record."""
+    cfg = get_config(arch)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    t0 = time.time()
+    cell = build_cell(cfg, shape, mesh)
+    from jax.sharding import NamedSharding, PartitionSpec
+    in_sh = jax.tree.map(
+        lambda s: NamedSharding(mesh, s), cell.in_shardings,
+        is_leaf=lambda x: isinstance(x, PartitionSpec))
+    with mesh:
+        jitted = jax.jit(cell.fn, in_shardings=in_sh,
+                         donate_argnums=cell.donate)
+        lowered = jitted.lower(*cell.args)
+        t_lower = time.time() - t0
+        t0 = time.time()
+        compiled = lowered.compile()
+        t_compile = time.time() - t0
+
+    mem = compiled.memory_analysis()
+    n_chips = mesh.size
+    roof = rl.analyze(compiled, n_chips=n_chips,
+                      model_flops=rl.model_flops_for(cfg, shape))
+    rec = {
+        "arch": arch, "shape": shape, "kind": cell.kind,
+        "mesh": "x".join(str(s) for s in mesh.devices.shape),
+        "chips": n_chips,
+        "status": "ok",
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "bytes_per_device": {
+            "argument": getattr(mem, "argument_size_in_bytes", None),
+            "output": getattr(mem, "output_size_in_bytes", None),
+            "temp": getattr(mem, "temp_size_in_bytes", None),
+            "peak": getattr(mem, "peak_memory_in_bytes", None),
+        },
+        **roof.table_row(),
+    }
+    if verbose:
+        peak = rec["bytes_per_device"]["peak"]
+        print(f"[ok] {arch:24s} {shape:12s} mesh={rec['mesh']:9s} "
+              f"peak={0 if peak is None else peak / 2**30:.2f}GiB "
+              f"flops/dev={roof.flops:.3e} "
+              f"compute={roof.compute_s*1e3:.1f}ms "
+              f"memory={roof.memory_s*1e3:.1f}ms "
+              f"coll={roof.collective_s*1e3:.1f}ms "
+              f"-> {roof.bottleneck} useful={roof.useful_ratio:.2f}",
+              flush=True)
+    return rec
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None, help="one arch (default: all)")
+    ap.add_argument("--shape", default=None, help="one shape (default: all)")
+    ap.add_argument("--multi-pod", action="store_true",
+                    help="2x16x16 multi-pod mesh (default: 16x16 single pod)")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--out", default=None, help="append JSONL records here")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else list_archs()
+    records, failures = [], []
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+    for multi_pod in meshes:
+        for arch in archs:
+            cfg = get_config(arch)
+            shapes = [args.shape] if args.shape else runnable_shapes(cfg)
+            for shape in shapes:
+                try:
+                    rec = run_cell(arch, shape, multi_pod=multi_pod)
+                except Exception as e:                       # noqa: BLE001
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "2x16x16" if multi_pod else "16x16",
+                           "status": f"FAIL: {type(e).__name__}: {e}"}
+                    print(f"[FAIL] {arch} {shape} multi_pod={multi_pod}: "
+                          f"{e}\n{traceback.format_exc()}", flush=True)
+                    failures.append(rec)
+                records.append(rec)
+                if args.out:
+                    with open(args.out, "a") as f:
+                        f.write(json.dumps(rec) + "\n")
+    print(f"\n{len(records) - len(failures)}/{len(records)} cells passed")
+    return 1 if failures else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

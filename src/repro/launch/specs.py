@@ -1,0 +1,238 @@
+"""ShapeDtypeStruct stand-ins + PartitionSpecs for every (arch x shape) cell.
+
+``input_specs`` returns the abstract inputs each cell's step function is
+lowered with — weak-type-correct, shardable, zero allocation.  The sharding
+rules (DESIGN.md §6):
+
+  batch        -> data axes ("pod","data")
+  params       -> logical-axis resolver (model TP/EP; FSDP over data for the
+                  >=27B archs)
+  KV caches    -> batch over data; kv_heads (else head_dim) over model;
+                  long_500k (batch=1) full-attention caches shard the
+                  SEQUENCE over the data axes instead (flash-decode merge)
+  optimizer    -> mirrors params (factored dims dropped for adafactor)
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig, ShapeCell, SHAPES
+from repro.models import common, transformer
+from repro.train import optimizer as opt_lib
+from repro.train import step as step_lib
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def _dp(data_axes):
+    return data_axes if len(data_axes) > 1 else data_axes[0]
+
+
+def _divisible(n: int, mesh: Mesh, axis: str) -> bool:
+    return axis in mesh.axis_names and n % mesh.shape[axis] == 0
+
+
+# ---------------------------------------------------------------------------
+# Batch specs
+# ---------------------------------------------------------------------------
+
+
+def batch_specs(cfg: ModelConfig, cell: ShapeCell, *,
+                act_dtype=jnp.bfloat16) -> dict:
+    """Abstract train/prefill batch for one cell."""
+    b, s = cell.global_batch, cell.seq_len
+    if cfg.enc_dec:
+        return {"frames": _sds((b, s, cfg.d_model), act_dtype),
+                "dec_tokens": _sds((b, cfg.decoder_len), jnp.int32)}
+    if cfg.family == "vlm":
+        p = cfg.n_patches
+        return {"patches": _sds((b, p, cfg.d_model), act_dtype),
+                "tokens": _sds((b, s - p), jnp.int32)}
+    return {"tokens": _sds((b, s), jnp.int32)}
+
+
+def batch_pspecs(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+                 data_axes: tuple[str, ...]) -> dict:
+    dp = _dp(data_axes)
+    nd = math.prod(mesh.shape[a] for a in data_axes)
+    bp = dp if cell.global_batch % nd == 0 else None
+    if cfg.enc_dec:
+        return {"frames": P(bp, None, None), "dec_tokens": P(bp, None)}
+    if cfg.family == "vlm":
+        return {"patches": P(bp, None, None), "tokens": P(bp, None)}
+    return {"tokens": P(bp, None)}
+
+
+# ---------------------------------------------------------------------------
+# Param / optimizer specs
+# ---------------------------------------------------------------------------
+
+
+def param_shapes(cfg: ModelConfig):
+    dtype = jnp.bfloat16 if cfg.param_dtype == "bfloat16" else jnp.float32
+    return common.params_shape_tree(transformer.param_specs(cfg), dtype)
+
+
+def param_pspecs(cfg: ModelConfig, mesh: Mesh,
+                 data_axes: tuple[str, ...]):
+    specs = transformer.param_specs(cfg)
+    axes_t = common.axes_tree(specs)
+    shapes_t = param_shapes(cfg)
+    return common.resolve_pspecs(axes_t, shapes_t, mesh, fsdp=cfg.fsdp,
+                                 data_axes=data_axes)
+
+
+def opt_specs(cfg: ModelConfig, mesh: Mesh, data_axes: tuple[str, ...]):
+    pp = param_pspecs(cfg, mesh, data_axes)
+    shapes = param_shapes(cfg)
+    return (opt_lib.opt_state_shapes(cfg.optimizer, shapes),
+            opt_lib.opt_state_specs(cfg.optimizer, pp, shapes))
+
+
+# ---------------------------------------------------------------------------
+# Cache specs
+# ---------------------------------------------------------------------------
+
+
+def cache_shapes(cfg: ModelConfig, batch: int, max_len: int,
+                 dtype=jnp.bfloat16):
+    return jax.eval_shape(
+        lambda: transformer.init_cache(cfg, batch, max_len, dtype))
+
+
+def kv_shard_axes(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+                  data_axes: tuple[str, ...]) -> tuple | None:
+    """Axes over which full-attention decode caches shard their SEQUENCE.
+
+    long_500k (batch=1): the data axes (batch can't shard).  Other decode
+    cells where kv_heads doesn't divide the model axis: the MODEL axis —
+    head_dim-sharding makes GSPMD all-gather the whole cache every step
+    ("involuntary full rematerialization": 90 GB/step on command-r, 385
+    GB/step on nemotron), and full replication blows HBM (173 GiB/dev on
+    nemotron); seq-sharding + the shard_map flash-decode merge fixes both
+    (EXPERIMENTS.md §Perf iteration 2)."""
+    if cell.kind != "decode":
+        return None
+    nd = math.prod(mesh.shape[a] for a in data_axes)
+    if cell.global_batch % nd != 0:
+        return data_axes                      # long_500k
+    if cfg.enc_dec or cfg.family == "ssm":
+        return None
+    if not _divisible(cfg.n_kv_heads, mesh, "model") \
+            and cell.seq_len % mesh.shape["model"] == 0:
+        return ("model",)
+    return None
+
+
+def cache_pspecs(cfg: ModelConfig, cell: ShapeCell, mesh: Mesh,
+                 data_axes: tuple[str, ...], *,
+                 kv_shard: tuple | None = None):
+    """PartitionSpec tree matching init_cache's structure."""
+    dp = _dp(data_axes)
+    nd = math.prod(mesh.shape[a] for a in data_axes)
+    bp = dp if cell.global_batch % nd == 0 else None
+    mdl = "model"
+
+    def kv_spec(kvh: int, hd: int, full_attn: bool) -> P:
+        # (run, B, S, KVH, hd); see kv_shard_axes for the sharding story.
+        h_ax = mdl if _divisible(kvh, mesh, mdl) else None
+        if kv_shard and full_attn:
+            s_ax = kv_shard if len(kv_shard) > 1 else kv_shard[0]
+            if "model" in kv_shard:
+                return P(None, bp, s_ax, None, None)
+            return P(None, None, s_ax, h_ax, None)
+        return P(None, bp, None, h_ax, None)
+
+    if cfg.enc_dec:
+        sp = kv_spec(cfg.n_kv_heads, cfg.head_dim, False)
+        return [dict(k=sp, v=sp, xk=sp, xv=sp)]
+    if cfg.family == "ssm":
+        h = cfg.d_model // cfg.rwkv_head_dim
+        h_ax = mdl if _divisible(h, mesh, mdl) else None
+        return [dict(s=P(None, bp, h_ax, None, None),
+                     x_tm=P(None, bp, None), x_cm=P(None, bp, None))]
+    out = []
+    for seg in transformer.segments(cfg):
+        full = seg.kind == "full"
+        c = dict(k=kv_spec(cfg.n_kv_heads, cfg.head_dim, full),
+                 v=kv_spec(cfg.n_kv_heads, cfg.head_dim, full))
+        if cfg.family == "hybrid":
+            d_ax = mdl if _divisible(cfg.q_dim, mesh, mdl) else None
+            c.update(m_h=P(None, bp, d_ax, None),
+                     m_conv=P(None, bp, None, d_ax))
+        out.append(c)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Cell assembly: everything dryrun needs to lower one (arch x shape x mesh)
+# ---------------------------------------------------------------------------
+
+
+class Cell(NamedTuple):
+    arch: str
+    shape: str
+    kind: str                       # train | prefill | decode
+    fn: Callable                    # the step function to lower
+    args: tuple                     # abstract args
+    in_shardings: tuple
+    donate: tuple[int, ...] = ()
+
+
+def build_cell(cfg: ModelConfig, shape_name: str, mesh: Mesh,
+               *, act_dtype=jnp.bfloat16) -> Cell:
+    cell = SHAPES[shape_name]
+    from repro.launch.mesh import data_axes_of
+    data_axes = data_axes_of(mesh)
+    dp = _dp(data_axes)
+
+    p_shapes = param_shapes(cfg)
+    p_specs = param_pspecs(cfg, mesh, data_axes)
+
+    if cell.kind == "train":
+        o_shapes, o_specs = opt_specs(cfg, mesh, data_axes)
+        b_shapes = batch_specs(cfg, cell, act_dtype=act_dtype)
+        b_specs = batch_pspecs(cfg, cell, mesh, data_axes)
+        fn = step_lib.make_train_step(cfg, mesh=mesh, data_axes=data_axes)
+        return Cell(cfg.name, shape_name, "train", fn,
+                    (p_shapes, o_shapes, b_shapes),
+                    (p_specs, o_specs, b_specs), donate=(0, 1))
+
+    if cell.kind == "prefill":
+        b_shapes = batch_specs(cfg, cell, act_dtype=act_dtype)
+        b_specs = batch_pspecs(cfg, cell, mesh, data_axes)
+        c_shapes = cache_shapes(cfg, cell.global_batch, cell.seq_len)
+        c_specs = cache_pspecs(cfg, cell, mesh, data_axes)
+        fn = step_lib.make_prefill_step(cfg, mesh=mesh, data_axes=data_axes)
+        return Cell(cfg.name, shape_name, "prefill", fn,
+                    (p_shapes, b_shapes, c_shapes),
+                    (p_specs, b_specs, c_specs), donate=(2,))
+
+    # decode: one new token against a cache of seq_len
+    nd = math.prod(mesh.shape[a] for a in data_axes)
+    b = cell.global_batch
+    kvs = kv_shard_axes(cfg, cell, mesh, data_axes)
+    c_shapes = cache_shapes(cfg, b, cell.seq_len)
+    tok = _sds((b, 1), jnp.int32)
+    pos = _sds((), jnp.int32)
+    c_specs = cache_pspecs(cfg, cell, mesh, data_axes, kv_shard=kvs)
+    bp = dp if b % nd == 0 else None
+    fn = step_lib.make_serve_step(cfg, mesh=mesh, data_axes=data_axes,
+                                  kv_shard=kvs)
+    return Cell(cfg.name, shape_name, "decode", fn,
+                (p_shapes, tok, pos, c_shapes),
+                (p_specs, P(bp, None), P(), c_specs), donate=(3,))
+
+
+def runnable_shapes(cfg: ModelConfig) -> list[str]:
+    """The cells this arch runs (long_500k only for sub-quadratic; no decode
+    cells for encoder-only archs — all 10 assigned archs decode)."""
+    return [s for s in SHAPES if cfg.runs_shape(s)]

@@ -1,0 +1,144 @@
+"""Training driver: any assigned arch, any mesh, synthetic or file data.
+
+Fault tolerance wired in (DESIGN.md §5): resume-from-latest-checkpoint,
+SIGTERM -> synchronous final checkpoint, NaN-step skipping (inside the jitted
+step), keep-last-k checkpoints.
+
+    PYTHONPATH=src python -m repro.launch.train --arch h2o-danube-1.8b \
+        --smoke --steps 200 --batch 8 --seq 256 --ckpt-dir /tmp/run1
+
+Multi-device runs shard the batch over the data axes of ``--mesh dxm``
+(e.g. ``--mesh 4x2`` under XLA_FLAGS=--xla_force_host_platform_device_count=8).
+"""
+from __future__ import annotations
+
+import argparse
+import signal
+import sys
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs import get_config
+from repro.data.tokens import synthetic_token_batches
+from repro.launch.mesh import data_axes_of, make_mesh
+from repro.models import common, transformer
+from repro.train import Checkpointer, make_train_step
+from repro.train.optimizer import opt_init
+
+
+def make_batch_fn(cfg, batch: int, seq: int, seed: int = 0):
+    gen = synthetic_token_batches(batch=batch, seq_len=seq, vocab=cfg.vocab,
+                                  seed=seed)
+    rng = np.random.default_rng(seed + 1)
+
+    def next_batch(step: int):
+        tokens = jnp.asarray(next(gen)["tokens"])
+        if cfg.enc_dec:
+            return {"frames": jnp.asarray(
+                        rng.standard_normal((batch, seq, cfg.d_model))
+                        .astype(np.float32) * 0.1),
+                    "dec_tokens": tokens[:, :cfg.decoder_len]}
+        if cfg.family == "vlm":
+            p = min(cfg.n_patches, seq // 2)
+            return {"patches": jnp.asarray(
+                        rng.standard_normal((batch, p, cfg.d_model))
+                        .astype(np.float32) * 0.1),
+                    "tokens": tokens[:, :seq - p]}
+        return {"tokens": tokens}
+
+    return next_batch
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (CPU-trainable)")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--mesh", default=None, help="e.g. 4x2 (data x model)")
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--log-every", type=int, default=10)
+    args = ap.parse_args(argv)
+
+    cfg = get_config(args.arch, smoke=args.smoke)
+    key = jax.random.PRNGKey(args.seed)
+
+    mesh = None
+    data_axes: tuple[str, ...] = ()
+    if args.mesh:
+        shape = tuple(int(x) for x in args.mesh.split("x"))
+        axes = ("data", "model")[:len(shape)] if len(shape) <= 2 \
+            else ("pod", "data", "model")
+        mesh = make_mesh(shape, axes)
+        data_axes = data_axes_of(mesh)
+
+    params = common.build_params(transformer.param_specs(cfg), key)
+    opt_state = opt_init(cfg.optimizer, params)
+    step_fn = make_train_step(cfg, mesh=mesh, data_axes=data_axes,
+                              base_lr=args.lr, total_steps=args.steps,
+                              warmup=min(100, args.steps // 10 + 1),
+                              microbatch=1 if args.smoke else None)
+    if mesh is not None:
+        from jax.sharding import NamedSharding, PartitionSpec as P
+        from repro.launch.specs import param_pspecs
+        pspec = param_pspecs(cfg, mesh, data_axes)
+        params = jax.device_put(params, jax.tree.map(
+            lambda s: NamedSharding(mesh, s), pspec,
+            is_leaf=lambda x: isinstance(x, P)))
+    step_fn = jax.jit(step_fn, donate_argnums=(0, 1))
+
+    start_step = 0
+    ckpt = None
+    if args.ckpt_dir:
+        ckpt = Checkpointer(args.ckpt_dir, keep=3)
+        latest = ckpt.latest_step()
+        if latest is not None:
+            tree = ckpt.restore({"params": params, "opt": opt_state,
+                                 "meta": {"step": 0}})
+            params, opt_state = tree["params"], tree["opt"]
+            start_step = int(tree["meta"]["step"]) + 1
+            print(f"[resume] from step {latest} -> starting at {start_step}")
+
+    stop = {"now": False}
+
+    def on_sigterm(signum, frame):
+        print("[sigterm] checkpointing and exiting...", flush=True)
+        stop["now"] = True
+
+    signal.signal(signal.SIGTERM, on_sigterm)
+    signal.signal(signal.SIGINT, on_sigterm)
+
+    next_batch = make_batch_fn(cfg, args.batch, args.seq, args.seed)
+    t0 = time.time()
+    for step in range(start_step, args.steps):
+        params, opt_state, metrics = step_fn(params, opt_state,
+                                             next_batch(step))
+        if step % args.log_every == 0 or step == args.steps - 1:
+            m = {k: float(v) for k, v in metrics.items()
+                 if jnp.ndim(v) == 0}
+            dt = time.time() - t0
+            print(f"step {step:5d} loss {m['loss']:.4f} "
+                  f"lr {m['lr']:.2e} gnorm {m['grad_norm']:.2f} "
+                  f"skipped {int(m['skipped'])} ({dt:.1f}s)", flush=True)
+        if ckpt and (step % args.ckpt_every == 0 or stop["now"]
+                     or step == args.steps - 1):
+            ckpt.save(step, {"params": params, "opt": opt_state,
+                             "meta": {"step": step}})
+        if stop["now"]:
+            break
+    if ckpt:
+        ckpt.wait()
+    print("done.")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

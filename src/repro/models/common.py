@@ -1,0 +1,171 @@
+"""Shared model machinery: parameter trees with logical sharding axes,
+norms, RoPE, activations, and the logical→mesh PartitionSpec resolver.
+
+Params are plain nested dicts of arrays.  Each leaf's *logical axes* (one
+name per dim, e.g. ``("layers", "embed", "q_heads", "head_dim")``) are
+recorded in a parallel tree at init time; ``resolve_pspecs`` turns them into
+``PartitionSpec``s for a given mesh with divisibility-checked fallbacks —
+e.g. GQA KV heads (8) on a 16-way model axis fall through to the fused
+``kv×head_dim`` dim.  This is the logical-axis-rules pattern of MaxText /
+Flax partitioning, self-contained.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import Mesh, PartitionSpec as P
+
+# ---------------------------------------------------------------------------
+# Param spec construction
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"          # normal | zeros | ones | value
+    scale: float = 1.0
+    value: float = 0.0
+    dtype: Any = jnp.float32
+
+    def make(self, key: jax.Array) -> jax.Array:
+        if self.init == "zeros":
+            return jnp.zeros(self.shape, self.dtype)
+        if self.init == "ones":
+            return jnp.ones(self.shape, self.dtype)
+        if self.init == "value":
+            return jnp.full(self.shape, self.value, self.dtype)
+        fan_in = self.shape[-2] if len(self.shape) >= 2 else self.shape[-1]
+        std = self.scale / np.sqrt(max(fan_in, 1))
+        return (std * jax.random.normal(key, self.shape)).astype(self.dtype)
+
+
+def build_params(specs: dict, key: jax.Array, dtype=jnp.float32):
+    """Instantiate a nested dict of ParamSpec into arrays (split keys)."""
+    leaves, treedef = jax.tree.flatten(
+        specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+    keys = jax.random.split(key, len(leaves))
+    vals = []
+    for k, spec in zip(keys, leaves):
+        arr = spec.make(k)
+        if spec.init == "normal":
+            arr = arr.astype(dtype)
+        vals.append(arr)
+    return jax.tree.unflatten(treedef, vals)
+
+
+def params_shape_tree(specs: dict, dtype=jnp.float32):
+    """ShapeDtypeStruct tree (no allocation) — the dry-run path."""
+    def f(s: ParamSpec):
+        dt = dtype if s.init == "normal" else s.dtype
+        return jax.ShapeDtypeStruct(s.shape, dt)
+    return jax.tree.map(f, specs, is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+def axes_tree(specs: dict):
+    return jax.tree.map(lambda s: s.axes, specs,
+                        is_leaf=lambda x: isinstance(x, ParamSpec))
+
+
+# ---------------------------------------------------------------------------
+# Logical axis -> mesh axis resolution
+# ---------------------------------------------------------------------------
+
+# mesh-axis placement preferences per logical axis, tried in order; a
+# placement is taken only if the dim size divides the mesh axis size.
+MODEL_AXIS_PRIORITY = ("experts", "vocab", "ff", "q_heads", "kv_fused",
+                       "kv_heads", "d_inner", "heads_x_dim", "embed_out")
+FSDP_AXIS_PRIORITY = ("embed", "ff_in", "frames")
+
+
+def _place(dims: tuple[str | None, ...], shape: tuple[int, ...],
+           priority: tuple[str, ...], mesh_size: int,
+           taken: set[int]) -> int | None:
+    for want in priority:
+        for i, name in enumerate(dims):
+            if name == want and i not in taken and shape[i] % mesh_size == 0:
+                return i
+    return None
+
+
+def resolve_pspec(axes: tuple[str | None, ...], shape: tuple[int, ...],
+                  mesh: Mesh, *, fsdp: bool, data_axes: tuple[str, ...],
+                  model_axis: str = "model") -> P:
+    """One leaf's PartitionSpec from its logical axes under divisibility."""
+    entries: list[Any] = [None] * len(axes)
+    taken: set[int] = set()
+    msize = int(np.prod([mesh.shape[a] for a in (model_axis,)])) \
+        if model_axis in mesh.axis_names else 1
+    if msize > 1:
+        i = _place(axes, shape, MODEL_AXIS_PRIORITY, msize, taken)
+        if i is not None:
+            entries[i] = model_axis
+            taken.add(i)
+    if fsdp and data_axes:
+        dsize = int(np.prod([mesh.shape[a] for a in data_axes]))
+        i = _place(axes, shape, FSDP_AXIS_PRIORITY, dsize, taken)
+        if i is not None:
+            entries[i] = data_axes if len(data_axes) > 1 else data_axes[0]
+            taken.add(i)
+    return P(*entries)
+
+
+def resolve_pspecs(axes_t, shapes_t, mesh: Mesh, *, fsdp: bool,
+                   data_axes: tuple[str, ...]) -> Any:
+    """PartitionSpec tree for a whole param tree."""
+    flat_axes, treedef = jax.tree.flatten(
+        axes_t, is_leaf=lambda x: isinstance(x, tuple) and
+        all(isinstance(e, (str, type(None))) for e in x))
+    flat_shapes = treedef.flatten_up_to(shapes_t)
+    out = [resolve_pspec(a, tuple(s.shape), mesh, fsdp=fsdp,
+                         data_axes=data_axes)
+           for a, s in zip(flat_axes, flat_shapes)]
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# Numerics
+# ---------------------------------------------------------------------------
+
+
+def rmsnorm(x: jax.Array, gamma: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + gamma.astype(jnp.float32))).astype(dt)
+
+
+def activation(kind: str) -> Callable[[jax.Array], jax.Array]:
+    if kind == "silu":
+        return jax.nn.silu
+    if kind == "gelu":
+        return jax.nn.gelu
+    if kind == "squared_relu":
+        return lambda x: jnp.square(jax.nn.relu(x))
+    raise ValueError(kind)
+
+
+def rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """Rotary embedding. x (..., S, H, hd); positions (..., S) int32."""
+    hd = x.shape[-1]
+    half = hd // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = positions.astype(jnp.float32)[..., None, None] * freqs
+    # (..., S, 1, half) — broadcasts over the heads dim
+    cos, sin = jnp.cos(ang), jnp.sin(ang)
+    x1, x2 = x[..., :half], x[..., half:]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1).astype(dt)
+
+
+def softcap(logits: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return logits
+    return cap * jnp.tanh(logits / cap)

@@ -1,0 +1,155 @@
+"""Mamba-style selective SSM head (the SSM half of Hymba's hybrid layers).
+
+Recurrence (per channel c, state dim N):
+    h_t = a_t * h_{t-1} + b_t,   a_t = exp(dt_t * A_c),  b_t = dt_t * B_t * x_t
+    y_t = <C_t, h_t> + D_c * x_c
+
+Training/prefill uses a chunked ``lax.scan`` carrying the inter-chunk state
+with a ``lax.associative_scan`` inside each chunk (the standard way to get a
+parallel linear recurrence in JAX; work O(S log C), depth O(S/C · log C)).
+Decode is the one-step recurrence plus a depthwise-conv ring buffer.
+
+``mamba_naive`` is the sequential oracle the chunked form is property-tested
+against.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+class MambaState(NamedTuple):
+    h: jax.Array          # (B, d_inner, N) ssm state
+    conv: jax.Array       # (B, K-1, d_inner) depthwise conv history
+
+
+def param_specs(cfg, d_inner: int) -> dict:
+    """One stacked Mamba head bank. Logical axes shard d_inner over model."""
+    L, d, n, k = cfg.n_layers, cfg.d_model, cfg.ssm_state, cfg.ssm_conv
+    S = common.ParamSpec
+    return {
+        "w_in": S((L, d, 2 * d_inner), ("layers", "embed", "d_inner")),
+        "conv": S((L, k, d_inner), ("layers", None, "d_inner"), scale=0.5),
+        "w_dt": S((L, d_inner, 1), ("layers", "d_inner", None), scale=0.5),
+        "dt_bias": S((L, d_inner), ("layers", "d_inner"), init="zeros"),
+        "w_b": S((L, d_inner, n), ("layers", "d_inner", None), scale=0.5),
+        "w_c": S((L, d_inner, n), ("layers", "d_inner", None), scale=0.5),
+        "a_log": S((L, d_inner, n), ("layers", "d_inner", None),
+                   init="value", value=0.0),
+        "d_skip": S((L, d_inner), ("layers", "d_inner"), init="ones"),
+        "w_out": S((L, d_inner, d), ("layers", "d_inner", "embed_out")),
+    }
+
+
+def _conv_causal(x: jax.Array, kernel: jax.Array,
+                 history: jax.Array | None = None) -> jax.Array:
+    """Depthwise causal conv. x (B, S, D); kernel (K, D); history (B, K-1, D)."""
+    k = kernel.shape[0]
+    if history is None:
+        history = jnp.zeros((x.shape[0], k - 1, x.shape[2]), x.dtype)
+    xp = jnp.concatenate([history, x], axis=1)                  # (B, S+K-1, D)
+    out = sum(xp[:, i:i + x.shape[1], :] * kernel[i][None, None, :]
+              for i in range(k))
+    return out
+
+
+def _ssm_coeffs(xc: jax.Array, p: dict):
+    """xc (B, S, D) conv output -> (a, b, c_t) for the linear recurrence."""
+    dt = jax.nn.softplus(xc * p["w_dt"][..., 0] + p["dt_bias"])    # (B,S,D)
+    a_mat = -jnp.exp(p["a_log"].astype(jnp.float32))               # (D, N)
+    bt = jnp.einsum("bsd,dn->bsn", xc, p["w_b"])                   # (B,S,N)
+    ct = jnp.einsum("bsd,dn->bsn", xc, p["w_c"])                   # (B,S,N)
+    a = jnp.exp(dt[..., None] * a_mat[None, None])                 # (B,S,D,N)
+    b = (dt * xc)[..., None] * bt[:, :, None, :]                   # (B,S,D,N)
+    return a.astype(jnp.float32), b.astype(jnp.float32), ct
+
+
+def _chunk_scan(a, b, h0):
+    """Linear recurrence h_t = a_t h_{t-1} + b_t over axis 1, init h0.
+
+    a, b (B, C, D, N); h0 (B, D, N). Returns (h (B, C, D, N), h_last)."""
+    # fold h0 into the first step, then associative scan
+    b = b.at[:, 0].add(a[:, 0] * h0)
+    op = lambda p, q: (q[0] * p[0], q[0] * p[1] + q[1])
+    _, h = jax.lax.associative_scan(op, (a, b), axis=1)
+    return h, h[:, -1]
+
+
+def mamba_mix(x: jax.Array, p: dict, *, d_inner: int, chunk: int = 256,
+              state: MambaState | None = None
+              ) -> tuple[jax.Array, MambaState]:
+    """Full Mamba mixer. x (B, S, d_model) -> (B, S, d_model), final state."""
+    b, s, _ = x.shape
+    k = p["conv"].shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    xi, z = xz[..., :d_inner], xz[..., d_inner:]
+    hist = (state.conv if state is not None
+            else jnp.zeros((b, k - 1, d_inner), x.dtype))
+    xc = jax.nn.silu(_conv_causal(xi, p["conv"], hist))
+    a, bb, ct = _ssm_coeffs(xc, p)
+
+    h0 = (state.h if state is not None
+          else jnp.zeros((b, d_inner, p["w_b"].shape[1]), jnp.float32))
+    c = min(chunk, s)
+    if s % c:
+        c = s                                       # odd lengths: one chunk
+    nc = s // c
+
+    def step(h, inp):
+        ac, bc = inp                                # (B, C, D, N)
+        hs, hl = _chunk_scan(ac, bc, h)
+        return hl, hs
+
+    a_c = a.reshape(b, nc, c, d_inner, -1).swapaxes(0, 1)
+    b_c = bb.reshape(b, nc, c, d_inner, -1).swapaxes(0, 1)
+    h_last, hs = jax.lax.scan(step, h0, (a_c, b_c))
+    h_all = hs.swapaxes(0, 1).reshape(b, s, d_inner, -1)        # (B,S,D,N)
+
+    y = jnp.einsum("bsdn,bsn->bsd", h_all, ct.astype(jnp.float32))
+    y = y + p["d_skip"] * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+
+    tail = jnp.concatenate([hist, xi], axis=1)[:, -(k - 1):]
+    return out, MambaState(h=h_last, conv=tail)
+
+
+def mamba_naive(x: jax.Array, p: dict, *, d_inner: int,
+                state: MambaState | None = None
+                ) -> tuple[jax.Array, MambaState]:
+    """Sequential oracle: same math, plain per-step scan."""
+    b, s, _ = x.shape
+    k = p["conv"].shape[0]
+    xz = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    xi, z = xz[..., :d_inner], xz[..., d_inner:]
+    hist = (state.conv if state is not None
+            else jnp.zeros((b, k - 1, d_inner), x.dtype))
+    xc = jax.nn.silu(_conv_causal(xi, p["conv"], hist))
+    a, bb, ct = _ssm_coeffs(xc, p)
+    h0 = (state.h if state is not None
+          else jnp.zeros((b, d_inner, p["w_b"].shape[1]), jnp.float32))
+
+    def step(h, inp):
+        at, bt = inp
+        h = at * h + bt
+        return h, h
+
+    h_last, hs = jax.lax.scan(step, h0,
+                              (a.swapaxes(0, 1), bb.swapaxes(0, 1)))
+    h_all = hs.swapaxes(0, 1)
+    y = jnp.einsum("bsdn,bsn->bsd", h_all, ct.astype(jnp.float32))
+    y = y + p["d_skip"] * xc.astype(jnp.float32)
+    y = (y * jax.nn.silu(z.astype(jnp.float32))).astype(x.dtype)
+    out = jnp.einsum("bse,ed->bsd", y, p["w_out"])
+    tail = jnp.concatenate([hist, xi], axis=1)[:, -(k - 1):]
+    return out, MambaState(h=h_last, conv=tail)
+
+
+def init_state(batch: int, d_inner: int, n_state: int, k_conv: int,
+               dtype=jnp.bfloat16) -> MambaState:
+    return MambaState(h=jnp.zeros((batch, d_inner, n_state), jnp.float32),
+                      conv=jnp.zeros((batch, k_conv - 1, d_inner), dtype))

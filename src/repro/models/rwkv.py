@@ -1,0 +1,204 @@
+"""RWKV6 "Finch": attention-free time mixing with data-dependent decay.
+
+Per head (key/value dims n = head_dim), the recurrence is
+
+    S_t   = diag(w_t) S_{t-1} + k_t^T v_t            (state n x n)
+    out_t = r_t ( S_{t-1} + diag(u) k_t^T v_t )
+
+with w_t = exp(-exp(ww_t)) in (0,1) produced from the token itself (the
+data-dependent decay that distinguishes Finch from RWKV5), and u the
+current-token bonus.
+
+Training/prefill uses the chunked closed form: with L = inclusive cumsum of
+log w inside a chunk and Lx its exclusive version, for j < t
+
+    score[t, j] = sum_n r_t[n] k_j[n] exp(Lx_t[n] - L_j[n])     (<= 0 exponent)
+    cross_t     = (r_t * exp(Lx_t)) @ S_0
+    S_end       = diag(exp(L_end)) S_0 + sum_j diag(exp(L_end - L_j)) k_j^T v_j
+
+All exponents are differences with later-minus-earlier cumsums of negative
+logs, hence <= 0: the chunk math cannot overflow (the factored-matmul form
+exp(Lx_t)·exp(-L_j) can, which is why the (C, C, n) einsum is used; chunks
+are small).  ``rwkv_naive`` is the sequential oracle for the property tests.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import common
+
+
+class RwkvState(NamedTuple):
+    s: jax.Array        # (B, H, n, n) wkv state (f32)
+    x_tm: jax.Array     # (B, d) last token seen by time mix
+    x_cm: jax.Array     # (B, d) last token seen by channel mix
+
+
+LORA = 64   # decay LoRA rank (rwkv6 uses 64 for 7B)
+
+
+def param_specs(cfg) -> dict:
+    L, d, f = cfg.n_layers, cfg.d_model, cfg.d_ff
+    n = cfg.rwkv_head_dim
+    h = d // n
+    S = common.ParamSpec
+    return {
+        # time mix
+        "mix": S((L, 5, d), ("layers", None, "embed"), init="value", value=0.5),
+        "w_r": S((L, d, d), ("layers", "embed", "heads_x_dim")),
+        "w_k": S((L, d, d), ("layers", "embed", "heads_x_dim")),
+        "w_v": S((L, d, d), ("layers", "embed", "heads_x_dim")),
+        "w_g": S((L, d, d), ("layers", "embed", "heads_x_dim")),
+        "w_o": S((L, d, d), ("layers", "heads_x_dim", "embed_out")),
+        "decay_base": S((L, d), ("layers", "embed"), init="value", value=-5.0),
+        "decay_a": S((L, d, LORA), ("layers", "embed", None), scale=0.1),
+        "decay_b": S((L, LORA, d), ("layers", None, "embed"), scale=0.1),
+        "bonus_u": S((L, h, n), ("layers", "kv_heads", None), init="zeros"),
+        "ln_x": S((L, d), ("layers", "embed"), init="zeros"),
+        # channel mix
+        "mix_c": S((L, 2, d), ("layers", None, "embed"), init="value",
+                   value=0.5),
+        "w_ck": S((L, d, f), ("layers", "embed", "ff")),
+        "w_cr": S((L, d, d), ("layers", "embed", "heads_x_dim"), scale=0.5),
+        "w_cv": S((L, f, d), ("layers", "ff", "embed_out")),
+        "ln1": S((L, d), ("layers", "embed"), init="zeros"),
+        "ln2": S((L, d), ("layers", "embed"), init="zeros"),
+    }
+
+
+def _token_shift(x: jax.Array, last: jax.Array) -> jax.Array:
+    """x (B, S, d); last (B, d) -> previous-token sequence (B, S, d)."""
+    return jnp.concatenate([last[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _lerp(x, xs, mu):
+    return x + (xs - x) * mu.astype(x.dtype)
+
+
+def _decays(xw: jax.Array, p: dict) -> jax.Array:
+    """Data-dependent log-decay.  Returns log w (B, S, d), strictly < 0."""
+    ww = p["decay_base"] + jnp.tanh(xw @ p["decay_a"]) @ p["decay_b"]
+    # log w = -exp(ww); clamp ww for numerical sanity
+    return -jnp.exp(jnp.clip(ww.astype(jnp.float32), -12.0, 6.0))
+
+
+def _group_norm(x: jax.Array, gamma: jax.Array, n: int) -> jax.Array:
+    """Per-head layernorm over head_dim (rwkv's ln_x). x (B, S, H, n)."""
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.var(x, axis=-1, keepdims=True)
+    xn = (x - mu) * jax.lax.rsqrt(var + 1e-5)
+    b, s, h, _ = x.shape
+    g = (1.0 + gamma.astype(jnp.float32)).reshape(h, n)
+    return xn * g[None, None]
+
+
+def _chunk_wkv(r, k, v, logw, u, s0):
+    """One chunk of the closed-form WKV.
+
+    r,k,v (B, C, H, n); logw (B, C, H, n); u (H, n); s0 (B, H, n, n) f32.
+    Returns (out (B, C, H, n) f32, s_end)."""
+    bsz, c, h, n = r.shape
+    L = jnp.cumsum(logw, axis=1)                      # inclusive
+    Lx = L - logw                                     # exclusive
+    # intra-chunk scores: (B, H, C, C)
+    expo = Lx[:, :, None, :, :] - L[:, None, :, :, :]   # (B, Ct, Cj, H, n)
+    mask = (jnp.arange(c)[:, None] > jnp.arange(c)[None, :])[None, :, :,
+                                                             None, None]
+    ex = jnp.where(mask, expo, -jnp.inf)
+    scores = jnp.einsum("bthn,bjhn,btjhn->bhtj", r, k,
+                        jnp.exp(ex).astype(r.dtype))
+    diag = jnp.einsum("bthn,hn,bthn->bht", r, u.astype(r.dtype), k)
+    out = jnp.einsum("bhtj,bjhn->bthn", scores, v).astype(jnp.float32)
+    out = out + diag.transpose(0, 2, 1)[..., None] * v.astype(jnp.float32)
+    # cross-chunk: r_t * exp(Lx_t) against s0
+    rx = r.astype(jnp.float32) * jnp.exp(Lx)
+    out = out + jnp.einsum("bthn,bhnm->bthm", rx, s0)
+    # state update
+    kw = k.astype(jnp.float32) * jnp.exp(L[:, -1:, :, :] - L)   # (B,C,H,n)
+    s_end = s0 * jnp.exp(L[:, -1])[..., None] \
+        + jnp.einsum("bthn,bthm->bhnm", kw, v.astype(jnp.float32))
+    return out, s_end
+
+
+def time_mix(x: jax.Array, p: dict, *, head_dim: int, chunk: int = 64,
+             state: RwkvState | None = None
+             ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """RWKV6 attention replacement.  x (B, S, d) -> (out, s_end, last_x)."""
+    b, s, d = x.shape
+    n = head_dim
+    h = d // n
+    last = state.x_tm if state is not None else jnp.zeros((b, d), x.dtype)
+    xs = _token_shift(x, last)
+    mu = p["mix"]                                     # (5, d)
+    xr, xk, xv, xw, xg = (_lerp(x, xs, mu[i]) for i in range(5))
+    r = (xr @ p["w_r"]).reshape(b, s, h, n)
+    k = (xk @ p["w_k"]).reshape(b, s, h, n)
+    v = (xv @ p["w_v"]).reshape(b, s, h, n)
+    g = xg @ p["w_g"]
+    logw = _decays(xw, p).reshape(b, s, h, n)
+
+    s0 = (state.s if state is not None
+          else jnp.zeros((b, h, n, n), jnp.float32))
+    c = min(chunk, s)
+    if s % c:
+        c = s
+    nc = s // c
+
+    def step(carry, inp):
+        rc, kc, vc, wc = inp
+        out, s_end = _chunk_wkv(rc, kc, vc, wc, p["bonus_u"], carry)
+        return s_end, out
+
+    resh = lambda a: a.reshape(b, nc, c, h, n).swapaxes(0, 1)
+    s_end, outs = jax.lax.scan(step, s0, (resh(r), resh(k), resh(v),
+                                          resh(logw)))
+    out = outs.swapaxes(0, 1).reshape(b, s, h, n)
+
+    out = _group_norm(out, p["ln_x"], n).reshape(b, s, d)
+    out = (out * jax.nn.silu(g.astype(jnp.float32))).astype(x.dtype)
+    return out @ p["w_o"], s_end, x[:, -1, :]
+
+
+def channel_mix(x: jax.Array, p: dict, *,
+                state: RwkvState | None = None) -> tuple[jax.Array, jax.Array]:
+    """RWKV6 FFN. x (B, S, d) -> (out, last_x)."""
+    b, s, d = x.shape
+    last = state.x_cm if state is not None else jnp.zeros((b, d), x.dtype)
+    xs = _token_shift(x, last)
+    mu = p["mix_c"]
+    xk = _lerp(x, xs, mu[0])
+    xr = _lerp(x, xs, mu[1])
+    kk = jnp.square(jax.nn.relu(xk @ p["w_ck"]))
+    rr = jax.nn.sigmoid((xr @ p["w_cr"]).astype(jnp.float32)).astype(x.dtype)
+    return rr * (kk @ p["w_cv"]), x[:, -1, :]
+
+
+def rwkv_layer(x: jax.Array, p: dict, *, head_dim: int, chunk: int = 64,
+               state: RwkvState | None = None
+               ) -> tuple[jax.Array, RwkvState]:
+    """One full RWKV block: time mix + channel mix, pre-norm residual."""
+    att, s_end, x_tm = time_mix(common.rmsnorm(x, p["ln1"]), p,
+                                head_dim=head_dim, chunk=chunk, state=state)
+    x = x + att
+    ffn, x_cm = channel_mix(common.rmsnorm(x, p["ln2"]), p, state=state)
+    return x + ffn, RwkvState(s=s_end, x_tm=x_tm, x_cm=x_cm)
+
+
+def rwkv_naive_wkv(r, k, v, logw, u, s0):
+    """Sequential oracle for the WKV recurrence. Shapes as _chunk_wkv."""
+    def step(s, inp):
+        rt, kt, vt, wt = inp                          # (B, H, n)
+        kv = kt[..., :, None] * vt[..., None, :]      # (B, H, n, n)
+        att = s + u[None, :, :, None] * kv.astype(jnp.float32)
+        out = jnp.einsum("bhn,bhnm->bhm", rt, att.astype(rt.dtype))
+        s = jnp.exp(wt.astype(jnp.float32))[..., None] * s \
+            + kv.astype(jnp.float32)
+        return s, out
+
+    sw = lambda a: a.swapaxes(0, 1).swapaxes(1, 2)    # (B,C,H,n)->(C,B,H,n)
+    args = tuple(a.swapaxes(0, 1) for a in (r, k, v, logw))
+    s_end, outs = jax.lax.scan(step, s0, args)
+    return outs.swapaxes(0, 1).astype(jnp.float32), s_end

@@ -1,0 +1,734 @@
+"""Unified LM stack for all 10 assigned architectures.
+
+One parameter layout + three entry points (`forward` / `prefill` /
+`decode_step`) cover the dense / moe / vlm / hybrid / ssm decoder families;
+`audio` (Whisper) adds an encoder stack and cross-attention.
+
+Heterogeneous layer patterns (gemma3's 5:1 local:global, hymba's explicit
+global set) are handled by *segments*: params are stacked over all layers,
+the static layer-kind list is cut into runs of identical kind, each run is
+sliced out and scanned with ``lax.scan`` + ``jax.checkpoint`` — HLO size is
+O(#segments), compute identical to a per-layer loop.
+
+Caches are per-segment pytrees: full-attention segments carry (run, B, S,
+KVH, hd) K/V; SWA segments carry ring buffers of width ``window``; hybrid
+segments add Mamba states; ssm segments carry RWKV states.  ``long_500k``
+full-attention caches (gemma3's global layers) use the sequence-sharded
+flash-decode path in attention.py.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ModelConfig
+from repro.models import attention, common, mamba, moe, rwkv
+from repro.models.common import ParamSpec as PS
+
+
+# ---------------------------------------------------------------------------
+# Segments
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class Segment:
+    kind: str          # "full" | "swa" (attention flavour of the run)
+    start: int
+    end: int           # exclusive
+
+    @property
+    def size(self) -> int:
+        return self.end - self.start
+
+
+def segments(cfg: ModelConfig, n_layers: int | None = None) -> list[Segment]:
+    n = cfg.n_layers if n_layers is None else n_layers
+    kinds = [cfg.layer_kind(i) for i in range(n)]
+    segs, a = [], 0
+    for i in range(1, n + 1):
+        if i == n or kinds[i] != kinds[a]:
+            segs.append(Segment(kinds[a], a, i))
+            a = i
+    return segs
+
+
+def _chunk_for(seq: int, want: int) -> int:
+    """Largest divisor of ``seq`` that is <= want (chunked attn needs S % C == 0)."""
+    c = min(want, seq)
+    while seq % c:
+        c -= 1
+    return c
+
+
+def _slice_seg(tree, seg: Segment):
+    return jax.tree.map(
+        lambda a: jax.lax.slice_in_dim(a, seg.start, seg.end, axis=0), tree)
+
+
+def _remat(fn, policy: str):
+    if policy == "none":
+        return fn
+    if policy == "dots":
+        return jax.checkpoint(
+            fn, policy=jax.checkpoint_policies.dots_with_no_batch_dims_saveable)
+    return jax.checkpoint(fn)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs
+# ---------------------------------------------------------------------------
+
+
+def _attn_specs(cfg: ModelConfig, L: int) -> dict:
+    d, q, kv, hd = cfg.d_model, cfg.q_dim, cfg.kv_dim, cfg.head_dim
+    s = {
+        "wq": PS((L, d, q), ("layers", "embed", "q_heads")),
+        "wk": PS((L, d, kv), ("layers", "embed", "kv_fused")),
+        "wv": PS((L, d, kv), ("layers", "embed", "kv_fused")),
+        "wo": PS((L, q, d), ("layers", "q_heads", "embed_out")),
+    }
+    if cfg.qk_norm:
+        s["q_gamma"] = PS((L, hd), ("layers", None), init="zeros")
+        s["k_gamma"] = PS((L, hd), ("layers", None), init="zeros")
+    return s
+
+
+def _ffn_specs(cfg: ModelConfig, L: int) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    s = {
+        "wu": PS((L, d, f), ("layers", "ff_in", "ff")),
+        "wd": PS((L, f, d), ("layers", "ff", "embed_out")),
+    }
+    if cfg.mlp_gated:
+        s["wg"] = PS((L, d, f), ("layers", "ff_in", "ff"))
+    return s
+
+
+def param_specs(cfg: ModelConfig) -> dict:
+    d, v, L = cfg.d_model, cfg.vocab_padded, cfg.n_layers
+    specs: dict[str, Any] = {
+        "embed": PS((v, d), ("vocab", "embed"), scale=1.0),
+        "final_norm": PS((d,), ("embed",), init="zeros"),
+    }
+    if not cfg.tie_embeddings:
+        specs["lm_head"] = PS((d, v), ("embed", "vocab"))
+
+    if cfg.family == "ssm":
+        specs["layers"] = rwkv.param_specs(cfg)
+        return specs
+
+    layers: dict[str, Any] = {
+        "ln1": PS((L, d), ("layers", "embed"), init="zeros"),
+        "ln2": PS((L, d), ("layers", "embed"), init="zeros"),
+        "attn": _attn_specs(cfg, L),
+    }
+    if cfg.family == "hybrid":
+        layers["mamba"] = mamba.param_specs(cfg, d_inner=cfg.q_dim)
+        layers["attn_gamma"] = PS((L, cfg.q_dim), ("layers", "q_heads"),
+                                  init="zeros")
+        layers["mamba_gamma"] = PS((L, cfg.q_dim), ("layers", "q_heads"),
+                                   init="zeros")
+    if cfg.n_experts:
+        layers["moe"] = moe.param_specs(cfg)
+    else:
+        layers["ffn"] = _ffn_specs(cfg, L)
+    specs["layers"] = layers
+
+    if cfg.meta_tokens:
+        specs["meta"] = PS((cfg.meta_tokens, d), (None, "embed"), scale=1.0)
+    if cfg.enc_dec:
+        Ld = cfg.n_dec_layers
+        specs["enc_final_norm"] = PS((d,), ("embed",), init="zeros")
+        specs["dec_pos"] = PS((cfg.decoder_len, d), (None, "embed"), scale=1.0)
+        specs["dec"] = {
+            "ln1": PS((Ld, d), ("layers", "embed"), init="zeros"),
+            "ln_x": PS((Ld, d), ("layers", "embed"), init="zeros"),
+            "ln2": PS((Ld, d), ("layers", "embed"), init="zeros"),
+            "attn": _attn_specs(cfg, Ld),
+            "xattn": _attn_specs(cfg, Ld),
+            "ffn": _ffn_specs(cfg, Ld),
+        }
+    return specs
+
+
+# ---------------------------------------------------------------------------
+# Blocks
+# ---------------------------------------------------------------------------
+
+
+class Ctx(NamedTuple):
+    """Static per-call context threaded through the stack."""
+    cfg: ModelConfig
+    mesh: Mesh | None
+    data_axes: tuple[str, ...]
+    mode: str                      # "train" | "prefill" | "decode"
+    kv_shard: tuple | None = None  # axes the full-attn KV cache's SEQUENCE
+                                   # is sharded over (flash-decode merge)
+
+
+def _shard_bsd(x: jax.Array, ctx: Ctx) -> jax.Array:
+    """Constrain (B, S, d) activations: batch over the data axes."""
+    if ctx.mesh is None or not ctx.data_axes:
+        return x
+    import math
+    if x.shape[0] % math.prod(ctx.mesh.shape[a] for a in ctx.data_axes):
+        return x
+    dp = ctx.data_axes if len(ctx.data_axes) > 1 else ctx.data_axes[0]
+    return jax.lax.with_sharding_constraint(
+        x, NamedSharding(ctx.mesh, P(dp, *([None] * (x.ndim - 1)))))
+
+
+def _qkv(x, p, cfg: ModelConfig, positions):
+    b, s, _ = x.shape
+    q = (x @ p["wq"]).reshape(b, s, cfg.n_heads, cfg.head_dim)
+    k = (x @ p["wk"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    v = (x @ p["wv"]).reshape(b, s, cfg.n_kv_heads, cfg.head_dim)
+    if cfg.qk_norm:
+        q = common.rmsnorm(q, p["q_gamma"])
+        k = common.rmsnorm(k, p["k_gamma"])
+    if positions is not None:                      # rope (not for whisper)
+        q = common.rope(q, positions, cfg.rope_theta)
+        k = common.rope(k, positions, cfg.rope_theta)
+    return q, k, v
+
+
+def attn_train(x, p, cfg: ModelConfig, kind: str, ctx: Ctx, *,
+               causal: bool = True, kv_override=None,
+               triangular: bool = False):
+    """Full-sequence attention (training / prefill compute).
+
+    Returns (out, (k, v)) so prefill can write the cache."""
+    b, s, _ = x.shape
+    positions = None if cfg.enc_dec else jnp.arange(s)[None, :]
+    q, k, v = _qkv(x, p, cfg, positions)
+    if kv_override is not None:                     # cross-attention
+        k, v = kv_override
+    window = cfg.window if kind == "swa" else 0
+    out = attention.attend(
+        q, k, v, causal=causal, window=window,
+        chunk=_chunk_for(s, cfg.scan_chunk), triangular=triangular)
+    return out.reshape(b, s, cfg.q_dim) @ p["wo"], (k, v)
+
+
+def attn_decode(x, p, cfg: ModelConfig, kind: str, ctx: Ctx, cache, pos):
+    """One-token attention against the cache; returns (out, new_cache)."""
+    b = x.shape[0]
+    q, k, v = _qkv(x, p, cfg, None if cfg.enc_dec else
+                   jnp.broadcast_to(jnp.asarray(pos), (b,))[:, None])
+    window = cfg.window if kind == "swa" else 0
+    if ctx.kv_shard and not window and ctx.mesh is not None:
+        # seq-sharded cache: write + flash-decode inside one shard_map
+        import math
+        nd = math.prod(ctx.mesh.shape[a] for a in ctx.data_axes) \
+            if ctx.data_axes else 1
+        b_axes = ctx.data_axes if ("model" in ctx.kv_shard
+                                   and b % max(nd, 1) == 0) else ()
+        out, kc, vc = attention.decode_attend_seqsharded(
+            q, k, v, cache["k"], cache["v"], pos, mesh=ctx.mesh,
+            axes=ctx.kv_shard, b_axes=b_axes)
+    else:
+        kc, vc = attention.cache_update(cache["k"], cache["v"],
+                                        k.astype(cache["k"].dtype),
+                                        v.astype(cache["v"].dtype), pos,
+                                        window=window)
+        out = attention.decode_attend(q, kc, vc, pos, window=window)
+    return out.reshape(b, 1, cfg.q_dim) @ p["wo"], {"k": kc, "v": vc}
+
+
+def ffn_block(x, p, cfg: ModelConfig, ctx: Ctx):
+    act = common.activation(cfg.mlp_act)
+    if cfg.n_experts:
+        return moe.moe_ffn(x, p, top_k=cfg.top_k,
+                           capacity_factor=cfg.capacity_factor, act=act,
+                           mesh=ctx.mesh, data_axes=ctx.data_axes)
+    if cfg.mlp_gated:
+        h = act(x @ p["wg"]) * (x @ p["wu"])
+    else:
+        h = act(x @ p["wu"])
+    return h @ p["wd"], moe.MoEAux(*(jnp.zeros(()) for _ in range(3)))
+
+
+def _zero_aux():
+    return moe.MoEAux(*(jnp.zeros(()) for _ in range(3)))
+
+
+def _add_aux(a: moe.MoEAux, b: moe.MoEAux) -> moe.MoEAux:
+    return moe.MoEAux(a.load_balance + b.load_balance,
+                      a.router_z + b.router_z,
+                      a.dropped_frac + b.dropped_frac)
+
+
+# ---------------------------------------------------------------------------
+# Decoder layers (train / prefill / decode)
+# ---------------------------------------------------------------------------
+
+
+def layer_train(x, p, cfg: ModelConfig, kind: str, ctx: Ctx,
+                triangular: bool = False):
+    """One decoder layer, full sequence. Returns (x, aux, (k, v))."""
+    h = common.rmsnorm(x, p["ln1"])
+    attn_out, kv = attn_train(h, p["attn"], cfg, kind, ctx,
+                              triangular=triangular)
+    if cfg.family == "hybrid":
+        m_out, _ = mamba.mamba_mix(h, p["mamba"], d_inner=cfg.q_dim,
+                                   chunk=cfg.scan_chunk)
+        mixed = 0.5 * (common.rmsnorm(attn_out, p["attn_gamma"])
+                       + common.rmsnorm(m_out, p["mamba_gamma"]))
+        attn_out = mixed
+    if cfg.parallel_block:
+        f_out, aux = ffn_block(h, p.get("moe", p.get("ffn")), cfg, ctx)
+        return _shard_bsd(x + attn_out + f_out, ctx), aux, kv
+    x = x + attn_out
+    f_out, aux = ffn_block(common.rmsnorm(x, p["ln2"]),
+                           p.get("moe", p.get("ffn")), cfg, ctx)
+    return _shard_bsd(x + f_out, ctx), aux, kv
+
+
+def layer_decode(x, p, cfg: ModelConfig, kind: str, ctx: Ctx, cache, pos):
+    """One decoder layer, one token. Returns (x, new_cache)."""
+    h = common.rmsnorm(x, p["ln1"])
+    attn_out, new_attn = attn_decode(h, p["attn"], cfg, kind, ctx,
+                                     cache, pos)
+    new_cache = dict(new_attn)
+    if cfg.family == "hybrid":
+        mst = mamba.MambaState(h=cache["m_h"], conv=cache["m_conv"])
+        m_out, mst = mamba.mamba_mix(h, p["mamba"], d_inner=cfg.q_dim,
+                                     chunk=1, state=mst)
+        attn_out = 0.5 * (common.rmsnorm(attn_out, p["attn_gamma"])
+                          + common.rmsnorm(m_out, p["mamba_gamma"]))
+        new_cache.update(m_h=mst.h, m_conv=mst.conv)
+    if cfg.parallel_block:
+        f_out, _ = ffn_block(h, p.get("moe", p.get("ffn")), cfg, ctx)
+        return x + attn_out + f_out, new_cache
+    x = x + attn_out
+    f_out, _ = ffn_block(common.rmsnorm(x, p["ln2"]),
+                         p.get("moe", p.get("ffn")), cfg, ctx)
+    return x + f_out, new_cache
+
+
+def layer_prefill(x, p, cfg: ModelConfig, kind: str, ctx: Ctx, cache):
+    """Full-sequence compute + cache population. Returns (x, new_cache)."""
+    h = common.rmsnorm(x, p["ln1"])
+    attn_out, (k, v) = attn_train(h, p["attn"], cfg, kind, ctx)
+    s = x.shape[1]
+    window = cfg.window if kind == "swa" else 0
+    new_cache = dict(cache)
+    kd, vd = k.astype(cache["k"].dtype), v.astype(cache["v"].dtype)
+    if window and s >= window:
+        r = s % window
+        new_cache["k"] = jnp.roll(kd[:, -window:], r, axis=1)
+        new_cache["v"] = jnp.roll(vd[:, -window:], r, axis=1)
+    else:
+        upd = lambda c, n: jax.lax.dynamic_update_slice_in_dim(c, n, 0, axis=1)
+        new_cache["k"] = upd(cache["k"], kd)
+        new_cache["v"] = upd(cache["v"], vd)
+    if cfg.family == "hybrid":
+        m_out, mst = mamba.mamba_mix(h, p["mamba"], d_inner=cfg.q_dim,
+                                     chunk=cfg.scan_chunk)
+        attn_out = 0.5 * (common.rmsnorm(attn_out, p["attn_gamma"])
+                          + common.rmsnorm(m_out, p["mamba_gamma"]))
+        new_cache.update(m_h=mst.h, m_conv=mst.conv)
+    if cfg.parallel_block:
+        f_out, _ = ffn_block(h, p.get("moe", p.get("ffn")), cfg, ctx)
+        return _shard_bsd(x + attn_out + f_out, ctx), new_cache
+    x = x + attn_out
+    f_out, _ = ffn_block(common.rmsnorm(x, p["ln2"]),
+                         p.get("moe", p.get("ffn")), cfg, ctx)
+    return _shard_bsd(x + f_out, ctx), new_cache
+
+
+# ---------------------------------------------------------------------------
+# Stacks
+# ---------------------------------------------------------------------------
+
+
+def _scan_segment(body, x, p_seg, cache_seg=None):
+    """Scan ``body`` over the layers of one segment.
+
+    body(x, p_l, cache_l) -> (x, aux, new_cache_l);
+    returns (x, aux_sum, new_cache_seg)."""
+
+    def step(carry, xs):
+        x, aux = carry
+        p_l, c_l = xs
+        x, a, new_c = body(x, p_l, c_l)
+        return (x, _add_aux(aux, a)), new_c
+
+    (x, aux), new_cache = jax.lax.scan(
+        step, (x, _zero_aux()), (p_seg, cache_seg))
+    return x, aux, new_cache
+
+
+def decoder_stack(params, x, cfg: ModelConfig, ctx: Ctx, *,
+                  cache=None, pos=None, triangular: bool = False):
+    """Run all decoder layers. Returns (x, aux, new_cache)."""
+    if cfg.family == "ssm":
+        return _rwkv_stack(params, x, cfg, ctx, cache=cache)
+
+    segs = segments(cfg)
+    new_cache = []
+    aux_t = _zero_aux()
+    for si, seg in enumerate(segs):
+        p_seg = _slice_seg(params["layers"], seg)
+        c_seg = cache[si] if cache is not None else None
+        if ctx.mode == "train":
+            def body(x, p_l, c_l, _k=seg.kind):
+                x, a, _ = layer_train(x, p_l, cfg, _k, ctx,
+                                      triangular=triangular)
+                return x, a, 0
+            body = _remat(body, cfg.remat)
+            x, aux, _ = _scan_segment(
+                body, x, p_seg,
+                jnp.zeros((seg.size,), jnp.int32))
+            new_cache.append(None)
+        elif ctx.mode == "prefill":
+            def body(x, p_l, c_l, _k=seg.kind):
+                x, c = layer_prefill(x, p_l, cfg, _k, ctx, c_l)
+                return x, _zero_aux(), c
+            body = _remat(body, cfg.remat)
+            x, aux, c_new = _scan_segment(body, x, p_seg, c_seg)
+            new_cache.append(c_new)
+        else:
+            def body(x, p_l, c_l, _k=seg.kind):
+                x, c = layer_decode(x, p_l, cfg, _k, ctx, c_l, pos)
+                return x, _zero_aux(), c
+            x, aux, c_new = _scan_segment(body, x, p_seg, c_seg)
+            new_cache.append(c_new)
+        aux_t = _add_aux(aux_t, aux)
+    return x, aux_t, new_cache
+
+
+def _rwkv_stack(params, x, cfg: ModelConfig, ctx: Ctx, *, cache=None):
+    p_all = params["layers"]
+
+    def body(carry, xs):
+        x = carry
+        p_l, st_l = xs
+        state = (rwkv.RwkvState(**st_l) if st_l is not None else None)
+        x, new_state = rwkv.rwkv_layer(
+            x, p_l, head_dim=cfg.rwkv_head_dim,
+            chunk=min(64, cfg.scan_chunk), state=state)
+        return x, dict(s=new_state.s, x_tm=new_state.x_tm,
+                       x_cm=new_state.x_cm)
+
+    if cache is None:
+        b = x.shape[0]
+        h = cfg.d_model // cfg.rwkv_head_dim
+        n = cfg.rwkv_head_dim
+        cache0 = dict(
+            s=jnp.zeros((cfg.n_layers, b, h, n, n), jnp.float32),
+            x_tm=jnp.zeros((cfg.n_layers, b, cfg.d_model), x.dtype),
+            x_cm=jnp.zeros((cfg.n_layers, b, cfg.d_model), x.dtype))
+    else:
+        cache0 = cache[0]
+
+    wrapped = _remat(lambda x, p_l, st_l: (body(x, (p_l, st_l))), cfg.remat) \
+        if ctx.mode == "train" else (lambda x, p_l, st_l: body(x, (p_l, st_l)))
+
+    def step(x, xs):
+        p_l, st_l = xs
+        return wrapped(x, p_l, st_l)
+
+    x, new_states = jax.lax.scan(step, x, (p_all, cache0))
+    return x, _zero_aux(), [new_states]
+
+
+# ---------------------------------------------------------------------------
+# Whisper encoder-decoder
+# ---------------------------------------------------------------------------
+
+
+def _sinusoid(n: int, d: int) -> jax.Array:
+    pos = jnp.arange(n)[:, None].astype(jnp.float32)
+    i = jnp.arange(d // 2)[None, :].astype(jnp.float32)
+    ang = pos / jnp.power(10000.0, 2 * i / d)
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=1)
+
+
+def encoder_stack(params, frames, cfg: ModelConfig, ctx: Ctx):
+    """Whisper encoder over stub frame embeddings (B, F, d)."""
+    x = frames + _sinusoid(frames.shape[1], cfg.d_model
+                           ).astype(frames.dtype)[None]
+    x = _shard_bsd(x, ctx)
+
+    def body(x, p_l, _c):
+        h = common.rmsnorm(x, p_l["ln1"])
+        out, _ = attn_train(h, p_l["attn"], cfg, "full", ctx, causal=False)
+        x = x + out
+        h = common.rmsnorm(x, p_l["ln2"])
+        f_out, _ = ffn_block(h, p_l["ffn"], cfg, ctx)
+        return _shard_bsd(x + f_out, ctx), _zero_aux(), 0
+
+    seg = Segment("full", 0, cfg.n_layers)
+    x, _, _ = _scan_segment(_remat(body, cfg.remat), x,
+                            _slice_seg(params["layers"], seg),
+                            jnp.zeros((cfg.n_layers,), jnp.int32))
+    return common.rmsnorm(x, params["enc_final_norm"])
+
+
+def whisper_decoder(params, tokens, enc_out, cfg: ModelConfig, ctx: Ctx, *,
+                    cache=None, pos=None):
+    """Decoder with self- + cross-attention.
+
+    Train/prefill: tokens (B, T).  Decode: tokens (B, 1) at ``pos`` with
+    cache = {"k","v" (self), "xk","xv" (cross, precomputed at prefill)}."""
+    x = params["embed"][tokens]
+    if ctx.mode != "decode":
+        x = x + params["dec_pos"][None, :x.shape[1]].astype(x.dtype)
+    else:
+        x = x + params["dec_pos"][pos][None, None].astype(x.dtype)
+
+    def body_full(x, p_l, c_l):
+        h = common.rmsnorm(x, p_l["ln1"])
+        out, (k, v) = attn_train(h, p_l["attn"], cfg, "full", ctx)
+        x = x + out
+        h = common.rmsnorm(x, p_l["ln_x"])
+        bq, sq, _ = h.shape
+        q = (h @ p_l["xattn"]["wq"]).reshape(bq, sq, cfg.n_heads,
+                                             cfg.head_dim)
+        xkv_k = (enc_out @ p_l["xattn"]["wk"]).reshape(
+            enc_out.shape[0], enc_out.shape[1], cfg.n_kv_heads, cfg.head_dim)
+        xkv_v = (enc_out @ p_l["xattn"]["wv"]).reshape(
+            enc_out.shape[0], enc_out.shape[1], cfg.n_kv_heads, cfg.head_dim)
+        out = attention.attend(q, xkv_k, xkv_v, causal=False,
+                               chunk=_chunk_for(x.shape[1], cfg.scan_chunk))
+        x = x + out.reshape(x.shape[0], x.shape[1], cfg.q_dim) \
+            @ p_l["xattn"]["wo"]
+        h = common.rmsnorm(x, p_l["ln2"])
+        f_out, _ = ffn_block(h, p_l["ffn"], cfg, ctx)
+        new_c = 0
+        if ctx.mode == "prefill":
+            t = k.shape[1]
+            new_c = dict(
+                k=jax.lax.dynamic_update_slice_in_dim(c_l["k"], k, 0, 1),
+                v=jax.lax.dynamic_update_slice_in_dim(c_l["v"], v, 0, 1),
+                xk=xkv_k, xv=xkv_v)
+        return _shard_bsd(x + f_out, ctx), _zero_aux(), new_c
+
+    def body_decode(x, p_l, c_l):
+        b = x.shape[0]
+        h = common.rmsnorm(x, p_l["ln1"])
+        q, k, v = _qkv(h, p_l["attn"], cfg, None)
+        kc, vc = attention.cache_update(c_l["k"], c_l["v"], k, v, pos)
+        out = attention.decode_attend(q, kc, vc, pos)
+        x = x + out.reshape(b, 1, cfg.q_dim) @ p_l["attn"]["wo"]
+        h = common.rmsnorm(x, p_l["ln_x"])
+        q, _, _ = _qkv(h, p_l["xattn"], cfg, None)
+        big = c_l["xk"].shape[1]
+        out = attention.decode_attend(q, c_l["xk"], c_l["xv"],
+                                      jnp.asarray(big - 1))
+        x = x + out.reshape(b, 1, cfg.q_dim) @ p_l["xattn"]["wo"]
+        h = common.rmsnorm(x, p_l["ln2"])
+        f_out, _ = ffn_block(h, p_l["ffn"], cfg, ctx)
+        return x + f_out, _zero_aux(), dict(k=kc, v=vc, xk=c_l["xk"],
+                                            xv=c_l["xv"])
+
+    seg = Segment("full", 0, cfg.n_dec_layers)
+    p_seg = _slice_seg(params["dec"], seg)
+    if ctx.mode == "decode":
+        x, _, new_cache = _scan_segment(body_decode, x, p_seg, cache[0])
+    elif ctx.mode == "prefill":
+        x, _, new_cache = _scan_segment(body_full, x, p_seg, cache[0])
+    else:
+        body = _remat(body_full, cfg.remat)
+        x, _, _ = _scan_segment(body, x, p_seg,
+                                jnp.zeros((cfg.n_dec_layers,), jnp.int32))
+        new_cache = None
+    x = common.rmsnorm(x, params["final_norm"])
+    return x, ([new_cache] if new_cache is not None else None)
+
+
+# ---------------------------------------------------------------------------
+# Model API
+# ---------------------------------------------------------------------------
+
+
+def embed_inputs(params, batch: dict, cfg: ModelConfig, ctx: Ctx):
+    """Token (+ modality prefix / meta token) embedding. -> (B, S_total, d)."""
+    x = params["embed"][batch["tokens"]]
+    if cfg.emb_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    if cfg.family == "vlm" and "patches" in batch:
+        x = jnp.concatenate([batch["patches"].astype(x.dtype), x], axis=1)
+    if cfg.meta_tokens:
+        meta = jnp.broadcast_to(params["meta"][None].astype(x.dtype),
+                                (x.shape[0], cfg.meta_tokens, cfg.d_model))
+        x = jnp.concatenate([meta, x], axis=1)
+    return _shard_bsd(x, ctx)
+
+
+def lm_logits(params, x, cfg: ModelConfig):
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = x.astype(jnp.float32) @ head.astype(jnp.float32)
+    logits = common.softcap(logits, cfg.logit_softcap)
+    if cfg.vocab_padded != cfg.vocab:           # drop padded columns
+        logits = logits[..., :cfg.vocab]
+    return logits
+
+
+def forward(params, batch: dict, cfg: ModelConfig, *, mesh: Mesh | None = None,
+            data_axes: tuple[str, ...] = (), triangular: bool = False):
+    """Teacher-forcing forward -> (logits (B, S, V), aux)."""
+    ctx = Ctx(cfg, mesh, data_axes, "train")
+    if cfg.enc_dec:
+        enc = encoder_stack(params, batch["frames"], cfg, ctx)
+        x, _ = whisper_decoder(params, batch["dec_tokens"], enc, cfg, ctx)
+        return lm_logits(params, x, cfg), _zero_aux()
+    x = embed_inputs(params, batch, cfg, ctx)
+    x, aux, _ = decoder_stack(params, x, cfg, ctx, triangular=triangular)
+    x = common.rmsnorm(x, params["final_norm"])
+    prefix = cfg.meta_tokens + (batch.get("patches").shape[1]
+                                if cfg.family == "vlm"
+                                and batch.get("patches") is not None else 0)
+    if prefix:
+        x = x[:, prefix:]
+    return lm_logits(params, x, cfg), aux
+
+
+def loss_fn(params, batch: dict, cfg: ModelConfig, *,
+            mesh: Mesh | None = None, data_axes: tuple[str, ...] = (),
+            vocab_chunk: int = 0, triangular: bool = False):
+    """Next-token CE loss with chunked logits (never materializes (B,S,V)).
+
+    labels = tokens shifted left; positions with label < 0 are masked.
+    Returns (loss, metrics dict)."""
+    ctx = Ctx(cfg, mesh, data_axes, "train")
+    if cfg.enc_dec:
+        enc = encoder_stack(params, batch["frames"], cfg, ctx)
+        x, _ = whisper_decoder(params, batch["dec_tokens"], enc, cfg, ctx)
+        tokens = batch["dec_tokens"]
+        aux = _zero_aux()
+    else:
+        x = embed_inputs(params, batch, cfg, ctx)
+        x, aux, _ = decoder_stack(params, x, cfg, ctx, triangular=triangular)
+        x = common.rmsnorm(x, params["final_norm"])
+        prefix = cfg.meta_tokens + (batch.get("patches").shape[1]
+                                    if cfg.family == "vlm"
+                                    and batch.get("patches") is not None else 0)
+        if prefix:
+            x = x[:, prefix:]
+        tokens = batch["tokens"]
+
+    labels = batch.get("labels")
+    if labels is None:
+        labels = jnp.concatenate(
+            [tokens[:, 1:], jnp.full_like(tokens[:, :1], -1)], axis=1)
+
+    head = params["embed"].T if cfg.tie_embeddings else params["lm_head"]
+    b, s, d = x.shape
+    chunk = _chunk_for(s, vocab_chunk or min(512, s))
+    pad_mask = None
+    if cfg.vocab_padded != cfg.vocab:           # keep the padded shape
+        pad_mask = jnp.where(jnp.arange(cfg.vocab_padded) < cfg.vocab,
+                             0.0, -1e30).astype(jnp.float32)
+
+    def ce_chunk(carry, i):
+        tot, cnt = carry
+        xs = jax.lax.dynamic_slice_in_dim(x, i * chunk, chunk, axis=1)
+        ls = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, axis=1)
+        logits = common.softcap(
+            xs.astype(jnp.float32) @ head.astype(jnp.float32),
+            cfg.logit_softcap)
+        if pad_mask is not None:
+            logits = logits + pad_mask
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, jnp.maximum(ls, 0)[..., None], axis=-1)[..., 0]
+        mask = (ls >= 0).astype(jnp.float32)
+        return (tot + jnp.sum((lse - gold) * mask), cnt + jnp.sum(mask)), None
+
+    (tot, cnt), _ = jax.lax.scan(ce_chunk, (jnp.zeros(()), jnp.zeros(())),
+                                 jnp.arange(s // chunk))
+    ce = tot / jnp.maximum(cnt, 1.0)
+    loss = ce
+    if cfg.n_experts:
+        loss = loss + 0.01 * aux.load_balance / cfg.n_layers \
+            + 1e-4 * aux.router_z / cfg.n_layers
+    metrics = {"ce": ce, "loss": loss, "tokens": cnt,
+               "moe_lb": aux.load_balance, "moe_drop": aux.dropped_frac}
+    return loss, metrics
+
+
+# ---------------------------------------------------------------------------
+# Cache init / prefill / decode
+# ---------------------------------------------------------------------------
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               dtype=jnp.bfloat16) -> list:
+    """Per-segment cache pytree (zeros); shapes depend on segment kinds."""
+    if cfg.enc_dec:
+        Ld = cfg.n_dec_layers
+        return [dict(
+            k=jnp.zeros((Ld, batch, cfg.decoder_len, cfg.n_kv_heads,
+                         cfg.head_dim), dtype),
+            v=jnp.zeros((Ld, batch, cfg.decoder_len, cfg.n_kv_heads,
+                         cfg.head_dim), dtype),
+            xk=jnp.zeros((Ld, batch, max_len, cfg.n_kv_heads,
+                          cfg.head_dim), dtype),
+            xv=jnp.zeros((Ld, batch, max_len, cfg.n_kv_heads,
+                          cfg.head_dim), dtype))]
+    if cfg.family == "ssm":
+        h = cfg.d_model // cfg.rwkv_head_dim
+        n = cfg.rwkv_head_dim
+        L = cfg.n_layers
+        return [dict(s=jnp.zeros((L, batch, h, n, n), jnp.float32),
+                     x_tm=jnp.zeros((L, batch, cfg.d_model), dtype),
+                     x_cm=jnp.zeros((L, batch, cfg.d_model), dtype))]
+    total = max_len + cfg.meta_tokens
+    out = []
+    for seg in segments(cfg):
+        s_kv = min(cfg.window, total) if seg.kind == "swa" else total
+        c = dict(k=jnp.zeros((seg.size, batch, s_kv, cfg.n_kv_heads,
+                              cfg.head_dim), dtype),
+                 v=jnp.zeros((seg.size, batch, s_kv, cfg.n_kv_heads,
+                              cfg.head_dim), dtype))
+        if cfg.family == "hybrid":
+            c.update(m_h=jnp.zeros((seg.size, batch, cfg.q_dim,
+                                    cfg.ssm_state), jnp.float32),
+                     m_conv=jnp.zeros((seg.size, batch, cfg.ssm_conv - 1,
+                                       cfg.q_dim), dtype))
+        out.append(c)
+    return out
+
+
+def prefill(params, batch: dict, cache: list, cfg: ModelConfig, *,
+            mesh: Mesh | None = None, data_axes: tuple[str, ...] = ()):
+    """Process the prompt; returns (last-position logits, filled cache)."""
+    ctx = Ctx(cfg, mesh, data_axes, "prefill")
+    if cfg.enc_dec:
+        enc = encoder_stack(params, batch["frames"], cfg, ctx)
+        x, new_cache = whisper_decoder(params, batch["dec_tokens"], enc,
+                                       cfg, ctx, cache=cache)
+        return lm_logits(params, x[:, -1:], cfg), new_cache
+    x = embed_inputs(params, batch, cfg, ctx)
+    x, _, new_cache = decoder_stack(params, x, cfg, ctx, cache=cache)
+    x = common.rmsnorm(x, params["final_norm"])
+    return lm_logits(params, x[:, -1:], cfg), new_cache
+
+
+def decode_step(params, tokens, pos, cache: list, cfg: ModelConfig, *,
+                mesh: Mesh | None = None, data_axes: tuple[str, ...] = (),
+                kv_shard: tuple | None = None):
+    """One token step. tokens (B, 1); pos = its absolute position (scalar).
+
+    Returns (logits (B, 1, V), new_cache)."""
+    ctx = Ctx(cfg, mesh, data_axes, "decode", kv_shard=kv_shard)
+    if cfg.enc_dec:
+        x, new_cache = whisper_decoder(params, tokens, None, cfg, ctx,
+                                       cache=cache, pos=pos)
+        return lm_logits(params, x, cfg), new_cache
+    x = params["embed"][tokens]
+    if cfg.emb_scale:
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    eff_pos = pos + cfg.meta_tokens if cfg.meta_tokens else pos
+    x, _, new_cache = decoder_stack(params, x, cfg, ctx, cache=cache,
+                                    pos=eff_pos)
+    x = common.rmsnorm(x, params["final_norm"])
+    return lm_logits(params, x, cfg), new_cache

@@ -1,0 +1,9 @@
+from repro.train.optimizer import (adamw_init, adamw_update, adafactor_init,
+                                   adafactor_update, opt_init, opt_update,
+                                   opt_state_specs)
+from repro.train.step import make_train_step, make_eval_step
+from repro.train.checkpoint import Checkpointer
+
+__all__ = ["adamw_init", "adamw_update", "adafactor_init", "adafactor_update",
+           "opt_init", "opt_update", "opt_state_specs", "make_train_step",
+           "make_eval_step", "Checkpointer"]

@@ -1,0 +1,155 @@
+"""Checkpointing: per-leaf .npy files + JSON manifest, atomic, async, keep-k.
+
+Layout:
+    <dir>/step_<n>/
+        manifest.json      {"step": n, "leaves": [{"path", "shape", "dtype"}]}
+        leaf_00000.npy ...
+
+Properties needed for the fault-tolerance story (DESIGN.md §5):
+  * atomic publish — written into ``.tmp-step_<n>`` then os.rename'd, so a
+    killed writer never leaves a half checkpoint that restore would trust;
+  * async — ``save`` snapshots to host (device_get) in the caller, the file
+    writes happen on a worker thread; ``wait()`` drains before exit;
+  * keep-last-k — old step dirs pruned after successful publish;
+  * elastic restore — leaves are whole (unsharded) arrays; ``restore`` takes
+    a template pytree (structure + shapes) and optional shardings, so the
+    same checkpoint restores onto any mesh shape / device count (tested
+    8 -> 4 in tests/test_distributed.py).
+"""
+from __future__ import annotations
+
+import json
+import os
+import queue
+import shutil
+import threading
+from typing import Any
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    leaves, treedef = jax.tree_util.tree_flatten(tree)
+    return leaves, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str, *, keep: int = 3,
+                 async_writes: bool = True):
+        self.dir = directory
+        self.keep = keep
+        os.makedirs(directory, exist_ok=True)
+        self._q: queue.Queue | None = None
+        self._worker: threading.Thread | None = None
+        self._err: list[BaseException] = []
+        if async_writes:
+            self._q = queue.Queue(maxsize=2)
+            self._worker = threading.Thread(target=self._drain, daemon=True)
+            self._worker.start()
+
+    # -- public ---------------------------------------------------------
+
+    def save(self, step: int, tree: Any) -> None:
+        """Snapshot ``tree`` (host copy taken now) and persist it."""
+        if self._err:
+            raise self._err.pop()
+        leaves, _ = _flatten(tree)
+        host = [np.asarray(jax.device_get(l)) for l in leaves]
+        if self._q is not None:
+            self._q.put((step, host))
+        else:
+            self._write(step, host)
+
+    def wait(self) -> None:
+        if self._q is not None:
+            self._q.join()
+        if self._err:
+            raise self._err.pop()
+
+    def latest_step(self) -> int | None:
+        steps = self.all_steps()
+        return steps[-1] if steps else None
+
+    def all_steps(self) -> list[int]:
+        out = []
+        for name in os.listdir(self.dir):
+            if name.startswith("step_") and not name.startswith(".tmp"):
+                try:
+                    out.append(int(name.split("_", 1)[1]))
+                except ValueError:
+                    pass
+        return sorted(out)
+
+    def restore(self, template: Any, *, step: int | None = None,
+                shardings: Any = None) -> Any:
+        """Load a checkpoint into the structure of ``template``.
+
+        ``shardings``: optional pytree of jax.sharding.Sharding matching the
+        template — arrays are placed with it (elastic reshard on restore).
+        """
+        if step is None:
+            step = self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = os.path.join(self.dir, f"step_{step}")
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+        t_leaves, treedef = _flatten(template)
+        if len(manifest["leaves"]) != len(t_leaves):
+            raise ValueError(
+                f"checkpoint has {len(manifest['leaves'])} leaves, template "
+                f"has {len(t_leaves)} — structure mismatch")
+        s_leaves = (jax.tree_util.tree_flatten(shardings)[0]
+                    if shardings is not None else [None] * len(t_leaves))
+        out = []
+        for meta, tmpl, shard in zip(manifest["leaves"], t_leaves, s_leaves):
+            arr = np.load(os.path.join(d, meta["path"]))
+            tshape = getattr(tmpl, "shape", None)
+            if tshape is None:                  # python scalar leaf
+                out.append(arr.item() if arr.ndim == 0 else arr)
+                continue
+            if tuple(arr.shape) != tuple(tshape):
+                raise ValueError(
+                    f"leaf {meta['path']}: shape {arr.shape} != template "
+                    f"{tshape}")
+            out.append(jax.device_put(arr, shard) if shard is not None
+                       else jax.device_put(arr))
+        return jax.tree_util.tree_unflatten(treedef, out)
+
+    # -- internals --------------------------------------------------------
+
+    def _drain(self):
+        while True:
+            step, host = self._q.get()
+            try:
+                self._write(step, host)
+            except BaseException as e:       # surfaced on next save()/wait()
+                self._err.append(e)
+            finally:
+                self._q.task_done()
+
+    def _write(self, step: int, host: list[np.ndarray]) -> None:
+        final = os.path.join(self.dir, f"step_{step}")
+        tmp = os.path.join(self.dir, f".tmp-step_{step}")
+        if os.path.exists(tmp):
+            shutil.rmtree(tmp)
+        os.makedirs(tmp)
+        metas = []
+        for i, arr in enumerate(host):
+            path = f"leaf_{i:05d}.npy"
+            np.save(os.path.join(tmp, path), arr)
+            metas.append({"path": path, "shape": list(arr.shape),
+                          "dtype": str(arr.dtype)})
+        with open(os.path.join(tmp, "manifest.json"), "w") as f:
+            json.dump({"step": step, "leaves": metas}, f)
+        if os.path.exists(final):
+            shutil.rmtree(final)
+        os.rename(tmp, final)                # atomic publish
+        self._prune()
+
+    def _prune(self):
+        steps = self.all_steps()
+        for s in steps[:-self.keep] if self.keep else []:
+            shutil.rmtree(os.path.join(self.dir, f"step_{s}"),
+                          ignore_errors=True)

@@ -1,0 +1,186 @@
+"""Optimizers from scratch: AdamW and Adafactor.
+
+AdamW keeps two f32 moments per parameter (3x param memory in f32) — fine up
+to ~30B at 256 chips with FSDP.  Adafactor factors the second moment of any
+rank>=2 leaf into row/col accumulators (O(sum dims) instead of O(prod dims))
+and keeps no first moment — the nemotron-4-340b config uses it (see
+DESIGN.md §5 memory budget).
+
+States are plain pytrees mirroring the param tree (inapplicable slots hold
+size-0 arrays so tree structures always match), so the launch layer derives
+their PartitionSpecs from the param specs (``opt_state_specs``) and the
+checkpointer treats them like any other tree.
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    m: Any
+    v: Any
+
+
+class AdafactorState(NamedTuple):
+    step: jax.Array
+    vr: Any       # row accumulator (shape[:-1]) for rank>=2 leaves
+    vc: Any       # col accumulator (shape[:-2] + shape[-1:])
+    v: Any        # full accumulator for rank<2 leaves (size-0 otherwise)
+
+
+def _empty() -> jax.Array:
+    return jnp.zeros((0,), jnp.float32)
+
+
+# -- AdamW -------------------------------------------------------------------
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = lambda p: jnp.zeros(p.shape, jnp.float32)
+    return AdamWState(step=jnp.zeros((), jnp.int32),
+                      m=jax.tree.map(zeros, params),
+                      v=jax.tree.map(zeros, params))
+
+
+def adamw_update(grads, state: AdamWState, params, *, lr, b1: float = 0.9,
+                 b2: float = 0.95, eps: float = 1e-8, wd: float = 0.01):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    bc1 = 1.0 - b1 ** t
+    bc2 = 1.0 - b2 ** t
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32)
+        m = b1 * m + (1 - b1) * g
+        v = b2 * v + (1 - b2) * g * g
+        u = (m / bc1) / (jnp.sqrt(v / bc2) + eps)
+        if p.ndim >= 2:                 # decoupled wd on matrices only
+            u = u + wd * p.astype(jnp.float32)
+        return ((p.astype(jnp.float32) - lr * u).astype(p.dtype), m, v)
+
+    out = jax.tree.map(upd, params, grads, state.m, state.v)
+    leaf = lambda x: isinstance(x, tuple)
+    pick = lambda i: jax.tree.map(lambda o: o[i], out, is_leaf=leaf)
+    return pick(0), AdamWState(step=step, m=pick(1), v=pick(2))
+
+
+# -- Adafactor ---------------------------------------------------------------
+
+
+def _factored(p) -> bool:
+    return p.ndim >= 2
+
+
+def adafactor_init(params) -> AdafactorState:
+    vr = jax.tree.map(
+        lambda p: jnp.zeros(p.shape[:-1], jnp.float32) if _factored(p)
+        else _empty(), params)
+    vc = jax.tree.map(
+        lambda p: jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32)
+        if _factored(p) else _empty(), params)
+    v = jax.tree.map(
+        lambda p: _empty() if _factored(p) else jnp.zeros(p.shape,
+                                                          jnp.float32),
+        params)
+    return AdafactorState(step=jnp.zeros((), jnp.int32), vr=vr, vc=vc, v=v)
+
+
+def adafactor_update(grads, state: AdafactorState, params, *, lr,
+                     decay: float = 0.8, eps: float = 1e-30,
+                     clip: float = 1.0):
+    step = state.step + 1
+    t = step.astype(jnp.float32)
+    beta = 1.0 - jnp.power(t, -decay)
+
+    def upd(p, g, vr, vc, v):
+        g = g.astype(jnp.float32)
+        g2 = g * g + eps
+        if _factored(p):
+            vr = beta * vr + (1 - beta) * jnp.mean(g2, axis=-1)
+            vc = beta * vc + (1 - beta) * jnp.mean(g2, axis=-2)
+            rf = vr / jnp.maximum(jnp.mean(vr, axis=-1, keepdims=True), eps)
+            u = g * jax.lax.rsqrt(jnp.maximum(rf[..., None], eps)) \
+                * jax.lax.rsqrt(jnp.maximum(vc, eps))[..., None, :]
+        else:
+            v = beta * v + (1 - beta) * g2
+            u = g * jax.lax.rsqrt(jnp.maximum(v, eps))
+        rms = jnp.sqrt(jnp.mean(u * u) + 1e-30)         # update clipping
+        u = u / jnp.maximum(1.0, rms / clip)
+        return ((p.astype(jnp.float32) - lr * u).astype(p.dtype), vr, vc, v)
+
+    out = jax.tree.map(upd, params, grads, state.vr, state.vc, state.v)
+    leaf = lambda x: isinstance(x, tuple)
+    pick = lambda i: jax.tree.map(lambda o: o[i], out, is_leaf=leaf)
+    return pick(0), AdafactorState(step=step, vr=pick(1), vc=pick(2),
+                                   v=pick(3))
+
+
+# -- unified front door ------------------------------------------------------
+
+
+def opt_init(kind: str, params):
+    if kind == "adamw":
+        return adamw_init(params)
+    if kind == "adafactor":
+        return adafactor_init(params)
+    raise ValueError(kind)
+
+
+def opt_update(kind: str, grads, state, params, *, lr, **kw):
+    if kind == "adamw":
+        return adamw_update(grads, state, params, lr=lr, **kw)
+    if kind == "adafactor":
+        return adafactor_update(grads, state, params, lr=lr, **kw)
+    raise ValueError(kind)
+
+
+def opt_state_specs(kind: str, param_pspecs, param_shapes):
+    """PartitionSpec tree for the optimizer state, mirroring the params.
+
+    Adafactor's factored accumulators drop the last (vr) / second-to-last
+    (vc) dim, so their specs drop the matching entry; size-0 sentinels are
+    replicated.
+    """
+    from jax.sharding import PartitionSpec as P
+    scalar = P()
+    if kind == "adamw":
+        return AdamWState(step=scalar, m=param_pspecs, v=param_pspecs)
+
+    def drop(spec, shape, which):
+        if len(shape) < 2:
+            return P()
+        ent = list(spec) + [None] * (len(shape) - len(spec))
+        del ent[-1 if which == "vr" else -2]
+        return P(*ent)
+
+    vr = jax.tree.map(lambda s, sh: drop(s, sh.shape, "vr"),
+                      param_pspecs, param_shapes)
+    vc = jax.tree.map(lambda s, sh: drop(s, sh.shape, "vc"),
+                      param_pspecs, param_shapes)
+    v = jax.tree.map(lambda s, sh: P() if len(sh.shape) >= 2 else s,
+                     param_pspecs, param_shapes)
+    return AdafactorState(step=scalar, vr=vr, vc=vc, v=v)
+
+
+def opt_state_shapes(kind: str, param_shapes):
+    """ShapeDtypeStruct tree of the optimizer state (dry-run path)."""
+    f32 = jnp.float32
+    sds = lambda sh: jax.ShapeDtypeStruct(sh, f32)
+    if kind == "adamw":
+        return AdamWState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                          m=jax.tree.map(lambda s: sds(s.shape),
+                                         param_shapes),
+                          v=jax.tree.map(lambda s: sds(s.shape),
+                                         param_shapes))
+    vr = jax.tree.map(lambda s: sds(s.shape[:-1]) if len(s.shape) >= 2
+                      else sds((0,)), param_shapes)
+    vc = jax.tree.map(lambda s: sds(s.shape[:-2] + s.shape[-1:])
+                      if len(s.shape) >= 2 else sds((0,)), param_shapes)
+    v = jax.tree.map(lambda s: sds((0,)) if len(s.shape) >= 2
+                     else sds(s.shape), param_shapes)
+    return AdafactorState(step=jax.ShapeDtypeStruct((), jnp.int32),
+                          vr=vr, vc=vc, v=v)

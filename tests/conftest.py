@@ -1,0 +1,24 @@
+"""Shared fixtures.  NOTE: no XLA_FLAGS here — tests see the single real
+device; the distributed suite spawns subprocesses that set their own
+device-count flag (see tests/test_distributed.py)."""
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+def run_subprocess(code: str, devices: int = 8, timeout: int = 600) -> str:
+    """Run ``code`` in a fresh python with N fake XLA devices."""
+    import os
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=timeout)
+    assert r.returncode == 0, f"subprocess failed:\n{r.stdout}\n{r.stderr}"
+    return r.stdout

@@ -1,0 +1,88 @@
+"""DTW extension (§V of the paper) and generic-vector (embedding) search."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core import dtw as D
+from repro.core import isax, vector
+from repro.data import random_walk
+
+RNG = np.random.default_rng(3)
+
+
+def naive_dtw(a, b, r):
+    n = len(a)
+    INF = np.inf
+    dp = np.full((n + 1, n + 1), INF)
+    dp[0, 0] = 0
+    for i in range(1, n + 1):
+        for j in range(max(1, i - r), min(n, i + r) + 1):
+            c = (a[i - 1] - b[j - 1]) ** 2
+            dp[i, j] = c + min(dp[i - 1, j], dp[i, j - 1], dp[i - 1, j - 1])
+    return dp[n, n]
+
+
+@pytest.mark.parametrize("r", [2, 5, 10])
+def test_dtw_band_matches_naive(r):
+    a = RNG.standard_normal(32).astype(np.float32)
+    b = RNG.standard_normal(32).astype(np.float32)
+    got = float(D.dtw_band(jnp.asarray(a), jnp.asarray(b), r))
+    want = naive_dtw(a, b, r)
+    np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4)
+
+
+def test_dtw_zero_distance_to_self():
+    a = jnp.asarray(RNG.standard_normal(64).astype(np.float32))
+    assert float(D.dtw_band(a, a, 5)) < 1e-6
+
+
+def test_lb_keogh_lower_bounds_dtw():
+    r = 5
+    q = RNG.standard_normal((4, 48)).astype(np.float32)
+    x = RNG.standard_normal((32, 48)).astype(np.float32)
+    env = D.query_envelope(jnp.asarray(q), r)
+    lb = np.asarray(D.lb_keogh(env, jnp.asarray(x)))
+    for i in range(4):
+        for j in range(32):
+            d = naive_dtw(q[i], x[j], r)
+            assert lb[i, j] <= d + 1e-3, (i, j, lb[i, j], d)
+
+
+def test_search_dtw_exact_vs_bruteforce():
+    raw = jnp.asarray(random_walk(256, 64, seed=9))
+    qs = jnp.asarray(random_walk(8, 64, seed=10) * 0.9)
+    idx = core.build(raw, capacity=32)
+    got = D.search_dtw(idx, qs, r=6)
+    qz = isax.znorm(qs)
+    xz = isax.znorm(raw)
+    bf = D.dtw_band(qz[:, None, :], xz[None], 6)
+    np.testing.assert_allclose(np.asarray(got.dist),
+                               np.sqrt(np.min(np.asarray(bf), axis=1)),
+                               rtol=1e-4, atol=1e-4)
+    assert np.array_equal(np.asarray(got.idx),
+                          np.argmin(np.asarray(bf), axis=1))
+
+
+def test_vector_index_cosine_nn():
+    """§V application: exact cosine NN over unit-normalized embeddings."""
+    embs = RNG.standard_normal((2048, 64)).astype(np.float32)
+    vidx = vector.build_vector_index(jnp.asarray(embs), capacity=128)
+    q = embs[:8] + 0.01 * RNG.standard_normal((8, 64)).astype(np.float32)
+    res = vector.search_vectors(vidx, jnp.asarray(q))
+    # brute-force cosine
+    en = embs / np.linalg.norm(embs, axis=1, keepdims=True)
+    qn = q / np.linalg.norm(q, axis=1, keepdims=True)
+    want = np.argmax(qn @ en.T, axis=1)
+    assert np.array_equal(np.asarray(res.idx), want)
+
+
+def test_vector_index_euclidean_mode():
+    embs = RNG.standard_normal((512, 32)).astype(np.float32) * 3
+    vidx = vector.build_vector_index(jnp.asarray(embs), capacity=64,
+                                     unit_norm=False)
+    res = vector.search_vectors(vidx, jnp.asarray(embs[:4]),
+                                unit_norm=False)
+    assert np.array_equal(np.asarray(res.idx), np.arange(4))
+    assert np.allclose(np.asarray(res.dist), 0, atol=1e-2)

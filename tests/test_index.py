@@ -1,0 +1,89 @@
+"""Index construction: one-shot == streaming (ParIS+ path), padding, ids."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+import repro.core as core
+from repro.core import isax
+from repro.core.index import flat_view
+from repro.data import ChunkedLoader
+from repro.data.loader import IncrementalBuilder, build_streaming
+from repro.data import random_walk
+
+
+def test_streaming_equals_oneshot():
+    raw = random_walk(1000, 128, seed=11)
+    a = core.build(jnp.asarray(raw), capacity=64)
+    b = build_streaming(raw, chunk=256, capacity=64)
+    for f in ("raw", "slo", "shi", "elo", "ehi", "ids"):
+        np.testing.assert_allclose(np.asarray(getattr(a, f)),
+                                   np.asarray(getattr(b, f)),
+                                   rtol=1e-5, atol=1e-5, err_msg=f)
+
+
+def test_loader_chunking_covers_everything():
+    raw = random_walk(700, 64, seed=2)
+    loader = ChunkedLoader(raw, chunk=256)
+    seen = sum(c.shape[0] for c in loader)
+    assert seen == 700
+    assert len(loader) == 3
+
+
+def test_ids_are_permutation_with_padding():
+    raw = jnp.asarray(random_walk(333, 64, seed=3))
+    idx = core.build(raw, capacity=50)
+    ids = np.asarray(idx.ids).ravel()
+    real = ids[ids >= 0]
+    assert sorted(real.tolist()) == list(range(333))
+    assert (ids == -1).sum() == idx.n_blocks * idx.capacity - 333
+
+
+def test_padding_never_wins():
+    raw = jnp.asarray(random_walk(100, 64, seed=4))
+    idx = core.build(raw, capacity=64)      # forces padding
+    res = core.search(idx, raw[:8])
+    assert (np.asarray(res.idx) >= 0).all()
+
+
+def test_envelopes_planar_match_members():
+    raw = jnp.asarray(random_walk(256, 64, seed=5))
+    idx = core.build(raw, capacity=32)
+    elo = np.asarray(idx.elo)               # (w, B)
+    slo = np.asarray(idx.slo)               # (B, w, C)
+    ids = np.asarray(idx.ids)
+    for b in range(idx.n_blocks):
+        real = ids[b] >= 0
+        if real.any():
+            np.testing.assert_allclose(
+                elo[:, b], slo[b][:, real].min(axis=1), rtol=1e-6)
+
+
+def test_flat_view_roundtrip():
+    raw = jnp.asarray(random_walk(256, 64, seed=6))
+    idx = core.build(raw, capacity=32)
+    fv = flat_view(idx)
+    assert fv.raw.shape == (idx.n_blocks * idx.capacity, 64)
+    ids = np.asarray(fv.ids)
+    assert sorted(ids[ids >= 0].tolist()) == list(range(256))
+
+
+def test_capacity_larger_than_dataset():
+    raw = jnp.asarray(random_walk(10, 64, seed=7))
+    idx = core.build(raw, capacity=512)
+    assert idx.capacity == 10
+    res = core.search(idx, raw[:2])
+    assert np.array_equal(np.asarray(res.idx), [0, 1])
+
+
+@pytest.mark.parametrize("w,card", [(8, 16), (16, 256), (32, 4)])
+def test_build_other_cardinalities(w, card):
+    raw = jnp.asarray(random_walk(128, 64, seed=8))
+    idx = core.build(raw, capacity=16, w=w, card=card)
+    from repro.core.ucr import search_scan
+    res = core.search(idx, raw[:4])
+    want = search_scan(raw, raw[:4])
+    assert np.array_equal(np.asarray(res.idx), np.asarray(want.idx))
+    # self-queries: near-zero distances carry O(sqrt(eps)) noise in the
+    # expanded-form L2 (see kernels/batch_l2.py), so tolerance is absolute
+    np.testing.assert_allclose(np.asarray(res.dist), np.asarray(want.dist),
+                               atol=2e-2)

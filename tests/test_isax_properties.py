@@ -1,0 +1,145 @@
+"""Hypothesis property tests for the paper's core invariants.
+
+The whole exactness argument of ParIS/MESSI rests on: LB(q, S) <= ED(q, S)
+for every stored series (no false dismissals), and block envelopes only ever
+WIDEN per-series bounds.  These are the system invariants; everything else
+(pruning order, scheduling) is performance.
+"""
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core import index as index_lib
+from repro.core import isax
+
+W = 16
+
+
+@st.composite
+def series_batch(draw):
+    """Seed-driven batches: mixture of walks, scaled noise, bursts, and
+    near-constant rows — broad coverage without entropy-heavy float lists."""
+    seed = draw(st.integers(0, 2 ** 31 - 1))
+    n = draw(st.integers(2, 24))
+    kind = draw(st.sampled_from(["walk", "noise", "burst", "flatish"]))
+    scale = draw(st.sampled_from([1e-3, 1.0, 50.0]))
+    r = np.random.default_rng(seed)
+    if kind == "walk":
+        x = np.cumsum(r.standard_normal((n, 64)), axis=1)
+    elif kind == "noise":
+        x = r.standard_normal((n, 64))
+    elif kind == "burst":
+        x = np.zeros((n, 64))
+        pos = r.integers(0, 60, n)
+        for i in range(n):
+            x[i, pos[i]:pos[i] + 4] = r.standard_normal(4) * 5
+        x += 0.01 * r.standard_normal((n, 64))
+    else:
+        x = np.ones((n, 64)) * r.standard_normal((n, 1))
+        x[:, 0] += 1.0          # keep znorm well-defined
+    return (x * scale).astype(np.float32)
+
+
+@settings(max_examples=60, deadline=None)
+@given(series_batch(), series_batch())
+def test_lower_bound_never_exceeds_distance(xs, qs):
+    """MINDIST(q_paa, bounds(S)) <= ||znorm(q) - znorm(S)||^2 (up to f32
+    noise, which scales with the distance magnitude)."""
+    x = isax.znorm(jnp.asarray(xs))
+    q = isax.znorm(jnp.asarray(qs))
+    _, _, bounds = isax.summarize(x, normalize=False)
+    q_paa = isax.paa(q)
+    lb = np.asarray(
+        isax.mindist_paa_bounds_sq(q_paa[:, None, :], bounds[None], 64))
+    d = np.asarray(jnp.sum((q[:, None, :] - x[None]) ** 2, axis=-1))
+    assert np.all(lb <= d * (1 + 1e-5) + 1e-3), float(np.max(lb - d))
+
+
+@settings(max_examples=50, deadline=None)
+@given(series_batch())
+def test_paa_lb_tighter_than_symbol_bounds(xs):
+    """(n/w)||q_paa - s_paa||^2 >= MINDIST via regions (PAA is the limit of
+    infinite cardinality) — and both lower-bound the true distance."""
+    x = isax.znorm(jnp.asarray(xs))
+    p, s, bounds = isax.summarize(x, normalize=False)
+    q = x[:1]
+    q_paa = p[:1]
+    lb_region = isax.mindist_paa_bounds_sq(q_paa[:, None, :], bounds[None],
+                                           64)
+    lb_paa = isax.paa_lb_sq(q_paa[:, None, :], p[None], 64)
+    assert np.all(np.asarray(lb_region) <= np.asarray(lb_paa) + 1e-3)
+
+
+@settings(max_examples=30, deadline=None)
+@given(series_batch())
+def test_envelope_contains_members(xs):
+    """Block envelope MINDIST <= every member's MINDIST (no false dismissal
+    at the block level)."""
+    x = jnp.asarray(xs)
+    idx = index_lib.build(x, capacity=4)
+    q = isax.znorm(x[:3])
+    q_paa = isax.paa(q)
+    # envelope lb per block
+    env_lb = isax.mindist_paa_bounds_sq(
+        q_paa[:, None, :],
+        jnp.stack([idx.elo.T, idx.ehi.T], axis=-1)[None], idx.n)
+    # member lb per block: (Q, B, C)
+    member_bounds = jnp.stack([idx.slo, idx.shi], axis=-1)  # (B, w, C, 2)
+    mb = jnp.transpose(member_bounds, (0, 2, 1, 3))         # (B, C, w, 2)
+    mem_lb = isax.mindist_paa_bounds_sq(
+        q_paa[:, None, None, :], mb[None], idx.n)           # (Q, B, C)
+    real = np.asarray(idx.ids) >= 0
+    e = np.asarray(env_lb)[:, :, None]
+    m = np.asarray(mem_lb)
+    viol = (e > m * (1 + 1e-5) + 1e-3) & real[None]
+    assert not viol.any(), float(np.max((e - m) * real[None]))
+
+
+@settings(max_examples=50, deadline=None)
+@given(series_batch())
+def test_sax_symbols_match_breakpoints(xs):
+    """symbol s  <=>  value in [bp[s-1], bp[s])  (quantization correctness)."""
+    x = isax.znorm(jnp.asarray(xs))
+    p = isax.paa(x)
+    s = isax.sax_from_paa(p)
+    lo_t, hi_t = isax.region_tables(256)
+    lo = np.asarray(lo_t)[np.asarray(s)]
+    hi = np.asarray(hi_t)[np.asarray(s)]
+    pv = np.asarray(p)
+    assert np.all(pv >= lo - 1e-6)
+    assert np.all(pv <= hi + 1e-6)
+
+
+@settings(max_examples=20, deadline=None)
+@given(series_batch())
+def test_sort_order_groups_words(xs):
+    """The interleaved sort puts identical iSAX words in contiguous runs."""
+    x = jnp.asarray(xs)
+    _, s, _ = isax.summarize(x)
+    order = np.asarray(isax.sort_order(s))
+    words = [tuple(row) for row in np.asarray(s)[order]]
+    seen = set()
+    prev = None
+    for wrd in words:
+        if wrd != prev:
+            assert wrd not in seen, "word re-appeared after a break"
+            seen.add(wrd)
+            prev = wrd
+
+
+def test_znorm_properties():
+    x = jnp.asarray(np.random.default_rng(0)
+                    .standard_normal((16, 128)).astype(np.float32) * 7 + 3)
+    z = isax.znorm(x)
+    np.testing.assert_allclose(np.asarray(jnp.mean(z, axis=1)), 0,
+                               atol=1e-4)
+    np.testing.assert_allclose(np.asarray(jnp.std(z, axis=1)), 1, atol=1e-3)
+
+
+def test_breakpoints_equiprobable():
+    bps = isax.breakpoints(256)
+    assert len(bps) == 255
+    assert np.all(np.diff(bps) > 0)
+    from scipy.stats import norm
+    np.testing.assert_allclose(norm.cdf(bps),
+                               np.arange(1, 256) / 256, atol=1e-6)

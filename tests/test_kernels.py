@@ -1,0 +1,141 @@
+"""Per-kernel shape/dtype sweeps: Pallas (interpret=True) vs the pure-jnp
+oracles in kernels/ref.py."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import isax
+from repro.kernels import ref
+from repro.kernels.batch_l2 import batch_l2
+from repro.kernels.isax_summarize import isax_summarize
+from repro.kernels.lb_scan import lb_scan
+
+RNG = np.random.default_rng(42)
+
+
+def series(n, length, dtype=np.float32):
+    return jnp.asarray(
+        np.cumsum(RNG.standard_normal((n, length)), axis=1).astype(dtype))
+
+
+@pytest.mark.parametrize("n,length", [(8, 64), (100, 128), (256, 256),
+                                      (1000, 512), (37, 96)])
+@pytest.mark.parametrize("w", [8, 16, 32])
+def test_summarize_sweep(n, length, w):
+    if length % w:
+        pytest.skip("length % w != 0")
+    x = series(n, length)
+    paa_k, sax_k = isax_summarize(x, w=w, card=256, interpret=True)
+    xn = isax.znorm(x)
+    paa_r, sax_r = ref.paa_sax_ref(xn, w, 256)
+    np.testing.assert_allclose(np.asarray(paa_k), np.asarray(paa_r),
+                               rtol=1e-5, atol=1e-5)
+    assert np.array_equal(np.asarray(sax_k), np.asarray(sax_r))
+
+
+@pytest.mark.parametrize("card", [4, 16, 64, 256])
+def test_summarize_cardinalities(card):
+    x = series(64, 128)
+    _, sax_k = isax_summarize(x, w=16, card=card, interpret=True)
+    xn = isax.znorm(x)
+    _, sax_r = ref.paa_sax_ref(xn, 16, card)
+    assert np.array_equal(np.asarray(sax_k), np.asarray(sax_r))
+    assert int(jnp.max(sax_k)) < card and int(jnp.min(sax_k)) >= 0
+
+
+@pytest.mark.parametrize("q,n", [(1, 128), (8, 512), (16, 1000), (5, 2048),
+                                 (64, 64)])
+@pytest.mark.parametrize("w", [8, 16])
+def test_lb_scan_sweep(q, n, w):
+    x = series(n, 128)
+    qs = series(q, 128)
+    _, sax, bounds = isax.summarize(x, w=w)
+    q_paa = isax.paa(isax.znorm(qs), w)
+    lo = bounds[..., 0].T
+    hi = bounds[..., 1].T
+    got = lb_scan(q_paa, lo, hi, n=128, interpret=True)
+    want = ref.lb_series_ref(q_paa, bounds, 128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("tile_q,tile_n", [(2, 128), (8, 512), (16, 256)])
+def test_lb_scan_tilings(tile_q, tile_n):
+    x = series(300, 128)
+    qs = series(7, 128)
+    _, _, bounds = isax.summarize(x)
+    q_paa = isax.paa(isax.znorm(qs), 16)
+    got = lb_scan(q_paa, bounds[..., 0].T, bounds[..., 1].T, n=128,
+                  tile_q=tile_q, tile_n=tile_n, interpret=True)
+    want = ref.lb_series_ref(q_paa, bounds, 128)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+@pytest.mark.parametrize("q,n,length", [(4, 128, 64), (16, 512, 256),
+                                        (3, 100, 128), (128, 128, 32)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_batch_l2_sweep(q, n, length, dtype):
+    x = series(n, length).astype(dtype)
+    qs = series(q, length).astype(dtype)
+    got = batch_l2(qs, x, interpret=True)
+    want = ref.batch_l2_exact_ref(qs.astype(jnp.float32),
+                                  x.astype(jnp.float32))
+    tol = 1e-3 if dtype == jnp.float32 else 0.3
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=tol, atol=tol * np.max(np.asarray(want)))
+
+
+def test_batch_l2_identity_zero():
+    x = series(32, 128)
+    d = batch_l2(x[:4], x, interpret=True)
+    for i in range(4):
+        assert float(d[i, i]) <= 1e-2
+        assert int(jnp.argmin(d[i])) == i
+
+
+@pytest.mark.parametrize("b,s,d,n", [(1, 16, 8, 4), (2, 32, 100, 16),
+                                     (1, 64, 128, 8)])
+def test_ssm_scan_kernel_vs_ref(b, s, d, n):
+    from repro.kernels.ssm_scan import ssm_scan
+    mk = lambda *sh: jnp.asarray(
+        RNG.standard_normal(sh).astype(np.float32) * 0.5)
+    xc, dt = mk(b, s, d), jnp.abs(mk(b, s, d)) * 0.2
+    bm, cm = mk(b, s, n), mk(b, s, n)
+    a_log = -jnp.abs(mk(d, n)) - 0.1
+    got = ssm_scan(xc, dt, bm, cm, a_log, tile_d=32, interpret=True)
+    want = ref.ssm_scan_ref(xc, dt, bm, cm, a_log)
+    np.testing.assert_allclose(np.asarray(got), np.asarray(want),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ssm_scan_matches_mamba_layer_math():
+    """The kernel's recurrence == models/mamba's (with matching coeffs)."""
+    from repro.kernels.ssm_scan import ssm_scan
+    from repro.models import mamba, common as C
+
+    class Cfg:
+        n_layers = 1
+        d_model = 32
+        ssm_state = 8
+        ssm_conv = 4
+    p = jax.tree.map(lambda a: a[0],
+                     C.build_params(mamba.param_specs(Cfg, 48),
+                                    jax.random.PRNGKey(1)))
+    x = jnp.asarray(RNG.standard_normal((2, 24, 32)).astype(np.float32) * .2)
+    xz = jnp.einsum("bsd,de->bse", x, p["w_in"])
+    xi = xz[..., :48]
+    xc = jax.nn.silu(mamba._conv_causal(
+        xi, p["conv"], jnp.zeros((2, 3, 48), x.dtype)))
+    dt = jax.nn.softplus(xc * p["w_dt"][..., 0] + p["dt_bias"])
+    bm = jnp.einsum("bsd,dn->bsn", xc, p["w_b"])
+    cm = jnp.einsum("bsd,dn->bsn", xc, p["w_c"])
+    a_log = -jnp.exp(p["a_log"].astype(jnp.float32))
+    y_k = ssm_scan(xc, dt, bm, cm, a_log, tile_d=16, interpret=True)
+    # reference: h-scan part of mamba (before D-skip/gate/out-proj)
+    a, bb, ct = mamba._ssm_coeffs(xc, p)
+    hs, _ = mamba._chunk_scan(a, bb, jnp.zeros((2, 48, 8), jnp.float32))
+    y_r = jnp.einsum("bsdn,bsn->bsd", hs, ct.astype(jnp.float32))
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
+                               rtol=1e-3, atol=1e-3)

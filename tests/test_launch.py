@@ -1,0 +1,87 @@
+"""Launch layer: spec construction (no devices needed) + one real dry-run
+cell on 512 fake devices as an integration test (subprocess)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from conftest import run_subprocess
+from repro.configs import get_config, list_archs, SHAPES
+from repro.launch.specs import (batch_specs, cache_shapes, param_shapes,
+                                runnable_shapes)
+
+
+def test_batch_specs_shapes():
+    cfg = get_config("h2o-danube-1.8b")
+    b = batch_specs(cfg, SHAPES["train_4k"])
+    assert b["tokens"].shape == (256, 4096)
+    cfg = get_config("whisper-medium")
+    b = batch_specs(cfg, SHAPES["prefill_32k"])
+    assert b["frames"].shape == (32, 32768, 1024)
+    assert b["dec_tokens"].shape == (32, 448)
+    cfg = get_config("pixtral-12b")
+    b = batch_specs(cfg, SHAPES["train_4k"])
+    assert b["patches"].shape == (256, 1024, 5120)
+    assert b["tokens"].shape == (256, 4096 - 1024)
+
+
+def test_param_shapes_no_allocation():
+    cfg = get_config("nemotron-4-340b")
+    shapes = param_shapes(cfg)
+    total = sum(np.prod(s.shape) for s in jax.tree.leaves(shapes))
+    assert 2.8e11 < total < 4.0e11          # ~340B without allocating
+
+
+def test_cache_shapes_swa_ring_vs_full():
+    cfg = get_config("gemma3-27b")
+    cs = cache_shapes(cfg, 4, 32768)
+    from repro.models.transformer import segments
+    segs = segments(cfg)
+    for seg, c in zip(segs, cs):
+        want_s = 1024 if seg.kind == "swa" else 32768
+        assert c["k"].shape == (seg.size, 4, want_s, 16, 128), seg
+
+
+def test_runnable_shapes_long_rule():
+    """long_500k only for sub-quadratic archs (assignment rule)."""
+    runs_long = {a for a in list_archs()
+                 if "long_500k" in runnable_shapes(get_config(a))}
+    assert runs_long == {"h2o-danube-1.8b", "gemma3-27b", "hymba-1.5b",
+                         "rwkv6-7b"}
+    # every arch runs the other three cells
+    for a in list_archs():
+        rs = runnable_shapes(get_config(a))
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= set(rs)
+
+
+def test_total_cell_count_is_34():
+    total = sum(len(runnable_shapes(get_config(a))) for a in list_archs())
+    assert total == 34                      # 40 assigned minus 6 long skips
+
+
+def test_mesh_function_shapes():
+    run_subprocess("""
+from repro.launch.mesh import make_production_mesh, data_axes_of
+m1 = make_production_mesh()
+assert m1.devices.shape == (16, 16) and m1.axis_names == ("data", "model")
+m2 = make_production_mesh(multi_pod=True)
+assert m2.devices.shape == (2, 16, 16)
+assert m2.axis_names == ("pod", "data", "model")
+assert data_axes_of(m2) == ("pod", "data")
+print("OK")
+""", devices=512)
+
+
+@pytest.mark.slow
+def test_dryrun_one_cell_end_to_end():
+    """Integration: a real 512-device lower+compile of one full-size cell."""
+    out = run_subprocess("""
+from repro.launch.dryrun import run_cell
+rec = run_cell("h2o-danube-1.8b", "decode_32k", multi_pod=True)
+assert rec["status"] == "ok"
+assert rec["chips"] == 512
+assert rec["bytes_per_device"]["peak"] > 0
+assert rec["flops_per_dev"] > 0
+print("OK")
+""", devices=512, timeout=900)
+    assert "OK" in out

@@ -1,0 +1,161 @@
+"""Exactness and behaviour of the three search systems (MESSI / ParIS / UCR)
+against each other — the paper's §IV comparisons as correctness tests."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import repro.core as core
+from repro.core import isax
+from repro.core.paris import search_paris, search_flat
+from repro.core.index import build_flat
+from repro.core.ucr import search_scan
+from repro.data import random_walk, sald_like, seismic_like
+
+RNG = np.random.default_rng(7)
+
+
+def dataset(kind: str, n=1024, length=128):
+    if kind == "walk":
+        return random_walk(n, length, seed=3)
+    if kind == "sald":
+        return sald_like(n, length, seed=4)
+    return seismic_like(n, length, seed=5)
+
+
+@pytest.mark.parametrize("kind", ["walk", "sald", "seismic"])
+@pytest.mark.parametrize("capacity", [64, 256])
+def test_messi_equals_oracle(kind, capacity):
+    raw = jnp.asarray(dataset(kind))
+    qs = jnp.asarray(dataset(kind)[RNG.choice(1024, 8, replace=False)]
+                     + 0.1 * RNG.standard_normal((8, 128)).astype(np.float32))
+    idx = core.build(raw, capacity=capacity)
+    got = core.search(idx, qs)
+    want = search_scan(raw, qs)
+    np.testing.assert_allclose(np.asarray(got.dist), np.asarray(want.dist),
+                               rtol=1e-3, atol=5e-3)
+    assert np.array_equal(np.asarray(got.idx), np.asarray(want.idx))
+
+
+@pytest.mark.parametrize("kind", ["walk", "sald"])
+def test_paris_equals_oracle(kind):
+    raw = jnp.asarray(dataset(kind))
+    qs = jnp.asarray(dataset(kind)[:6])
+    idx = core.build(raw, capacity=128)
+    got = search_paris(idx, qs, chunk=256)
+    want = search_scan(raw, qs)
+    np.testing.assert_allclose(np.asarray(got.dist), np.asarray(want.dist),
+                               rtol=1e-3, atol=5e-3)
+    assert np.array_equal(np.asarray(got.idx), np.asarray(want.idx))
+
+
+def test_paris_flat_standalone():
+    """ParIS without a block index (pure SAX-array path, as in the paper)."""
+    raw = jnp.asarray(dataset("walk", 512))
+    qs = jnp.asarray(dataset("walk", 512)[:4])
+    fidx = build_flat(raw)
+    got = search_flat(fidx, qs, chunk=128)
+    want = search_scan(raw, qs)
+    np.testing.assert_allclose(np.asarray(got.dist), np.asarray(want.dist),
+                               rtol=1e-3, atol=5e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 60),
+       st.sampled_from([32, 64, 128]))
+def test_messi_exact_hypothesis(seed, n_series, length):
+    """Random shapes/seeds: MESSI always returns the true 1-NN."""
+    r = np.random.default_rng(seed)
+    raw = jnp.asarray(
+        np.cumsum(r.standard_normal((n_series, length)), axis=1)
+        .astype(np.float32))
+    qs = jnp.asarray(
+        np.cumsum(r.standard_normal((3, length)), axis=1).astype(np.float32))
+    idx = core.build(raw, capacity=8)
+    got = core.search(idx, qs, blocks_per_iter=2)
+    want = search_scan(raw, qs)
+    np.testing.assert_allclose(np.asarray(got.dist), np.asarray(want.dist),
+                               rtol=1e-3, atol=5e-3)
+
+
+def test_initial_bsf_seeding_preserves_distance():
+    """Seeding with a global BSF must not change the distance (only the id
+    may become -2 = 'lives in another shard')."""
+    raw = jnp.asarray(dataset("walk", 512))
+    qs = jnp.asarray(dataset("walk", 512)[:4])
+    idx = core.build(raw, capacity=64)
+    base = core.search(idx, qs)
+    seeded = core.search(idx, qs, initial_bsf=jnp.asarray(base.dist) ** 2
+                         + 1e-3)
+    np.testing.assert_allclose(np.asarray(seeded.dist),
+                               np.asarray(base.dist), rtol=1e-5, atol=1e-5)
+
+
+def test_lb_filter_toggle_same_answer():
+    raw = jnp.asarray(dataset("walk", 512))
+    qs = jnp.asarray(dataset("walk", 512)[:4])
+    idx = core.build(raw, capacity=64)
+    a = core.search(idx, qs, lb_filter=True)
+    b = core.search(idx, qs, lb_filter=False)
+    np.testing.assert_allclose(np.asarray(a.dist), np.asarray(b.dist),
+                               rtol=1e-5, atol=1e-5)
+    # with the filter on, strictly fewer (or equal) real distances computed
+    assert (np.asarray(a.stats.series_refined)
+            <= np.asarray(b.stats.series_refined)).all()
+
+
+def test_deadline_gives_anytime_upper_bound():
+    raw = jnp.asarray(dataset("walk", 2048))
+    qs = jnp.asarray(dataset("walk", 2048)[:4] * 1.01)
+    idx = core.build(raw, capacity=32)
+    exact = core.search(idx, qs)
+    rough = core.search(idx, qs, deadline_blocks=2)
+    assert (np.asarray(rough.dist) >= np.asarray(exact.dist) - 1e-5).all()
+    assert (np.asarray(rough.stats.blocks_visited)
+            <= np.asarray(exact.stats.blocks_visited)).all()
+
+
+def test_pruning_hierarchy_matches_paper():
+    """The paper's claim: MESSI refines fewer series than ParIS, both far
+    fewer than the full scan (Fig. 9/12 mechanism)."""
+    raw = jnp.asarray(dataset("walk", 4096))
+    qs = jnp.asarray(dataset("walk", 4096)[:8] * 1.001)
+    idx = core.build(raw, capacity=128)
+    messi = core.search(idx, qs)
+    paris = search_paris(idx, qs)
+    ucr = search_scan(raw, qs)
+    m = float(np.mean(np.asarray(messi.stats.series_refined)))
+    p = float(np.mean(np.asarray(paris.stats.series_refined)))
+    u = float(np.mean(np.asarray(ucr.stats.series_refined)))
+    assert m <= p <= u
+    assert m < 0.25 * u, f"MESSI refined {m} of {u} — pruning broken?"
+
+
+def test_batch_of_one_and_many():
+    raw = jnp.asarray(dataset("walk", 256))
+    idx = core.build(raw, capacity=32)
+    one = core.search(idx, raw[:1])
+    many = core.search(idx, raw[:16])
+    assert int(one.idx[0]) == 0
+    assert np.array_equal(np.asarray(many.idx), np.arange(16))
+    assert np.allclose(np.asarray(many.dist), 0, atol=1e-2)
+
+
+@pytest.mark.parametrize("kind", ["walk", "sald", "seismic"])
+def test_block_major_equals_oracle(kind):
+    from repro.core.search import search_block_major
+    raw = jnp.asarray(dataset(kind))
+    qs = jnp.asarray(dataset(kind)[RNG.choice(1024, 8, replace=False)]
+                     + 0.1 * RNG.standard_normal((8, 128)).astype(np.float32))
+    idx = core.build(raw, capacity=64)
+    got = search_block_major(idx, qs)
+    want = search_scan(raw, qs)
+    assert np.array_equal(np.asarray(got.idx), np.asarray(want.idx))
+    np.testing.assert_allclose(np.asarray(got.dist), np.asarray(want.dist),
+                               rtol=1e-3, atol=5e-3)
+    # seeded variant keeps distances
+    seeded = search_block_major(idx, qs,
+                                initial_bsf=jnp.asarray(got.dist) ** 2
+                                + 1e-3)
+    np.testing.assert_allclose(np.asarray(seeded.dist),
+                               np.asarray(got.dist), rtol=1e-5, atol=1e-5)

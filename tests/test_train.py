@@ -1,0 +1,148 @@
+"""Training substrate: convergence, fault tolerance, optimizers, checkpoint,
+gradient compression."""
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config
+from repro.models import common, transformer as T
+from repro.train import (Checkpointer, make_train_step, opt_init)
+from repro.train import compression, optimizer as opt_lib
+
+KEY = jax.random.PRNGKey(0)
+RNG = np.random.default_rng(0)
+
+
+def patterned_batch(cfg, b=8, s=64):
+    start = RNG.integers(0, cfg.vocab, (b, 1))
+    toks = (start + 7 * np.arange(s)[None, :]) % cfg.vocab
+    return {"tokens": jnp.asarray(toks, dtype=jnp.int32)}
+
+
+def test_loss_decreases():
+    cfg = get_config("h2o-danube-1.8b", smoke=True)
+    params = common.build_params(T.param_specs(cfg), KEY)
+    opt = opt_init(cfg.optimizer, params)
+    step = jax.jit(make_train_step(cfg, base_lr=1e-3, warmup=5,
+                                   total_steps=100, microbatch=1))
+    losses = []
+    for _ in range(40):
+        params, opt, m = step(params, opt, patterned_batch(cfg))
+        losses.append(float(m["loss"]))
+    assert losses[-1] < 0.6 * losses[0], losses[::10]
+
+
+def test_nan_step_skipped_params_intact():
+    cfg = get_config("h2o-danube-1.8b", smoke=True)
+    params = common.build_params(T.param_specs(cfg), KEY)
+    params["embed"] = params["embed"].at[0, 0].set(jnp.nan)
+    opt = opt_init(cfg.optimizer, params)
+    step = jax.jit(make_train_step(cfg, microbatch=1))
+    batch = patterned_batch(cfg)
+    batch["tokens"] = batch["tokens"].at[:, 0].set(0)   # hit the NaN row
+    p2, o2, m = step(params, opt, batch)
+    assert int(m["skipped"]) == 1
+    np.testing.assert_array_equal(np.asarray(p2["final_norm"]),
+                                  np.asarray(params["final_norm"]))
+    # step counter still advances (no livelock on a persistent bad batch)
+    assert int(o2.step) == 1
+
+
+def test_microbatch_equivalence():
+    cfg = get_config("h2o-danube-1.8b", smoke=True)
+    params = common.build_params(T.param_specs(cfg), KEY)
+    opt = opt_init(cfg.optimizer, params)
+    batch = patterned_batch(cfg)
+    s1 = jax.jit(make_train_step(cfg, microbatch=1))
+    s4 = jax.jit(make_train_step(cfg, microbatch=4))
+    p1, _, _ = s1(params, opt, batch)
+    p4, _, _ = s4(params, opt, batch)
+    for a, b in zip(jax.tree.leaves(p1), jax.tree.leaves(p4)):
+        np.testing.assert_allclose(np.asarray(a, np.float32),
+                                   np.asarray(b, np.float32), atol=5e-3)
+
+
+def test_adamw_matches_reference_math():
+    p = {"w": jnp.asarray([[1.0, -2.0], [0.5, 3.0]])}
+    g = {"w": jnp.asarray([[0.1, 0.1], [-0.2, 0.3]])}
+    st = opt_lib.adamw_init(p)
+    p2, st2 = opt_lib.adamw_update(g, st, p, lr=0.1, b1=0.9, b2=0.95,
+                                   eps=1e-8, wd=0.0)
+    m = 0.1 * np.asarray(g["w"])
+    v = 0.05 * np.asarray(g["w"]) ** 2
+    want = np.asarray(p["w"]) - 0.1 * (m / 0.1) / (np.sqrt(v / 0.05) + 1e-8)
+    np.testing.assert_allclose(np.asarray(p2["w"]), want, rtol=1e-5)
+
+
+def test_adafactor_memory_is_factored():
+    p = {"w": jnp.zeros((128, 256)), "b": jnp.zeros((64,))}
+    st = opt_lib.adafactor_init(p)
+    assert st.vr["w"].shape == (128,)
+    assert st.vc["w"].shape == (256,)
+    assert st.v["w"].shape == (0,)          # sentinel
+    assert st.v["b"].shape == (64,)
+    g = jax.tree.map(jnp.ones_like, p)
+    p2, st2 = opt_lib.adafactor_update(g, st, p, lr=1e-2)
+    assert all(np.all(np.isfinite(l)) for l in jax.tree.leaves(p2))
+
+
+def test_quadratic_converges_with_int8_compression():
+    """Error feedback keeps a quadratic converging despite 8-bit grads."""
+    w = jnp.asarray([3.0, -2.0, 1.5, 8.0])
+    err = jnp.zeros_like(w)
+    lr = 0.05
+    for i in range(300):
+        g = 2 * w                                   # d/dw ||w||^2
+        q, s, err = compression.compress_with_feedback(g, err)
+        w = w - lr * compression.dequant8(q, s)
+    assert float(jnp.max(jnp.abs(w))) < 1e-2, w
+
+
+def test_quantize_roundtrip_error_bounded():
+    g = jnp.asarray(RNG.standard_normal(1000).astype(np.float32)) * 5
+    q, s = compression.quantize8(g)
+    back = compression.dequant8(q, s)
+    assert float(jnp.max(jnp.abs(back - g))) <= float(s) * 0.5 + 1e-6
+
+
+def test_checkpointer_atomic_keep_and_resume():
+    cfg = get_config("rwkv6-7b", smoke=True)
+    params = common.build_params(T.param_specs(cfg), KEY)
+    opt = opt_init(cfg.optimizer, params)
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, keep=2)
+        for s in (1, 5, 9):
+            ck.save(s, {"params": params, "opt": opt})
+        ck.wait()
+        assert ck.all_steps() == [5, 9]             # keep-last-2
+        tmpl = jax.tree.map(
+            lambda a: jax.ShapeDtypeStruct(a.shape, a.dtype),
+            {"params": params, "opt": opt})
+        back = ck.restore(tmpl)
+        for a, b in zip(jax.tree.leaves(back["params"]),
+                        jax.tree.leaves(params)):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        # no tmp dirs left behind
+        assert not [f for f in os.listdir(d) if f.startswith(".tmp")]
+
+
+def test_checkpointer_rejects_shape_mismatch():
+    with tempfile.TemporaryDirectory() as d:
+        ck = Checkpointer(d, async_writes=False)
+        ck.save(0, {"w": jnp.zeros((4, 4))})
+        with pytest.raises(ValueError):
+            ck.restore({"w": jax.ShapeDtypeStruct((8, 8), jnp.float32)})
+
+
+def test_lr_schedule_shape():
+    from repro.train.step import lr_schedule
+    lrs = [float(lr_schedule(jnp.asarray(s), base_lr=1e-3, warmup=10,
+                             total=100)) for s in range(100)]
+    assert abs(lrs[0] - 1e-4) < 1e-9           # first update is nonzero
+    assert abs(lrs[9] - 1e-3) < 1e-9           # end of warmup
+    assert lrs[99] < lrs[50] < lrs[9]
+    assert lrs[99] >= 1e-4 - 1e-9              # min_frac floor
