@@ -28,7 +28,7 @@ def run(n: int = 20_000, length: int = 128, r: int = 6,
 
     t_index, res = timeit(D.search_dtw, idx, qs, r=r, iters=2)
     t_brute, bf = timeit(brute, qs, iters=2)
-    got = np.asarray(res.idx)
+    got = np.asarray(res.idx[:, 0])
     want = np.argmin(np.asarray(bf), axis=1)
     assert np.array_equal(got, want), "DTW exactness"
     rows = [{

@@ -1,6 +1,6 @@
 """Query-answering benchmarks — the paper's Fig. 8/9/10/11/12 family.
 
-Exact 1-NN latency of the three systems on the three datasets:
+Exact k-NN latency of the three systems on the three datasets:
   UCR-Suite-p  (brute-force MXU scan)      — paper's serial-scan baseline
   ParIS        (flat SAX lower-bound scan) — paper's on-disk index, in-mem
   MESSI        (ordered block pruning)     — paper's in-memory index
@@ -9,8 +9,19 @@ plus the work statistics that explain the ratios (lower bounds computed,
 real distances computed — the paper's §IV mechanism discussion).  The
 paper's headline ratios to compare against: MESSI 55-80x faster than
 UCR-p, 6.4-11x faster than ParIS.
+
+The ``--k`` sweep records the recall-free cost of larger result lists
+(the frontier insert grows as K + chunk; pruning loosens as the k-th
+best distance rises) — the recall/latency trade-off axis of
+EXPERIMENTS.md §Perf:
+
+    PYTHONPATH=src python -m benchmarks.bench_query \\
+        --sizes 100000 --datasets synthetic --k 1,5,32 --out BENCH_query.json
 """
 from __future__ import annotations
+
+import argparse
+import json
 
 import jax
 import jax.numpy as jnp
@@ -19,12 +30,14 @@ import numpy as np
 import repro.core as core
 from benchmarks.common import print_table, timeit, write_rows
 from repro.core.paris import search_paris
+from repro.core.search import search_block_major
 from repro.core.ucr import search_scan
 from repro.data import make_dataset
 
 
 def run(sizes=(100_000, 400_000), datasets=("synthetic", "sald", "seismic"),
-        n_queries: int = 16, capacity: int = 1024) -> list[dict]:
+        n_queries: int = 16, capacity: int = 1024,
+        ks=(1,)) -> list[dict]:
     rows = []
     for ds in datasets:
         for n in sizes:
@@ -38,40 +51,68 @@ def run(sizes=(100_000, 400_000), datasets=("synthetic", "sald", "seismic"),
             raw_j = jnp.asarray(raw)
             idx = core.build(raw_j, capacity=capacity)
 
-            t_ucr, r_ucr = timeit(search_scan, raw_j, qs)
-            t_paris, r_paris = timeit(search_paris, idx, qs)
-            t_messi, r_messi = timeit(core.search, idx, qs)
-            from repro.core.search import search_block_major
-            t_bm, r_bm = timeit(search_block_major, idx, qs)
+            for k in ks:
+                t_ucr, r_ucr = timeit(search_scan, raw_j, qs, k=k)
+                t_paris, r_paris = timeit(search_paris, idx, qs, k=k)
+                t_messi, r_messi = timeit(core.search, idx, qs, k=k)
+                t_bm, r_bm = timeit(search_block_major, idx, qs, k=k)
 
-            assert np.array_equal(np.asarray(r_messi.idx),
-                                  np.asarray(r_ucr.idx)), "exactness!"
-            assert np.array_equal(np.asarray(r_bm.idx),
-                                  np.asarray(r_ucr.idx)), "exactness (bm)!"
-            per_q = lambda t: t / n_queries * 1e3
-            rows.append({
-                "dataset": ds, "n_series": n,
-                "ucr_ms": per_q(t_ucr), "paris_ms": per_q(t_paris),
-                "messi_ms": per_q(t_messi),
-                "messi_bm_ms": per_q(t_bm),
-                "messi_vs_ucr": t_ucr / t_messi,
-                "messi_bm_vs_ucr": t_ucr / t_bm,
-                "messi_vs_paris": t_paris / t_messi,
-                "paris_vs_ucr": t_ucr / t_paris,
-                "refined_frac_messi": float(np.mean(np.asarray(
-                    r_messi.stats.series_refined))) / n,
-                "refined_frac_paris": float(np.mean(np.asarray(
-                    r_paris.stats.series_refined))) / n,
-                "lb_frac_messi": float(np.mean(np.asarray(
-                    r_messi.stats.lb_series))) / n,
-            })
+                assert np.array_equal(np.asarray(r_messi.idx),
+                                      np.asarray(r_ucr.idx)), "exactness!"
+                assert np.array_equal(np.asarray(r_bm.idx),
+                                      np.asarray(r_ucr.idx)), "exactness (bm)!"
+                assert np.array_equal(np.asarray(r_paris.idx),
+                                      np.asarray(r_ucr.idx)), "exactness (paris)!"
+                per_q = lambda t: t / n_queries * 1e3
+                rows.append({
+                    "dataset": ds, "n_series": n, "k": k,
+                    "ucr_ms": per_q(t_ucr), "paris_ms": per_q(t_paris),
+                    "messi_ms": per_q(t_messi),
+                    "messi_bm_ms": per_q(t_bm),
+                    "messi_vs_ucr": t_ucr / t_messi,
+                    "messi_bm_vs_ucr": t_ucr / t_bm,
+                    "messi_vs_paris": t_paris / t_messi,
+                    "paris_vs_ucr": t_ucr / t_paris,
+                    "refined_frac_messi": float(np.mean(np.asarray(
+                        r_messi.stats.series_refined))) / n,
+                    "refined_frac_paris": float(np.mean(np.asarray(
+                        r_paris.stats.series_refined))) / n,
+                    "lb_frac_messi": float(np.mean(np.asarray(
+                        r_messi.stats.lb_series))) / n,
+                })
     print_table("query answering (Fig. 8-12)", rows,
-                ["dataset", "n_series", "ucr_ms", "paris_ms", "messi_ms",
+                ["dataset", "n_series", "k", "ucr_ms", "paris_ms", "messi_ms",
                  "messi_bm_ms", "messi_vs_ucr", "messi_bm_vs_ucr",
                  "refined_frac_messi", "refined_frac_paris"])
     write_rows("query", rows)
     return rows
 
 
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--sizes", default="100000,400000",
+                    help="comma-separated dataset sizes")
+    ap.add_argument("--datasets", default="synthetic,sald,seismic")
+    ap.add_argument("--k", default="1",
+                    help="comma-separated k sweep, e.g. 1,5,32")
+    ap.add_argument("--queries", type=int, default=16)
+    ap.add_argument("--capacity", type=int, default=1024)
+    ap.add_argument("--out", default=None,
+                    help="also write rows to this JSON path "
+                         "(e.g. BENCH_query.json for the CI artifact)")
+    args = ap.parse_args(argv)
+
+    rows = run(sizes=tuple(int(s) for s in args.sizes.split(",")),
+               datasets=tuple(args.datasets.split(",")),
+               n_queries=args.queries, capacity=args.capacity,
+               ks=tuple(int(s) for s in args.k.split(",")))
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"wrote {args.out}")
+    return 0
+
+
 if __name__ == "__main__":
-    run()
+    import sys
+    sys.exit(main())

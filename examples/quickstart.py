@@ -20,10 +20,10 @@ def main():
     print(f"  {index.n_blocks} blocks x {index.capacity} series")
 
     print("searching (exact 1-NN) ...")
-    res = core.search(index, queries)
+    res = core.search(index, queries)  # (Q, 1) results; pass k= for more
     for i in range(10):
-        print(f"  query {i}: nn={int(res.idx[i]):6d} "
-              f"dist={float(res.dist[i]):8.4f} "
+        print(f"  query {i}: nn={int(res.idx[i, 0]):6d} "
+              f"dist={float(res.dist[i, 0]):8.4f} "
               f"refined {int(res.stats.series_refined[i])} / 100000 series")
 
     # cross-check against the brute-force oracle

@@ -49,6 +49,12 @@ def main():
               f"refined {float(np.mean(np.asarray(res.stats.series_refined))):9.0f}"
               f" series/query")
 
+    # -- k-NN result lists (same frontier machinery, any k) -----------------
+    res_k = core.search(index, qs, k=5)
+    print("top-5 ids for query 0:",
+          [int(i) for i in np.asarray(res_k.idx[0])],
+          "dists", [round(float(d), 3) for d in np.asarray(res_k.dist[0])])
+
     # -- anytime mode (straggler mitigation / deadline) ---------------------
     exact = core.search(index, qs)
     rough = core.search(index, qs, deadline_blocks=4)
@@ -59,7 +65,7 @@ def main():
     # -- DTW on the same index (paper SV) -----------------------------------
     res_d = dtw.search_dtw(index, qs[:2], r=6)
     print("DTW 1-NN (same index, banded):",
-          [int(i) for i in np.asarray(res_d.idx)])
+          [int(i) for i in np.asarray(res_d.idx[:, 0])])
 
 
 if __name__ == "__main__":

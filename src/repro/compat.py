@@ -1,0 +1,23 @@
+"""Version-compatibility shims.
+
+``jax.shard_map`` (with its ``check_vma`` flag) is the stable API this
+codebase targets; on the pinned jax 0.4.x in the container it only exists
+as ``jax.experimental.shard_map.shard_map`` with the flag spelled
+``check_rep``.  Every module routes through this wrapper so the call
+sites stay written against the stable API.
+"""
+from __future__ import annotations
+
+import jax
+
+try:                                     # jax >= 0.6: stable API
+    _shard_map = jax.shard_map
+    _CHECK_KW = "check_vma"
+except AttributeError:                   # jax 0.4.x: experimental API
+    from jax.experimental.shard_map import shard_map as _shard_map
+    _CHECK_KW = "check_rep"
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      **{_CHECK_KW: check_vma})

@@ -1,13 +1,14 @@
 """Core library: the paper's contribution (parallel iSAX indexing for exact
 similarity search — ParIS / ParIS+ / MESSI), TPU-native. See DESIGN.md."""
-from repro.core import isax
+from repro.core import frontier, isax
+from repro.core.frontier import Frontier, QuerySetup, SearchStats
 from repro.core.index import BlockIndex, FlatIndex, build, build_flat, flat_view
-from repro.core.search import SearchResult, SearchStats, search
+from repro.core.search import SearchResult, search
 from repro.core.paris import search_flat, search_paris
 from repro.core.ucr import search_scan
 
 __all__ = [
-    "isax", "BlockIndex", "FlatIndex", "build", "build_flat", "flat_view",
-    "SearchResult", "SearchStats", "search", "search_flat", "search_paris",
-    "search_scan",
+    "frontier", "isax", "Frontier", "QuerySetup", "BlockIndex", "FlatIndex",
+    "build", "build_flat", "flat_view", "SearchResult", "SearchStats",
+    "search", "search_flat", "search_paris", "search_scan",
 ]

@@ -4,18 +4,23 @@ The paper's worker threads become mesh devices.  Every device is symmetric
 (as every core is in the paper): the dataset is range-sharded over ALL mesh
 axes flattened, each device builds its own BlockIndex shard completely
 independently (the paper's "workers process distinct subtrees ... no need for
-synchronization"), and query answering uses the two-round shared-BSF
-protocol:
+synchronization"), and query answering uses the two-round shared-frontier
+protocol (the k-NN generalization of the paper's shared BSF):
 
-  round 1: every shard computes its approximate BSF (stage A) ->
-           pmin all-reduce (one scalar per query)           [paper: initial
-           BSF from the query's home leaf, shared variable]
-  round 2: every shard runs the exact ordered-pruning search seeded with the
-           GLOBAL BSF (so pruning is as tight as the paper's shared-memory
-           BSF reads) -> final (dist, id) min-reduce.
+  round 1: every shard seeds its approximate top-k frontier (stage A) ->
+           pmin all-reduce of the k-th-best distance (one scalar per
+           query).  The min over shards of the local k-th best upper
+           bounds the GLOBAL k-th-NN distance (any one shard already
+           holds k candidates at least that good), so it is a valid
+           shared pruning threshold for every shard.
+  round 2: every shard runs the exact ordered-pruning search seeded with
+           that global threshold (so pruning is as tight as the paper's
+           shared-memory BSF reads), producing its local top-k frontier;
+           an all-gather + frontier merge (core/frontier.py) then yields
+           the identical global top-k on every shard.
 
-Total communication per query batch: two scalar all-reduces + one id
-all-reduce — independent of dataset size and device count, which is what
+Total communication per query batch: one (Q,) scalar all-reduce + one
+(Q, K) frontier all-gather — independent of dataset size, which is what
 makes this design runnable at 1000+ nodes.
 """
 from __future__ import annotations
@@ -28,8 +33,9 @@ import jax.numpy as jnp
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 import repro.core.index as index_lib
-from repro.core.search import approximate_search as _approx_search
-from repro.core.search import search as _block_search
+from repro.compat import shard_map
+from repro.core import frontier as frontier_lib
+from repro.core.frontier import Frontier
 from repro.core.index import BlockIndex
 from repro.core.search import SearchResult, SearchStats
 
@@ -76,16 +82,28 @@ def build_sharded(raw: jax.Array, mesh: Mesh, *, w: int = 16, card: int = 256,
 
     out_specs = index_pspecs(mesh, n=n, w=w, card=card, capacity=cap,
                              n_real=shard_n)
-    fn = jax.shard_map(_build, mesh=mesh, in_specs=(P(ax), P(ax)),
+    fn = shard_map(_build, mesh=mesh, in_specs=(P(ax), P(ax)),
                        out_specs=out_specs)
     return fn(raw, ids)
 
 
+def _merge_shards(res: SearchResult, ax) -> tuple[jax.Array, jax.Array]:
+    """All-gather per-shard (Q, K) results and merge into the global top-k.
+
+    Merging happens in the sqrt-distance domain (monotone, so the
+    (dist, id) order is unchanged); empty local slots carry id -1 and are
+    dropped by the frontier insert.
+    """
+    f_g = frontier_lib.all_gather_merge(Frontier(res.dist, res.idx), ax)
+    return f_g.dists, f_g.ids
+
+
 def search_sharded(sharded_index: BlockIndex, queries: jax.Array, mesh: Mesh,
-                   *, blocks_per_iter: int = 4, lb_filter: bool = True,
+                   *, k: int = 1, blocks_per_iter: int = 4,
+                   lb_filter: bool = True,
                    deadline_blocks: int | None = None,
                    schedule: str = "block_major") -> SearchResult:
-    """Exact global 1-NN over all shards. queries (Q, n) replicated.
+    """Exact global k-NN over all shards. queries (Q, n) replicated.
 
     ``schedule``: "block_major" (optimized batched schedule, the production
     default — see search.py) or "query_major" (the paper-faithful
@@ -95,27 +113,24 @@ def search_sharded(sharded_index: BlockIndex, queries: jax.Array, mesh: Mesh,
 
     def _search(local_index, q):
         from repro.core import isax
-        from repro.core.search import search_block_major
+        from repro.core.search import search, search_block_major
         qz = isax.znorm(q).astype(jnp.float32)
         q_paa = isax.paa(qz, local_index.w)
-        # round 1: local approximate BSF -> global scalar all-reduce
-        bsf_l, _, _ = _approx_search(local_index, qz, q_paa)
-        bsf_g = jax.lax.pmin(bsf_l, ax)
-        # round 2: exact local search seeded with the global BSF
+        # round 1: local approximate top-k -> global k-th-best all-reduce
+        f_a, _ = frontier_lib.approximate(local_index, qz, q_paa, k)
+        thr_g = jax.lax.pmin(f_a.threshold(), ax)
+        # round 2: exact local search seeded with the global threshold
         if schedule == "block_major":
-            res = search_block_major(local_index, q, lb_filter=lb_filter,
-                                     initial_bsf=bsf_g,
+            res = search_block_major(local_index, q, k=k, lb_filter=lb_filter,
+                                     initial_threshold=thr_g,
                                      deadline_blocks=deadline_blocks)
         else:
-            res = _block_search(local_index, q,
-                                blocks_per_iter=blocks_per_iter,
-                                lb_filter=lb_filter, initial_bsf=bsf_g,
-                                deadline_blocks=deadline_blocks)
-        # round 3: (dist, id) min-reduce; invalid local ids never win
-        dist_g = jax.lax.pmin(res.dist, ax)
-        big = jnp.int32(jnp.iinfo(jnp.int32).max)
-        cand = jnp.where((res.dist <= dist_g) & (res.idx >= 0), res.idx, big)
-        idx_g = jax.lax.pmin(cand, ax)
+            res = search(local_index, q, k=k,
+                         blocks_per_iter=blocks_per_iter,
+                         lb_filter=lb_filter, initial_threshold=thr_g,
+                         deadline_blocks=deadline_blocks)
+        # merge: all-gather the (Q, K) shard frontiers -> global top-k
+        dist_g, idx_g = _merge_shards(res, ax)
         stats = SearchStats(
             blocks_visited=jax.lax.psum(res.stats.blocks_visited, ax),
             series_refined=jax.lax.psum(res.stats.series_refined, ax),
@@ -128,29 +143,26 @@ def search_sharded(sharded_index: BlockIndex, queries: jax.Array, mesh: Mesh,
         dist=P(None), idx=P(None),
         stats=SearchStats(blocks_visited=P(None), series_refined=P(None),
                           lb_series=P(None), iters=P()))
-    fn = jax.shard_map(_search, mesh=mesh, in_specs=(specs, P(None)),
+    fn = shard_map(_search, mesh=mesh, in_specs=(specs, P(None)),
                        out_specs=out, check_vma=False)
     return fn(sharded_index, queries)
 
 
 def search_sharded_scan(raw: jax.Array, queries: jax.Array, mesh: Mesh,
-                        *, chunk: int = 4096) -> SearchResult:
-    """Distributed UCR-Suite-p brute force (baseline + oracle), same protocol."""
+                        *, k: int = 1, chunk: int = 4096) -> SearchResult:
+    """Distributed UCR-Suite-p brute force (baseline + oracle), same merge."""
     from repro.core import ucr
     ax = _all_axes(mesh)
     n_series = raw.shape[0]
     ids = jnp.arange(n_series, dtype=jnp.int32)
 
     def _scan(local_raw, local_ids, q):
-        res = ucr.search_scan(local_raw, q, chunk=min(chunk, local_raw.shape[0]),
+        res = ucr.search_scan(local_raw, q, k=k,
+                              chunk=min(chunk, local_raw.shape[0]),
                               ids=local_ids)
-        dist_g = jax.lax.pmin(res.dist, ax)
-        big = jnp.int32(jnp.iinfo(jnp.int32).max)
-        cand = jnp.where((res.dist <= dist_g) & (res.idx >= 0), res.idx, big)
-        idx_g = jax.lax.pmin(cand, ax)
-        return dist_g, idx_g
+        return _merge_shards(res, ax)
 
-    fn = jax.shard_map(_scan, mesh=mesh, in_specs=(P(ax), P(ax), P(None)),
+    fn = shard_map(_scan, mesh=mesh, in_specs=(P(ax), P(ax), P(None)),
                        out_specs=(P(None), P(None)), check_vma=False)
     dist, idx = fn(raw, ids, queries)
     qn = queries.shape[0]

@@ -20,6 +20,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import frontier as frontier_lib
 from repro.core import isax
 from repro.core.index import BlockIndex
 from repro.core.search import INF, SearchStats, SearchResult
@@ -109,10 +110,14 @@ def envelope_block_lb(index: BlockIndex, u_paa: jax.Array, l_paa: jax.Array
     return above + below
 
 
-@functools.partial(jax.jit, static_argnames=("r", "blocks_per_iter"))
-def search_dtw(index: BlockIndex, queries: jax.Array, *, r: int,
+@functools.partial(jax.jit, static_argnames=("r", "k", "blocks_per_iter"))
+def search_dtw(index: BlockIndex, queries: jax.Array, *, r: int, k: int = 1,
                blocks_per_iter: int = 2) -> SearchResult:
-    """Exact DTW 1-NN using the unchanged Euclidean BlockIndex."""
+    """Exact DTW k-NN using the unchanged Euclidean BlockIndex.
+
+    Carries the same top-k Frontier as the Euclidean paths; pruning is
+    against the k-th best DTW distance so far (squared domain).
+    """
     q = isax.znorm(queries).astype(jnp.float32)
     qn = q.shape[0]
     b, c, n = index.raw.shape
@@ -121,35 +126,32 @@ def search_dtw(index: BlockIndex, queries: jax.Array, *, r: int,
 
     block_lb = envelope_block_lb(index, u_paa, l_paa)          # (Q, B)
 
-    # stage A: exact DTW against the best block
+    # stage A: exact DTW against the best block seeds the frontier
     b0 = jnp.argmin(block_lb, axis=1)
     blocks0 = index.raw[b0]                                    # (Q, C, n)
     d0 = dtw_band(q[:, None, :], blocks0, r)                   # (Q, C)
-    ids0 = index.ids[b0]
-    d0 = jnp.where(ids0 >= 0, d0, INF)
-    j0 = jnp.argmin(d0, axis=1)
-    bsf = jnp.take_along_axis(d0, j0[:, None], 1)[:, 0]
-    best = jnp.take_along_axis(ids0, j0[:, None], 1)[:, 0]
+    front = frontier_lib.init(qn, k).insert(d0, index.ids[b0])
 
     order = jnp.argsort(block_lb, axis=1)
-    k = min(blocks_per_iter, b)
+    kb = min(blocks_per_iter, b)
 
     def next_lb(ptr):
         nxt = jax.lax.dynamic_slice_in_dim(order, ptr, 1, axis=1)
         return jnp.take_along_axis(block_lb, nxt, axis=1)[:, 0]
 
     def cond(state):
-        ptr, bsf_, _, _ = state
-        return jnp.logical_and(ptr < b, jnp.any(next_lb(ptr) < bsf_))
+        ptr, f, _ = state
+        return jnp.logical_and(ptr < b, jnp.any(next_lb(ptr) < f.threshold()))
 
     def body(state):
-        ptr, bsf_, best_, visited = state
-        idxs = jax.lax.dynamic_slice_in_dim(order, ptr, k, axis=1)
+        ptr, f, visited = state
+        thr = f.threshold()
+        idxs = jax.lax.dynamic_slice_in_dim(order, ptr, kb, axis=1)
         lbs = jnp.take_along_axis(block_lb, idxs, axis=1)
-        active = lbs < bsf_[:, None]
+        active = lbs < thr[:, None]
 
         def refine(cr):
-            bsf_i, best_i, visited_i = cr
+            f_i, visited_i = cr
             blocks = index.raw[idxs]                           # (Q,K,C,n)
             ids = index.ids[idxs]
             # second-level filter: LB_Keogh on raw values (tighter than PAA)
@@ -157,30 +159,27 @@ def search_dtw(index: BlockIndex, queries: jax.Array, *, r: int,
             below = jnp.maximum(l[:, None, None, :] - blocks, 0.0)
             dd = above + below
             lbk = jnp.sum(dd * dd, axis=-1)                    # (Q,K,C)
-            s_act = (lbk < bsf_i[:, None, None]) & active[..., None] \
+            s_act = (lbk < thr[:, None, None]) & active[..., None] \
                     & (ids >= 0)
             d = dtw_band(q[:, None, None, :], blocks, r)       # (Q,K,C)
             d = jnp.where(s_act, d, INF)
-            flat = d.reshape(qn, -1)
-            jj = jnp.argmin(flat, axis=1)
-            dmin = jnp.take_along_axis(flat, jj[:, None], 1)[:, 0]
-            cid = jnp.take_along_axis(ids.reshape(qn, -1), jj[:, None], 1)[:, 0]
-            better = dmin < bsf_i
-            return (jnp.where(better, dmin, bsf_i),
-                    jnp.where(better, cid, best_i),
+            f_n = f_i.insert(d.reshape(qn, -1),
+                             jnp.where(s_act, ids, -1).reshape(qn, -1))
+            return (f_n,
                     visited_i + jnp.sum(active, axis=1, dtype=jnp.int32))
 
-        bsf_n, best_n, visited_n = jax.lax.cond(
-            jnp.any(active), refine, lambda cr: cr, (bsf_, best_, visited))
-        return ptr + k, bsf_n, best_n, visited_n
+        f_n, visited_n = jax.lax.cond(
+            jnp.any(active), refine, lambda cr: cr, (f, visited))
+        return ptr + kb, f_n, visited_n
 
     ptr0 = jnp.zeros((), jnp.int32)
     visited0 = jnp.zeros((qn,), jnp.int32)
-    _, bsf, best, visited = jax.lax.while_loop(
-        cond, body, (ptr0, bsf, best, visited0))
+    _, front, visited = jax.lax.while_loop(
+        cond, body, (ptr0, front, visited0))
 
     stats = SearchStats(blocks_visited=visited,
                         series_refined=visited * c,
                         lb_series=visited * c,
                         iters=jnp.zeros((), jnp.int32))
-    return SearchResult(dist=jnp.sqrt(bsf), idx=best, stats=stats)
+    return SearchResult(dist=frontier_lib.result_dists(front),
+                        idx=front.ids, stats=stats)

@@ -9,32 +9,35 @@ workers consume in parallel".
 TPU adaptation: the LB scan over the whole array is one Pallas kernel pass
 (the most SIMD-friendly phase of the paper — it is why ParIS exists).  The
 candidate list becomes a chunked lax.scan with a conditional refine per chunk
-(a chunk with no survivors is skipped wholesale), carrying the running BSF —
-the analogue of the workers' shared-BSF updates.  No ordering, no envelopes:
-the structural contrast with MESSI (search.py) is exactly the paper's.
+(a chunk with no survivors is skipped wholesale), carrying the running top-k
+Frontier — the analogue of the workers' shared k-NN BSF updates; pruning is
+against the frontier's k-th-best distance (DESIGN.md §4a).  No ordering, no
+envelopes: the structural contrast with MESSI (search.py) is exactly the
+paper's.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import frontier as frontier_lib
 from repro.core import isax
+from repro.core.frontier import INF
 from repro.core.index import BlockIndex, FlatIndex, flat_view
-from repro.core.search import INF, SearchStats, SearchResult, approximate_search
+from repro.core.search import SearchResult, SearchStats
 from repro.kernels import ops
 
 
-@functools.partial(jax.jit, static_argnames=("chunk",))
-def search_flat(index: FlatIndex, queries: jax.Array, *,
+@functools.partial(jax.jit, static_argnames=("k", "chunk"))
+def search_flat(index: FlatIndex, queries: jax.Array, *, k: int = 1,
                 block_index: BlockIndex | None = None,
-                initial_bsf: jax.Array | None = None,
+                initial_threshold: jax.Array | None = None,
                 chunk: int = 4096) -> SearchResult:
-    """Exact 1-NN via the ParIS algorithm. queries (Q, n)."""
-    q = isax.znorm(queries).astype(jnp.float32)
-    q_paa = isax.paa(q, index.w)
+    """Exact k-NN via the ParIS algorithm. queries (Q, n)."""
+    setup = frontier_lib.prepare(queries, k, index=block_index, w=index.w)
+    q, q_paa = setup.q, setup.q_paa
     npad, n = index.raw.shape
     qn = q.shape[0]
     c = min(chunk, npad)
@@ -48,52 +51,40 @@ def search_flat(index: FlatIndex, queries: jax.Array, *,
             [raw, jnp.full((pad, n), 1.0e4, jnp.float32)], 0)
         ids = jnp.concatenate([ids, jnp.full((pad,), -1, jnp.int32)], 0)
 
-    # Phase 1 — approximate BSF.  The paper seeds from the best leaf; we use
-    # the same stage-A routine as MESSI when a block index is available, else
-    # the first chunk's best real distance.
-    if initial_bsf is not None:
-        bsf = initial_bsf
-        best = jnp.full((qn,), -2, jnp.int32)
-    elif block_index is not None:
-        bsf, best, _ = approximate_search(block_index, q, q_paa)
-    else:
-        d0 = ops.batch_l2(q, raw[:c])
-        d0 = jnp.where(ids[None, :c] >= 0, d0, INF)
-        j = jnp.argmin(d0, axis=1)
-        bsf = jnp.take_along_axis(d0, j[:, None], 1)[:, 0]
-        best = ids[j]
+    # Phase 1 — approximate top-k frontier.  The paper seeds from the best
+    # leaf; prepare() ran the same stage-A routine as MESSI when a block
+    # index is available, else the scan starts from an empty frontier (the
+    # first chunk is then refined in full, which seeds it).
 
     # Phase 2 — the flat LB scan over the ENTIRE SAX array (one kernel pass).
     lb = ops.lb_scan_planar(q_paa, lo, hi, n=n)               # (Q, Np+pad)
 
-    # Phase 3 — chunked candidate refinement with running BSF.
+    # Phase 3 — chunked candidate refinement with the running frontier.
     nchunks = raw.shape[0] // c
     raw_c = raw.reshape(nchunks, c, n)
     ids_c = ids.reshape(nchunks, c)
     lb_c = lb.reshape(qn, nchunks, c)
 
     def step(carry, inp):
-        bsf_i, best_i, refined = carry
+        front, refined = carry
         raw_k, ids_k, lb_k = inp                              # (C,n),(C,),(Q,C)
-        act = (lb_k < bsf_i[:, None]) & (ids_k[None, :] >= 0)
+        thr = frontier_lib.bound(front, initial_threshold)
+        act = (lb_k < thr[:, None]) & (ids_k[None, :] >= 0)
 
         def refine(cr):
-            bsf_j, best_j, refined_j = cr
+            front_j, refined_j = cr
             d = ops.batch_l2(q, raw_k)                        # (Q, C)
             d = jnp.where(act, d, INF)
-            j = jnp.argmin(d, axis=1)
-            dmin = jnp.take_along_axis(d, j[:, None], 1)[:, 0]
-            better = dmin < bsf_j
-            return (jnp.where(better, dmin, bsf_j),
-                    jnp.where(better, ids_k[j], best_j),
+            front_n = front_j.insert(d, jnp.where(act, ids_k[None, :], -1))
+            return (front_n,
                     refined_j + jnp.sum(act, axis=1, dtype=jnp.int32))
 
         carry = jax.lax.cond(jnp.any(act), refine, lambda cr: cr,
-                             (bsf_i, best_i, refined))
+                             (front, refined))
         return carry, None
 
-    (bsf, best, refined), _ = jax.lax.scan(
-        step, (bsf, best, jnp.zeros((qn,), jnp.int32)),
+    (front, refined), _ = jax.lax.scan(
+        step, (setup.frontier, jnp.zeros((qn,), jnp.int32)),
         (raw_c, ids_c, jnp.moveaxis(lb_c, 1, 0)))
 
     stats = SearchStats(
@@ -102,12 +93,13 @@ def search_flat(index: FlatIndex, queries: jax.Array, *,
         lb_series=jnp.full((qn,), index.n_real, jnp.int32),   # whole array
         iters=jnp.asarray(nchunks, jnp.int32),
     )
-    return SearchResult(dist=jnp.sqrt(bsf), idx=best, stats=stats)
+    return SearchResult(dist=frontier_lib.result_dists(front),
+                        idx=front.ids, stats=stats)
 
 
-def search_paris(index: BlockIndex, queries: jax.Array, *,
+def search_paris(index: BlockIndex, queries: jax.Array, *, k: int = 1,
                  chunk: int = 4096,
-                 initial_bsf: jax.Array | None = None) -> SearchResult:
+                 initial_threshold: jax.Array | None = None) -> SearchResult:
     """Convenience: run the ParIS algorithm against a BlockIndex's flat view."""
-    return search_flat(flat_view(index), queries, block_index=index,
-                       chunk=chunk, initial_bsf=initial_bsf)
+    return search_flat(flat_view(index), queries, k=k, block_index=index,
+                       chunk=chunk, initial_threshold=initial_threshold)

@@ -1,22 +1,27 @@
-"""MESSI-style exact 1-NN query answering, vectorized for TPU (DESIGN.md §4).
+"""MESSI-style exact k-NN query answering, vectorized for TPU (DESIGN.md §4).
 
 Paper mapping:
   Stage A  "search the tree for the query's leaf, compute real distances in
            it, store the minimum in BSF"            -> best-envelope block
-           argmin + one batched L2 against it.
+           argmin + one batched L2 against it (frontier.approximate).
   Stage C  "surviving leaves go into priority queues ordered by lower bound;
            workers pop, stop a queue when its head's LB >= BSF"
                                                     -> per-query LB-argsorted
            block schedule + lax.while_loop that refines the next K blocks per
-           iteration and exits when every query's next block LB >= its BSF.
-           Ordered traversal + that stopping rule ARE the priority-queue
-           semantics; the heap itself is an artifact of MIMD threads.
+           iteration and exits when every query's next block LB >= its
+           pruning bound.  Ordered traversal + that stopping rule ARE the
+           priority-queue semantics; the heap itself is an artifact of MIMD
+           threads.
+  k-NN BSF "the BSF array holds the k best-so-far answers; pruning uses the
+           k-th best distance"                      -> the shared top-k
+           Frontier (core/frontier.py); the pruning bound is
+           ``frontier.threshold()`` = the k-th best distance, so skipping
+           only blocks/series with LB >= threshold can never discard a true
+           k-NN member (no false dismissals, any k).
   per-series lower-bound filtering inside a leaf     -> lb_filter=True masks
-           refinement to series whose own MINDIST < BSF (the stats expose the
-           paper's "MESSI performs fewer real distance calculations" claim).
-
-Exactness (property-tested): LB <= true distance everywhere, so skipping only
-blocks/series with LB >= BSF can never discard the nearest neighbor.
+           refinement to series whose own MINDIST < threshold (the stats
+           expose the paper's "MESSI performs fewer real distance
+           calculations" claim).
 """
 from __future__ import annotations
 
@@ -26,113 +31,85 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
-from repro.core import isax
+from repro.core import frontier as frontier_lib
+from repro.core.frontier import Frontier, INF, SearchStats, query_block_l2
 from repro.core.index import BlockIndex
 from repro.kernels import ops
 
-INF = jnp.float32(jnp.finfo(jnp.float32).max)
-
-
-class SearchStats(NamedTuple):
-    """Work counters, per query — the quantities behind the paper's Fig. 9/12."""
-    blocks_visited: jax.Array    # envelopes that survived pruning & were refined
-    series_refined: jax.Array    # real-distance computations performed
-    lb_series: jax.Array         # per-series lower bounds computed
-    iters: jax.Array             # while_loop trips (scalar, shared)
-
 
 class SearchResult(NamedTuple):
-    dist: jax.Array              # (Q,) exact NN Euclidean distance
-    idx: jax.Array               # (Q,) original id of the NN
+    dist: jax.Array              # (Q, K) exact k-NN Euclidean distances, ascending
+    idx: jax.Array               # (Q, K) original ids; -1 = fewer than K real series
     stats: SearchStats
 
+    @property
+    def nn_dist(self) -> jax.Array:
+        """(Q,) nearest-neighbour distance (the k=1 column)."""
+        return self.dist[..., 0]
 
-def _query_block_l2(q: jax.Array, blocks: jax.Array) -> jax.Array:
-    """Per-query distances to its own gathered block(s).
-
-    q (Q, n); blocks (Q, ..., C, n) -> (Q, ..., C) squared distances, using
-    the same expanded form as the MXU kernel (einsum keeps it fused).
-    """
-    qq = jnp.sum(q * q, axis=-1)                              # (Q,)
-    xx = jnp.sum(blocks * blocks, axis=-1)                    # (Q, ..., C)
-    cross = jnp.einsum("qn,q...n->q...", q, blocks)
-    extra = xx.ndim - 1
-    qq = qq.reshape(qq.shape + (1,) * extra)
-    return jnp.maximum(qq + xx - 2.0 * cross, 0.0)
+    @property
+    def nn_idx(self) -> jax.Array:
+        """(Q,) nearest-neighbour id (the k=1 column)."""
+        return self.idx[..., 0]
 
 
-def approximate_search(index: BlockIndex, q: jax.Array, q_paa: jax.Array
-                       ) -> tuple[jax.Array, jax.Array, jax.Array]:
-    """Stage A: initial BSF from each query's best-envelope block.
-
-    Returns (bsf_sq (Q,), best_id (Q,), block_lb (Q, B))."""
-    block_lb = ops.lb_scan_planar(q_paa, index.elo, index.ehi, n=index.n)
-    b0 = jnp.argmin(block_lb, axis=1)                         # (Q,)
-    blocks = index.raw[b0]                                    # (Q, C, n)
-    d = _query_block_l2(q, blocks)                            # (Q, C)
-    j = jnp.argmin(d, axis=1)
-    bsf = jnp.take_along_axis(d, j[:, None], axis=1)[:, 0]
-    best = index.ids[b0, j]
-    return bsf, best, block_lb
+def _result(front: Frontier, stats: SearchStats) -> SearchResult:
+    """sqrt the squared frontier distances; empty slots stay (INF, -1)."""
+    return SearchResult(dist=frontier_lib.result_dists(front),
+                        idx=front.ids, stats=stats)
 
 
-@functools.partial(jax.jit, static_argnames=("blocks_per_iter", "lb_filter",
-                                             "deadline_blocks",
+_bound = frontier_lib.bound
+
+
+@functools.partial(jax.jit, static_argnames=("k", "blocks_per_iter",
+                                             "lb_filter", "deadline_blocks",
                                              "normalize_queries"))
-def search(index: BlockIndex, queries: jax.Array, *,
+def search(index: BlockIndex, queries: jax.Array, *, k: int = 1,
            blocks_per_iter: int = 4, lb_filter: bool = True,
-           initial_bsf: jax.Array | None = None,
+           initial_threshold: jax.Array | None = None,
            deadline_blocks: int | None = None,
            normalize_queries: bool = True) -> SearchResult:
-    """Exact 1-NN for a batch of queries (Q, n) against one index shard.
+    """Exact k-NN for a batch of queries (Q, n) against one index shard.
 
-    ``initial_bsf`` seeds the BSF (squared) — the distributed path passes the
-    globally-reduced approximate BSF here (paper's shared-BSF variable).
+    ``initial_threshold`` tightens the pruning bound (squared distance) —
+    the distributed path passes the globally-reduced k-th-best approximate
+    distance here (paper's shared-BSF variable); it never appears in the
+    result, which always holds this shard's own top-k.
     ``deadline_blocks`` caps refined blocks per query (straggler mitigation /
     anytime answers; None = exact).
     ``normalize_queries=False`` is the generic-vector path (core/vector.py):
     the index was built with normalize=False and queries arrive prepared.
     """
-    q = (isax.znorm(queries) if normalize_queries else queries
-         ).astype(jnp.float32)
-    q_paa = isax.paa(q, index.w)
+    setup = frontier_lib.prepare(queries, k, index=index,
+                                 normalize=normalize_queries)
+    q, q_paa, front, block_lb, stats0 = setup
     b, c, n = index.raw.shape
     qn = q.shape[0]
-    k = min(blocks_per_iter, b)
-
-    bsf, best, block_lb = approximate_search(index, q, q_paa)
-    if initial_bsf is not None:
-        tighter = initial_bsf < bsf
-        bsf = jnp.minimum(bsf, initial_bsf)
-        best = jnp.where(tighter, -2, best)   # -2: NN lives in another shard
+    kb = min(blocks_per_iter, b)
 
     order = jnp.argsort(block_lb, axis=1)                     # (Q, B)
     max_ptr = b if deadline_blocks is None else min(b, deadline_blocks)
 
-    stats0 = SearchStats(
-        blocks_visited=jnp.zeros((qn,), jnp.int32),
-        series_refined=jnp.zeros((qn,), jnp.int32),
-        lb_series=jnp.zeros((qn,), jnp.int32),
-        iters=jnp.zeros((), jnp.int32),
-    )
-
-    def next_lb(ptr, bsf_):
+    def next_lb(ptr):
         nxt = jax.lax.dynamic_slice_in_dim(order, ptr, 1, axis=1)   # (Q,1)
         return jnp.take_along_axis(block_lb, nxt, axis=1)[:, 0]     # (Q,)
 
     def cond(state):
-        ptr, bsf_, _, _ = state
+        ptr, f, _ = state
         return jnp.logical_and(ptr < max_ptr,
-                               jnp.any(next_lb(ptr, bsf_) < bsf_))
+                               jnp.any(next_lb(ptr)
+                                       < _bound(f, initial_threshold)))
 
     def body(state):
-        ptr, bsf_, best_, st = state
-        idxs = jax.lax.dynamic_slice_in_dim(order, ptr, k, axis=1)  # (Q,K)
-        lbs = jnp.take_along_axis(block_lb, idxs, axis=1)           # (Q,K)
-        active = lbs < bsf_[:, None]                                # (Q,K)
+        ptr, f, st = state
+        thr = _bound(f, initial_threshold)
+        idxs = jax.lax.dynamic_slice_in_dim(order, ptr, kb, axis=1)  # (Q,K)
+        lbs = jnp.take_along_axis(block_lb, idxs, axis=1)            # (Q,K)
+        active = lbs < thr[:, None]                                  # (Q,K)
 
         def refine(carry):
-            bsf_i, best_i, st_i = carry
+            f_i, st_i = carry
             blocks = index.raw[idxs]                                # (Q,K,C,n)
             ids = index.ids[idxs]                                   # (Q,K,C)
             if lb_filter:
@@ -141,50 +118,45 @@ def search(index: BlockIndex, queries: jax.Array, *,
                 qe = q_paa[:, None, :, None]                        # (Q,1,w,1)
                 dd = jnp.maximum(jnp.maximum(lo - qe, qe - hi), 0.0)
                 s_lb = (n / index.w) * jnp.sum(dd * dd, axis=2)     # (Q,K,C)
-                s_act = (s_lb < bsf_i[:, None, None]) & active[..., None]
+                s_act = (s_lb < thr[:, None, None]) & active[..., None]
             else:
                 s_act = jnp.broadcast_to(active[..., None], ids.shape)
-            d = _query_block_l2(q, blocks)                          # (Q,K,C)
-            d = jnp.where(s_act & (ids >= 0), d, INF)
-            flat = d.reshape(qn, -1)
-            j = jnp.argmin(flat, axis=1)
-            dmin = jnp.take_along_axis(flat, j[:, None], axis=1)[:, 0]
-            cand_id = jnp.take_along_axis(ids.reshape(qn, -1), j[:, None],
-                                          axis=1)[:, 0]
-            better = dmin < bsf_i
-            new_bsf = jnp.where(better, dmin, bsf_i)
-            new_best = jnp.where(better, cand_id, best_i)
+            d = query_block_l2(q, blocks)                           # (Q,K,C)
+            live = s_act & (ids >= 0)
+            d = jnp.where(live, d, INF)
+            f_n = f_i.insert(d.reshape(qn, -1),
+                             jnp.where(live, ids, -1).reshape(qn, -1))
             st_n = SearchStats(
                 blocks_visited=st_i.blocks_visited
                 + jnp.sum(active, axis=1, dtype=jnp.int32),
                 series_refined=st_i.series_refined
-                + jnp.sum(s_act & (ids >= 0), axis=(1, 2), dtype=jnp.int32),
+                + jnp.sum(live, axis=(1, 2), dtype=jnp.int32),
                 lb_series=st_i.lb_series
                 + (jnp.sum(active, axis=1, dtype=jnp.int32) * c
                    if lb_filter else st_i.lb_series * 0),
                 iters=st_i.iters,
             )
-            return new_bsf, new_best, st_n
+            return f_n, st_n
 
-        bsf_n, best_n, st_n = jax.lax.cond(
-            jnp.any(active), refine, lambda cr: cr, (bsf_, best_, st))
+        f_n, st_n = jax.lax.cond(
+            jnp.any(active), refine, lambda cr: cr, (f, st))
         st_n = st_n._replace(iters=st_n.iters + 1)
-        return ptr + k, bsf_n, best_n, st_n
+        return ptr + kb, f_n, st_n
 
     ptr0 = jnp.zeros((), jnp.int32)
-    _, bsf, best, stats = jax.lax.while_loop(
-        cond, body, (ptr0, bsf, best, stats0))
-    return SearchResult(dist=jnp.sqrt(bsf), idx=best, stats=stats)
+    _, front, stats = jax.lax.while_loop(cond, body, (ptr0, front, stats0))
+    return _result(front, stats)
 
 
-@functools.partial(jax.jit, static_argnames=("lb_filter", "deadline_blocks",
+@functools.partial(jax.jit, static_argnames=("k", "lb_filter",
+                                             "deadline_blocks",
                                              "normalize_queries"))
-def search_block_major(index: BlockIndex, queries: jax.Array, *,
+def search_block_major(index: BlockIndex, queries: jax.Array, *, k: int = 1,
                        lb_filter: bool = True,
-                       initial_bsf: jax.Array | None = None,
+                       initial_threshold: jax.Array | None = None,
                        deadline_blocks: int | None = None,
                        normalize_queries: bool = True) -> SearchResult:
-    """Exact 1-NN with a BLOCK-major schedule (beyond-paper optimization).
+    """Exact k-NN with a BLOCK-major schedule (beyond-paper optimization).
 
     The paper's MESSI pops per-query priority queues — each thread gathers
     ITS query's next-best leaf.  For a BATCH of queries on matrix hardware
@@ -197,20 +169,15 @@ def search_block_major(index: BlockIndex, queries: jax.Array, *,
     ``dynamic_slice`` (no gather) plus one (Q, C) MXU panel against all
     still-active queries.  A suffix-min table over the scheduled LB matrix
     gives the exact per-query stopping rule (when suffix_min[ptr, q] >=
-    bsf[q] nothing later can improve q; when that holds for all q we stop)
-    — the same no-false-dismissal guarantee, O(B log B) schedule setup.
+    threshold[q] nothing later can improve q's top-k; when that holds for
+    all q we stop) — the same no-false-dismissal guarantee, O(B log B)
+    schedule setup.
     """
-    q = (isax.znorm(queries) if normalize_queries else queries
-         ).astype(jnp.float32)
-    q_paa = isax.paa(q, index.w)
+    setup = frontier_lib.prepare(queries, k, index=index,
+                                 normalize=normalize_queries)
+    q, q_paa, front, block_lb, stats0 = setup
     b, c, n = index.raw.shape
     qn = q.shape[0]
-
-    bsf, best, block_lb = approximate_search(index, q, q_paa)
-    if initial_bsf is not None:
-        tighter = initial_bsf < bsf
-        bsf = jnp.minimum(bsf, initial_bsf)
-        best = jnp.where(tighter, -2, best)
 
     order = jnp.argsort(jnp.min(block_lb, axis=0))            # (B,)
     sched_lb = block_lb[:, order]                             # (Q, B)
@@ -218,26 +185,21 @@ def search_block_major(index: BlockIndex, queries: jax.Array, *,
     suffix = jax.lax.cummin(sched_lb[:, ::-1], axis=1)[:, ::-1]
     max_ptr = b if deadline_blocks is None else min(b, deadline_blocks)
 
-    stats0 = SearchStats(
-        blocks_visited=jnp.zeros((qn,), jnp.int32),
-        series_refined=jnp.zeros((qn,), jnp.int32),
-        lb_series=jnp.zeros((qn,), jnp.int32),
-        iters=jnp.zeros((), jnp.int32),
-    )
-
     def cond(state):
-        ptr, bsf_, _, _ = state
+        ptr, f, _ = state
         live = jax.lax.dynamic_slice_in_dim(suffix, ptr, 1, axis=1)[:, 0]
-        return jnp.logical_and(ptr < max_ptr, jnp.any(live < bsf_))
+        return jnp.logical_and(ptr < max_ptr,
+                               jnp.any(live < _bound(f, initial_threshold)))
 
     def body(state):
-        ptr, bsf_, best_, st = state
+        ptr, f, st = state
+        thr = _bound(f, initial_threshold)
         b_id = order[ptr]
         lbs = jax.lax.dynamic_slice_in_dim(block_lb, b_id, 1, axis=1)[:, 0]
-        active = lbs < bsf_                                   # (Q,)
+        active = lbs < thr                                    # (Q,)
 
         def refine(cr):
-            bsf_i, best_i, st_i = cr
+            f_i, st_i = cr
             block = jax.lax.dynamic_index_in_dim(index.raw, b_id, 0,
                                                  keepdims=False)   # (C, n)
             ids_b = jax.lax.dynamic_index_in_dim(index.ids, b_id, 0,
@@ -251,34 +213,30 @@ def search_block_major(index: BlockIndex, queries: jax.Array, *,
                 dd = jnp.maximum(jnp.maximum(lo[None] - qe, qe - hi[None]),
                                  0.0)
                 s_lb = (n / index.w) * jnp.sum(dd * dd, axis=1)    # (Q, C)
-                s_act = (s_lb < bsf_i[:, None]) & active[:, None]
+                s_act = (s_lb < thr[:, None]) & active[:, None]
             else:
                 s_act = jnp.broadcast_to(active[:, None], (qn, c))
             d = ops.batch_l2(q, block)                             # (Q, C)
-            d = jnp.where(s_act & (ids_b >= 0)[None, :], d, INF)
-            j = jnp.argmin(d, axis=1)
-            dmin = jnp.take_along_axis(d, j[:, None], axis=1)[:, 0]
-            better = dmin < bsf_i
+            live = s_act & (ids_b >= 0)[None, :]
+            d = jnp.where(live, d, INF)
+            f_n = f_i.insert(d, jnp.where(live, ids_b[None, :], -1))
             st_n = SearchStats(
                 blocks_visited=st_i.blocks_visited
                 + active.astype(jnp.int32),
                 series_refined=st_i.series_refined
-                + jnp.sum(s_act & (ids_b >= 0)[None, :], axis=1,
-                          dtype=jnp.int32),
+                + jnp.sum(live, axis=1, dtype=jnp.int32),
                 lb_series=st_i.lb_series
                 + (active.astype(jnp.int32) * c if lb_filter
                    else st_i.lb_series * 0),
                 iters=st_i.iters,
             )
-            return (jnp.where(better, dmin, bsf_i),
-                    jnp.where(better, ids_b[j], best_i), st_n)
+            return f_n, st_n
 
-        bsf_n, best_n, st_n = jax.lax.cond(
-            jnp.any(active), refine, lambda cr: cr, (bsf_, best_, st))
+        f_n, st_n = jax.lax.cond(
+            jnp.any(active), refine, lambda cr: cr, (f, st))
         st_n = st_n._replace(iters=st_n.iters + 1)
-        return ptr + 1, bsf_n, best_n, st_n
+        return ptr + 1, f_n, st_n
 
     ptr0 = jnp.zeros((), jnp.int32)
-    _, bsf, best, stats = jax.lax.while_loop(
-        cond, body, (ptr0, bsf, best, stats0))
-    return SearchResult(dist=jnp.sqrt(bsf), idx=best, stats=stats)
+    _, front, stats = jax.lax.while_loop(cond, body, (ptr0, front, stats0))
+    return _result(front, stats)

@@ -6,29 +6,33 @@ faithful analogue is a full batched-L2 sweep over the raw array on the MXU —
 no lower bounds, no pruning.  (UCR's per-element early abandoning is dropped:
 the paper itself replaces it with SIMD full computation, see DESIGN.md §2.)
 
-Doubles as the correctness oracle for every index test.
+Doubles as the correctness oracle for every index test: it carries the same
+top-k Frontier as the index paths (DESIGN.md §4a), so its (Q, K) result is
+the exact k-NN answer by construction.
 """
 from __future__ import annotations
 
 import functools
-from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
+from repro.core import frontier as frontier_lib
 from repro.core import isax
-from repro.core.search import INF, SearchStats, SearchResult
+from repro.core.frontier import INF
+from repro.core.search import SearchResult, SearchStats
 from repro.kernels import ops
 
 
-@functools.partial(jax.jit, static_argnames=("chunk", "normalize"))
-def search_scan(raw: jax.Array, queries: jax.Array, *, chunk: int = 4096,
-                normalize: bool = True,
+@functools.partial(jax.jit, static_argnames=("k", "chunk", "normalize"))
+def search_scan(raw: jax.Array, queries: jax.Array, *, k: int = 1,
+                chunk: int = 4096, normalize: bool = True,
                 ids: jax.Array | None = None) -> SearchResult:
-    """Exact 1-NN by full scan. raw (N, n); queries (Q, n)."""
+    """Exact k-NN by full scan. raw (N, n); queries (Q, n)."""
     n_series, n = raw.shape
     x = isax.znorm(raw) if normalize else raw.astype(jnp.float32)
-    q = isax.znorm(queries) if normalize else queries.astype(jnp.float32)
+    setup = frontier_lib.prepare(queries, k, normalize=normalize)
+    q = setup.q
     qn = q.shape[0]
     if ids is None:
         ids = jnp.arange(n_series, dtype=jnp.int32)
@@ -40,20 +44,20 @@ def search_scan(raw: jax.Array, queries: jax.Array, *, chunk: int = 4096,
         ids = jnp.concatenate([ids, jnp.full((pad,), -1, jnp.int32)], 0)
     nchunks = x.shape[0] // c
 
-    def step(carry, inp):
-        bsf, best = carry
+    def step(front, inp):
         raw_k, ids_k = inp
         d = ops.batch_l2(q, raw_k)                            # (Q, C)
         d = jnp.where(ids_k[None, :] >= 0, d, INF)
-        j = jnp.argmin(d, axis=1)
-        dmin = jnp.take_along_axis(d, j[:, None], 1)[:, 0]
-        better = dmin < bsf
-        return (jnp.where(better, dmin, bsf),
-                jnp.where(better, ids_k[j], best)), None
+        # ids are globally unique and each chunk is seen once, so the
+        # duplicate mask is provably unnecessary on this (baseline) path
+        front = frontier_lib.insert_batch(
+            front, d, jnp.broadcast_to(ids_k[None, :], (qn, c)),
+            assume_unique=True)
+        return front, None
 
-    init = (jnp.full((qn,), INF), jnp.full((qn,), -1, jnp.int32))
-    (bsf, best), _ = jax.lax.scan(
-        step, init, (x.reshape(nchunks, c, n), ids.reshape(nchunks, c)))
+    front, _ = jax.lax.scan(
+        step, setup.frontier,
+        (x.reshape(nchunks, c, n), ids.reshape(nchunks, c)))
 
     stats = SearchStats(
         blocks_visited=jnp.full((qn,), nchunks, jnp.int32),
@@ -61,4 +65,5 @@ def search_scan(raw: jax.Array, queries: jax.Array, *, chunk: int = 4096,
         lb_series=jnp.zeros((qn,), jnp.int32),
         iters=jnp.asarray(nchunks, jnp.int32),
     )
-    return SearchResult(dist=jnp.sqrt(bsf), idx=best, stats=stats)
+    return SearchResult(dist=frontier_lib.result_dists(front),
+                        idx=front.ids, stats=stats)

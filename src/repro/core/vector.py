@@ -5,7 +5,8 @@ such as similarity search for deep learning embeddings").
 A d-dim embedding is treated as a 'series' of length d: PAA segments become
 contiguous dim groups. Z-normalization is OFF (embeddings are not shift/scale
 invariant); unit-normalization gives cosine search since
-||a - b||^2 = 2 - 2 cos(a, b) on the unit sphere.
+||a - b||^2 = 2 - 2 cos(a, b) on the unit sphere — so the exact Euclidean
+top-k frontier (DESIGN.md §4a) IS the exact cosine top-k, descending.
 
 Used by examples/serve_with_index.py to serve k-NN over LM hidden states.
 """
@@ -40,8 +41,19 @@ def build_vector_index(embs: jax.Array, *, w: int = 16, card: int = 256,
                            capacity=capacity, normalize=False)
 
 
-def search_vectors(index: BlockIndex, queries: jax.Array, *,
+def search_vectors(index: BlockIndex, queries: jax.Array, *, k: int = 1,
                    unit_norm: bool = True, **kw) -> SearchResult:
-    """Exact 1-NN over the vector index. queries (Q, d)."""
+    """Exact k-NN over the vector index. queries (Q, d) -> (Q, K) results."""
     q = _prep(queries, unit_norm)
-    return _search(index, q, normalize_queries=False, **kw)
+    return _search(index, q, k=k, normalize_queries=False, **kw)
+
+
+def cosine_scores(res: SearchResult, dim: int) -> jax.Array:
+    """(Q, K) cosine similarities from a unit-norm search result, descending.
+
+    The index stores sqrt(dim)-scaled unit vectors, so the returned
+    Euclidean distances satisfy d^2 = dim * (2 - 2 cos); invert that.
+    Empty slots (idx == -1) map to -1 (the cosine floor).
+    """
+    cos = 1.0 - res.dist.astype(jnp.float32) ** 2 / (2.0 * dim)
+    return jnp.where(res.idx >= 0, cos, -1.0)

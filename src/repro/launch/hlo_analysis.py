@@ -46,6 +46,7 @@ _OP_RE = re.compile(
 _OPERAND_RE = re.compile(r"%([\w.\-]+)")
 _TRIP_RE = re.compile(r'known_trip_count[^0-9]*?"n":"(\d+)"')
 _CALLS_RE = re.compile(r"calls=%?([\w.\-]+)")
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
 _BODY_RE = re.compile(r"body=%?([\w.\-]+)")
 _COND_RE = re.compile(r"condition=%?([\w.\-]+)")
 _BRANCHES_RE = re.compile(r"branch_computations=\{([^}]*)\}")
@@ -242,7 +243,10 @@ def analyze_text(text: str) -> CostTotals:
                         walk(br, mult)       # upper bound: all branches
                 continue
             if code in ("call", "async-start"):
-                cm = _CALLS_RE.search(op.rest) or _BODY_RE.search(op.rest)
+                # older XLA:CPU spells the callee ``to_apply=`` (e.g. its
+                # parallel-task wrapper around the whole entry)
+                cm = (_CALLS_RE.search(op.rest) or _BODY_RE.search(op.rest)
+                      or _TO_APPLY_RE.search(op.rest))
                 if cm:
                     walk(cm.group(1), mult)
                 continue

@@ -24,6 +24,12 @@ assert np.allclose(res.dist, want.dist, rtol=1e-4, atol=1e-4)
 assert np.array_equal(np.asarray(res.idx), np.asarray(want.idx))
 res2 = distributed.search_sharded_scan(jnp.asarray(raw), jnp.asarray(qs), mesh)
 assert np.allclose(res2.dist, want.dist, rtol=1e-4, atol=1e-4)
+# k-NN: the two-round protocol agrees with the single-host oracle for k > 1
+res_k = distributed.search_sharded(sidx, jnp.asarray(qs), mesh, k=8)
+want_k = ucr.search_scan(jnp.asarray(raw), jnp.asarray(qs), k=8)
+assert res_k.idx.shape == (8, 8)
+assert np.array_equal(np.asarray(res_k.idx), np.asarray(want_k.idx))
+assert np.allclose(res_k.dist, want_k.dist, rtol=1e-4, atol=1e-4)
 print("OK")
 """)
 

@@ -58,11 +58,24 @@ def test_search_dtw_exact_vs_bruteforce():
     qz = isax.znorm(qs)
     xz = isax.znorm(raw)
     bf = D.dtw_band(qz[:, None, :], xz[None], 6)
-    np.testing.assert_allclose(np.asarray(got.dist),
+    np.testing.assert_allclose(np.asarray(got.dist[:, 0]),
                                np.sqrt(np.min(np.asarray(bf), axis=1)),
                                rtol=1e-4, atol=1e-4)
-    assert np.array_equal(np.asarray(got.idx),
+    assert np.array_equal(np.asarray(got.idx[:, 0]),
                           np.argmin(np.asarray(bf), axis=1))
+
+
+def test_search_dtw_topk_vs_bruteforce():
+    """k-NN under DTW: same frontier machinery, DTW distances."""
+    import jax
+    raw = jnp.asarray(random_walk(256, 64, seed=9))
+    qs = jnp.asarray(random_walk(4, 64, seed=10) * 0.9)
+    idx = core.build(raw, capacity=32)
+    k = 5
+    got = D.search_dtw(idx, qs, r=6, k=k)
+    bf = D.dtw_band(isax.znorm(qs)[:, None, :], isax.znorm(raw)[None], 6)
+    _, want = jax.lax.top_k(-bf, k)
+    assert np.array_equal(np.asarray(got.idx), np.asarray(want))
 
 
 def test_vector_index_cosine_nn():
@@ -75,7 +88,25 @@ def test_vector_index_cosine_nn():
     en = embs / np.linalg.norm(embs, axis=1, keepdims=True)
     qn = q / np.linalg.norm(q, axis=1, keepdims=True)
     want = np.argmax(qn @ en.T, axis=1)
-    assert np.array_equal(np.asarray(res.idx), want)
+    assert np.array_equal(np.asarray(res.idx[:, 0]), want)
+
+
+def test_vector_index_cosine_topk():
+    """k-NN over embeddings: ids AND cosine scores match brute force."""
+    import jax
+    embs = RNG.standard_normal((1024, 64)).astype(np.float32)
+    vidx = vector.build_vector_index(jnp.asarray(embs), capacity=128)
+    q = embs[:4] + 0.01 * RNG.standard_normal((4, 64)).astype(np.float32)
+    k = 8
+    res = vector.search_vectors(vidx, jnp.asarray(q), k=k)
+    en = embs / np.linalg.norm(embs, axis=1, keepdims=True)
+    qn = q / np.linalg.norm(q, axis=1, keepdims=True)
+    cos = qn @ en.T
+    want_cos, want_ids = jax.lax.top_k(jnp.asarray(cos), k)
+    assert np.array_equal(np.asarray(res.idx), np.asarray(want_ids))
+    np.testing.assert_allclose(
+        np.asarray(vector.cosine_scores(res, dim=64)),
+        np.asarray(want_cos), rtol=1e-4, atol=1e-4)
 
 
 def test_vector_index_euclidean_mode():
@@ -84,5 +115,5 @@ def test_vector_index_euclidean_mode():
                                      unit_norm=False)
     res = vector.search_vectors(vidx, jnp.asarray(embs[:4]),
                                 unit_norm=False)
-    assert np.array_equal(np.asarray(res.idx), np.arange(4))
+    assert np.array_equal(np.asarray(res.idx[:, 0]), np.arange(4))
     assert np.allclose(np.asarray(res.dist), 0, atol=1e-2)

@@ -72,7 +72,7 @@ def test_capacity_larger_than_dataset():
     idx = core.build(raw, capacity=512)
     assert idx.capacity == 10
     res = core.search(idx, raw[:2])
-    assert np.array_equal(np.asarray(res.idx), [0, 1])
+    assert np.array_equal(np.asarray(res.idx[:, 0]), [0, 1])
 
 
 @pytest.mark.parametrize("w,card", [(8, 16), (16, 256), (32, 4)])

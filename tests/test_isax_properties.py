@@ -7,7 +7,7 @@ WIDEN per-series bounds.  These are the system invariants; everything else
 """
 import jax.numpy as jnp
 import numpy as np
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 from repro.core import index as index_lib
 from repro.core import isax

@@ -3,7 +3,7 @@ against each other — the paper's §IV comparisons as correctness tests."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _hyp import given, settings, st
 
 import repro.core as core
 from repro.core import isax
@@ -78,17 +78,18 @@ def test_messi_exact_hypothesis(seed, n_series, length):
                                rtol=1e-3, atol=5e-3)
 
 
-def test_initial_bsf_seeding_preserves_distance():
-    """Seeding with a global BSF must not change the distance (only the id
-    may become -2 = 'lives in another shard')."""
+def test_initial_threshold_seeding_preserves_result():
+    """Seeding the pruning bound with a (looser) global threshold must not
+    change the result — the distributed round-1 contract."""
     raw = jnp.asarray(dataset("walk", 512))
     qs = jnp.asarray(dataset("walk", 512)[:4])
     idx = core.build(raw, capacity=64)
     base = core.search(idx, qs)
-    seeded = core.search(idx, qs, initial_bsf=jnp.asarray(base.dist) ** 2
-                         + 1e-3)
+    thr = jnp.asarray(base.dist[:, 0]) ** 2 + 1e-3
+    seeded = core.search(idx, qs, initial_threshold=thr)
     np.testing.assert_allclose(np.asarray(seeded.dist),
                                np.asarray(base.dist), rtol=1e-5, atol=1e-5)
+    assert np.array_equal(np.asarray(seeded.idx), np.asarray(base.idx))
 
 
 def test_lb_filter_toggle_same_answer():
@@ -136,8 +137,8 @@ def test_batch_of_one_and_many():
     idx = core.build(raw, capacity=32)
     one = core.search(idx, raw[:1])
     many = core.search(idx, raw[:16])
-    assert int(one.idx[0]) == 0
-    assert np.array_equal(np.asarray(many.idx), np.arange(16))
+    assert int(one.idx[0, 0]) == 0
+    assert np.array_equal(np.asarray(many.idx[:, 0]), np.arange(16))
     assert np.allclose(np.asarray(many.dist), 0, atol=1e-2)
 
 
@@ -155,7 +156,7 @@ def test_block_major_equals_oracle(kind):
                                rtol=1e-3, atol=5e-3)
     # seeded variant keeps distances
     seeded = search_block_major(idx, qs,
-                                initial_bsf=jnp.asarray(got.dist) ** 2
-                                + 1e-3)
+                                initial_threshold=jnp.asarray(got.dist[:, 0])
+                                ** 2 + 1e-3)
     np.testing.assert_allclose(np.asarray(seeded.dist),
                                np.asarray(got.dist), rtol=1e-5, atol=1e-5)

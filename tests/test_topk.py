@@ -1,0 +1,179 @@
+"""Exact k-NN: every search path against a brute-force ``lax.top_k`` oracle.
+
+The oracle computes the full (Q, N) distance matrix in id order, so
+``lax.top_k`` breaks distance ties toward the smaller id — the same
+deterministic order the Frontier's (dist, id)-lexicographic sort produces.
+Covers k in {1, 5, 32}, k > n_real padding, duplicate-distance ties, and
+the distributed all-gather merge; the hypothesis property test checks that
+``frontier.threshold()`` pruning never dismisses a true k-NN member.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from _hyp import given, settings, st
+
+import repro.core as core
+from repro.core import frontier as frontier_lib
+from repro.core import isax
+from repro.core.paris import search_paris
+from repro.core.search import search_block_major
+from repro.core.ucr import search_scan
+from repro.kernels import ops
+from conftest import run_subprocess
+
+RNG = np.random.default_rng(11)
+
+
+def walks(n, length, seed):
+    r = np.random.default_rng(seed)
+    return np.cumsum(r.standard_normal((n, length)), axis=1).astype(np.float32)
+
+
+def oracle_topk(raw, qs, k):
+    """(dist (Q,K), ids (Q,K)) via the full distance matrix + lax.top_k."""
+    d = ops.batch_l2(isax.znorm(qs), isax.znorm(raw))         # (Q, N) id order
+    neg, ids = jax.lax.top_k(-d, k)
+    return np.sqrt(np.maximum(-np.asarray(neg), 0.0)), np.asarray(ids)
+
+
+PATHS = {
+    "messi": lambda idx, raw, qs, k: core.search(idx, qs, k=k),
+    "block_major": lambda idx, raw, qs, k: search_block_major(idx, qs, k=k),
+    "paris": lambda idx, raw, qs, k: search_paris(idx, qs, k=k, chunk=256),
+    "ucr": lambda idx, raw, qs, k: search_scan(raw, qs, k=k),
+}
+
+
+@pytest.mark.parametrize("k", [1, 5, 32])
+@pytest.mark.parametrize("path", sorted(PATHS))
+def test_topk_matches_oracle(path, k):
+    raw = jnp.asarray(walks(768, 128, seed=21))
+    qs = jnp.asarray(walks(6, 128, seed=22))
+    idx = core.build(raw, capacity=64)
+    got = PATHS[path](idx, raw, qs, k)
+    want_d, want_i = oracle_topk(raw, qs, k)
+    assert got.idx.shape == (6, k)
+    assert np.array_equal(np.asarray(got.idx), want_i), path
+    np.testing.assert_allclose(np.asarray(got.dist), want_d,
+                               rtol=1e-3, atol=5e-3)
+
+
+@pytest.mark.parametrize("path", sorted(PATHS))
+def test_k_larger_than_dataset_pads_with_inf(path):
+    """k > n_real: the tail of the frontier stays (INF, -1)."""
+    n_real, k = 7, 32
+    raw = jnp.asarray(walks(n_real, 64, seed=23))
+    qs = jnp.asarray(walks(3, 64, seed=24))
+    idx = core.build(raw, capacity=4)
+    got = PATHS[path](idx, raw, qs, k)
+    want_d, want_i = oracle_topk(raw, qs, n_real)
+    gi, gd = np.asarray(got.idx), np.asarray(got.dist)
+    assert np.array_equal(gi[:, :n_real], want_i)
+    np.testing.assert_allclose(gd[:, :n_real], want_d, rtol=1e-3, atol=5e-3)
+    assert (gi[:, n_real:] == -1).all()
+    assert (gd[:, n_real:] == np.float32(np.finfo(np.float32).max)).all()
+
+
+@pytest.mark.parametrize("path", sorted(PATHS))
+def test_duplicate_distance_ties_break_by_id(path):
+    """Exact duplicate series => tied distances; order must match the
+    oracle's smallest-id-first tiebreak on every path."""
+    base = walks(32, 64, seed=25)
+    raw = jnp.asarray(np.concatenate([base, base, base]))     # ids i, i+32, i+64
+    qs = jnp.asarray(base[:4])
+    idx = core.build(raw, capacity=8)
+    k = 6
+    got = PATHS[path](idx, raw, qs, k)
+    want_d, want_i = oracle_topk(raw, qs, k)
+    assert np.array_equal(np.asarray(got.idx), want_i), path
+    # the query's own triplet {q, q+32, q+64} is the tied zero-distance set
+    assert np.array_equal(np.asarray(got.idx)[:, :3],
+                          np.arange(4)[:, None] + np.array([0, 32, 64]))
+
+
+def test_frontier_insert_merge_unit():
+    """Pure frontier ops: dedup, tie order, padding, merge symmetry."""
+    f = frontier_lib.init(1, 3)
+    f = f.insert(jnp.asarray([[2.0, 1.0, 5.0]]),
+                 jnp.asarray([[7, 9, 4]], jnp.int32))
+    assert np.array_equal(np.asarray(f.ids), [[9, 7, 4]])
+    # duplicate id keeps one slot at the min distance
+    f = f.insert(jnp.asarray([[0.5, 2.0]]), jnp.asarray([[7, 2]], jnp.int32))
+    assert np.array_equal(np.asarray(f.ids), [[7, 9, 2]])
+    assert np.allclose(np.asarray(f.dists), [[0.5, 1.0, 2.0]])
+    # ties break toward the smaller id
+    g = frontier_lib.init(1, 3).insert(
+        jnp.asarray([[1.0, 1.0, 1.0, 1.0]]),
+        jnp.asarray([[8, 3, 11, 5]], jnp.int32))
+    assert np.array_equal(np.asarray(g.ids), [[3, 5, 8]])
+    # merge == insert of the other frontier's rows; at the tied distance
+    # 1.0 the ids {3, 5, 8, 9} compete and the smallest two win
+    m = f.merge(g)
+    assert np.array_equal(np.asarray(m.ids), [[7, 3, 5]])
+    assert np.allclose(np.asarray(m.dists), [[0.5, 1.0, 1.0]])
+    # invalid ids never enter; short frontiers stay padded
+    h = frontier_lib.init(2, 4).insert(
+        jnp.asarray([[1.0, 2.0], [3.0, 4.0]]),
+        jnp.asarray([[5, -1], [-1, 6]], jnp.int32))
+    assert np.array_equal(np.asarray(h.ids), [[5, -1, -1, -1],
+                                              [6, -1, -1, -1]])
+
+
+def test_distributed_merge_disjoint_topk():
+    """Each shard holds a disjoint slice of the true top-k; the round-2
+    all-gather + merge must reassemble the exact global answer."""
+    run_subprocess("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import distributed, isax, ucr
+from repro.kernels import ops
+mesh = jax.make_mesh((8,), ("data",))
+rng = np.random.default_rng(31)
+q0 = np.cumsum(rng.standard_normal(128)).astype(np.float32)
+# 2048 series range-sharded over 8 shards (256 each); plant the 16 closest
+# neighbours two per shard so every shard owns a disjoint piece of the
+# true top-16 (background series are independent walks, far away in
+# z-norm space).
+raw = np.cumsum(rng.standard_normal((2048, 128)).astype(np.float32), axis=1)
+for j in range(16):
+    shard = j % 8
+    raw[shard * 256 + 100 + j // 8] = q0 + 0.03 * (j + 1) * np.sin(
+        np.arange(128)).astype(np.float32)
+qs = jnp.asarray(np.stack([q0, q0 + 0.05]))
+sidx = distributed.build_sharded(jnp.asarray(raw), mesh, capacity=64)
+k = 16
+res = distributed.search_sharded(sidx, qs, mesh, k=k)
+want = ucr.search_scan(jnp.asarray(raw), qs, k=k)
+d = ops.batch_l2(isax.znorm(qs), isax.znorm(jnp.asarray(raw)))
+_, oid = jax.lax.top_k(-d, k)
+assert np.array_equal(np.asarray(want.idx), np.asarray(oid))
+assert np.array_equal(np.asarray(res.idx), np.asarray(oid))
+# near-duplicate distances carry expanded-form L2 noise (see
+# kernels/batch_l2.py), so the distance check is absolute-tolerance
+assert np.allclose(np.asarray(res.dist), np.asarray(want.dist),
+                   rtol=1e-3, atol=5e-3)
+# the planted neighbours span multiple shards in the answer
+shards_hit = set(int(i) // 256 for i in np.asarray(res.idx[0]))
+assert len(shards_hit) >= 4, shards_hit
+print("OK")
+""")
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.integers(2, 48),
+       st.sampled_from([1, 3, 8]), st.sampled_from([32, 64]))
+def test_threshold_never_prunes_true_knn(seed, n_series, k, length):
+    """Property: pruning against frontier.threshold() keeps every true
+    k-NN member, for random shapes, seeds, and k (incl. k > n_series)."""
+    r = np.random.default_rng(seed)
+    raw = jnp.asarray(np.cumsum(r.standard_normal((n_series, length)),
+                                axis=1).astype(np.float32))
+    qs = jnp.asarray(np.cumsum(r.standard_normal((2, length)),
+                               axis=1).astype(np.float32))
+    idx = core.build(raw, capacity=8)
+    got = core.search(idx, qs, k=k, blocks_per_iter=2)
+    kk = min(k, n_series)
+    want_d, want_i = oracle_topk(raw, qs, kk)
+    assert np.array_equal(np.asarray(got.idx)[:, :kk], want_i)
+    np.testing.assert_allclose(np.asarray(got.dist)[:, :kk], want_d,
+                               rtol=1e-3, atol=5e-3)
