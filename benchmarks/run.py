@@ -16,18 +16,21 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_build, bench_capacity, bench_dtw,
-                            bench_query, bench_scaling)
+                            bench_ooc, bench_query, bench_scaling)
 
     t0 = time.time()
     if args.quick:
         bench_build.run(sizes=(20_000,), datasets=("synthetic",))
         bench_query.run(sizes=(50_000,), datasets=("synthetic",))
+        bench_ooc.run(sizes=(20_000,), datasets=("synthetic",),
+                      capacity=256, ks=(1, 5))
         bench_dtw.run(n=5_000)
         bench_capacity.run(n=50_000, capacities=(256, 1024))
         bench_scaling.run(device_counts=(1, 4))
     else:
         bench_build.run()
         bench_query.run()
+        bench_ooc.run()
         bench_dtw.run()
         bench_capacity.run()
         bench_scaling.run()

@@ -9,15 +9,24 @@ application end to end:
   3. serve batched nearest-neighbour queries (new sequences -> embed ->
      exact cosine top-k result lists), with latency stats.
 
-    PYTHONPATH=src python examples/serve_with_index.py [--arch rwkv6-7b] [--k 5]
+With ``--index-path`` the index persists across launches (DESIGN.md §5):
+the first run builds and saves it; every later run skips the corpus
+embedding + build entirely and OPENS the file out-of-core — summaries on
+device, raw embeddings streamed from disk per query batch — which is how
+a server cold-starts against an index far larger than device memory.
+
+    PYTHONPATH=src python examples/serve_with_index.py [--arch rwkv6-7b] \\
+        [--k 5] [--index-path /tmp/corpus.dsix]
 """
 import argparse
+import os
 import time
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro import storage
 from repro.configs import get_config
 from repro.core import vector
 from repro.models import common, transformer as T
@@ -40,6 +49,9 @@ def main():
     ap.add_argument("--seq", type=int, default=64)
     ap.add_argument("--k", type=int, default=5,
                     help="neighbours returned per query (exact top-k)")
+    ap.add_argument("--index-path", default=None,
+                    help="persisted index file: built+saved on first run, "
+                         "opened out-of-core (no rebuild) afterwards")
     args = ap.parse_args()
 
     cfg = get_config(args.arch, smoke=True)
@@ -51,19 +63,41 @@ def main():
     topics = rng.integers(0, 8, args.corpus)
     toks = ((topics[:, None] * 61 + rng.integers(0, 32,
              (args.corpus, args.seq))) % cfg.vocab).astype(np.int32)
-
-    print(f"embedding {args.corpus} docs with {cfg.name} (reduced) ...")
     embed_fn = jax.jit(lambda p, t: embed(p, cfg, t))
-    embs = []
-    t0 = time.perf_counter()
-    for i in range(0, args.corpus, 256):
-        embs.append(embed_fn(params, jnp.asarray(toks[i:i + 256])))
-    embs = jnp.concatenate(embs)
-    jax.block_until_ready(embs)
-    print(f"  {time.perf_counter()-t0:.1f}s -> embeddings {embs.shape}")
 
-    print("building MESSI vector index ...")
-    index = vector.build_vector_index(embs, capacity=256)
+    index = None
+    if args.index_path and os.path.exists(args.index_path):
+        extra = storage.read_meta(args.index_path)["extra"]
+        # the embedding space is defined by (model, corpus): a mismatch on
+        # either would silently serve neighbours from the wrong space
+        want = {"kind": "vector", "corpus": args.corpus, "arch": args.arch}
+        if {k: extra.get(k) for k in want} != want:
+            raise SystemExit(f"{args.index_path} holds {extra}, not a "
+                             f"vector index for {want} — delete it "
+                             f"or pass a different --index-path")
+        index = storage.open_index(args.index_path)
+        print(f"opened {args.index_path} out-of-core: "
+              f"{index.n_real} x {index.n} embeddings, "
+              f"{index.n_blocks} blocks on disk")
+    else:
+        print(f"embedding {args.corpus} docs with {cfg.name} (reduced) ...")
+        embs = []
+        t0 = time.perf_counter()
+        for i in range(0, args.corpus, 256):
+            embs.append(embed_fn(params, jnp.asarray(toks[i:i + 256])))
+        embs = jnp.concatenate(embs)
+        jax.block_until_ready(embs)
+        print(f"  {time.perf_counter()-t0:.1f}s -> embeddings {embs.shape}")
+
+        print("building MESSI vector index ...")
+        index = vector.build_vector_index(embs, capacity=256)
+        if args.index_path:
+            storage.save_index(index, args.index_path,
+                               extra={"kind": "vector", "dim": embs.shape[-1],
+                                      "corpus": args.corpus,
+                                      "arch": args.arch})
+            print(f"saved index -> {args.index_path} "
+                  f"(next launch opens it, no rebuild)")
 
     # queries: perturbed members of known clusters
     qi = rng.choice(args.corpus, args.queries, replace=False)
@@ -71,16 +105,23 @@ def main():
     flip = rng.random(q_toks.shape) < 0.1
     q_toks[flip] = rng.integers(0, cfg.vocab, int(flip.sum()))
     q_embs = embed_fn(params, jnp.asarray(q_toks))
+    dim = index.n
 
-    res = vector.search_vectors(index, q_embs, k=args.k)  # warmup + compile
+    if index.device_resident:
+        run = lambda: vector.search_vectors(index, q_embs, k=args.k)
+    else:
+        q_prep = vector.prep_vectors(q_embs)
+        run = lambda: storage.ooc_search(index, q_prep, k=args.k,
+                                         normalize_queries=False)
+    res = run()                                         # warmup + compile
     jax.block_until_ready(res.dist)
     t0 = time.perf_counter()
-    res = vector.search_vectors(index, q_embs, k=args.k)
+    res = run()
     jax.block_until_ready(res.dist)
     dt = (time.perf_counter() - t0) / args.queries * 1e3
 
     ids = np.asarray(res.idx)                           # (Q, K) result lists
-    cos = np.asarray(vector.cosine_scores(res, dim=embs.shape[-1]))
+    cos = np.asarray(vector.cosine_scores(res, dim=dim))
     valid = ids >= 0                                    # k > corpus -> -1 pads
     hits = (topics[np.where(valid, ids, 0)] == topics[qi][:, None]) & valid
     same_topic = hits.sum() / max(valid.sum(), 1)
@@ -92,6 +133,10 @@ def main():
           f"rank-{args.k} cosine {cos[:, -1].mean():.3f}")
     print(f"  refined {float(np.mean(np.asarray(res.stats.series_refined))):.0f} "
           f"of {args.corpus} embeddings per query (pruning at work)")
+    if not index.device_resident:
+        print(f"  raw bytes read: {res.io.bytes_read:,} of "
+              f"{res.io.bytes_scan:,} a scan would need "
+              f"({100 * res.io.read_fraction:.0f}%)")
 
 
 if __name__ == "__main__":

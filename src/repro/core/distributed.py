@@ -1,4 +1,4 @@
-"""Multi-device / multi-pod index build and query answering (DESIGN.md §5).
+"""Multi-device / multi-pod index build and query answering (DESIGN.md §6).
 
 The paper's worker threads become mesh devices.  Every device is symmetric
 (as every core is in the paper): the dataset is range-sharded over ALL mesh

@@ -146,7 +146,7 @@ def all_gather_merge(f: Frontier, axis_names) -> Frontier:
     """Inside shard_map: merge every shard's frontier into the global top-k.
 
     One (D, Q, K) all-gather + one local sort per shard — communication
-    independent of dataset size (the round-2 exchange of DESIGN.md §5).
+    independent of dataset size (the round-2 exchange of DESIGN.md §6).
     """
     gd = jax.lax.all_gather(f.dists, axis_names)   # (D, Q, K)
     gi = jax.lax.all_gather(f.ids, axis_names)
@@ -207,6 +207,11 @@ def prepare(queries: jax.Array, k: int, *, index=None, w: int | None = None,
     q = (isax.znorm(queries) if normalize else queries).astype(jnp.float32)
     qn = q.shape[0]
     q_paa = block_lb = None
+    if index is not None and not index.device_resident:
+        raise ValueError(
+            "index raw series are not device-resident (opened out-of-core "
+            "via storage.open_index); use repro.storage.ooc_search, or "
+            "storage.load_index for the in-memory paths")
     if index is not None:
         q_paa = isax.paa(q, index.w)
         front, block_lb = approximate(index, q, q_paa, k)

@@ -27,6 +27,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.core import isax
 from repro.kernels import ops
@@ -34,10 +35,36 @@ from repro.kernels import ops
 RAW_PAD = 1.0e4   # pad-series point value: squared distance >> any real one
 
 
+class HostRawBlocks:
+    """Host-side raw blocks of an index opened out-of-core (DESIGN.md §5).
+
+    Wraps the (B, C, n) raw section of a persisted index — normally an
+    ``np.memmap`` over the index file — so the streaming search
+    (storage/ooc_search.py) can fetch one block at a time while only the
+    summaries/envelopes live on device.  Rides in the ``BlockIndex``
+    treedef as static metadata, so it uses default identity hash/eq: the
+    contents never reach a trace, only ``fetch`` results do, as operands.
+    """
+
+    def __init__(self, blocks, path: str | None = None):
+        self.blocks = blocks
+        self.path = path
+
+    @property
+    def block_nbytes(self) -> int:
+        """Bytes of one (C, n) raw block as stored on disk."""
+        _, c, n = self.blocks.shape
+        return c * n * self.blocks.dtype.itemsize
+
+    def fetch(self, block_id: int) -> np.ndarray:
+        """Read one (C, n) block into a fresh host array (the disk I/O)."""
+        return np.ascontiguousarray(self.blocks[block_id])
+
+
 @functools.partial(
     jax.tree_util.register_dataclass,
     data_fields=["raw", "slo", "shi", "elo", "ehi", "ids"],
-    meta_fields=["n", "w", "card", "capacity", "n_real"],
+    meta_fields=["n", "w", "card", "capacity", "n_real", "host_raw"],
 )
 @dataclasses.dataclass
 class BlockIndex:
@@ -53,10 +80,20 @@ class BlockIndex:
     card: int
     capacity: int
     n_real: int      # number of non-padding series
+    # Out-of-core hook: set by storage.open_index, which leaves ``raw`` as a
+    # zero-width (B, 0, n) placeholder and keeps the real blocks on disk.
+    # The device search paths refuse such an index (frontier.prepare);
+    # storage.ooc_search streams blocks through HostRawBlocks.fetch instead.
+    host_raw: HostRawBlocks | None = None
 
     @property
     def n_blocks(self) -> int:
         return self.raw.shape[0]
+
+    @property
+    def device_resident(self) -> bool:
+        """True when the raw series are on device (the in-memory paths)."""
+        return self.raw.shape[1] == self.capacity
 
 
 @functools.partial(
@@ -94,6 +131,29 @@ def build(raw: jax.Array, *, w: int = isax.W, card: int = isax.CARD,
                            n=n, w=w, card=card, capacity=capacity)
 
 
+def block_envelopes(slo, shi, ids_b, xp=jnp):
+    """Per-block envelopes from per-series bounds. -> (elo, ehi), (w, B).
+
+    slo/shi (B, w, C), ids_b (B, C).  pad members are identified by id < 0,
+    NOT by sentinel values: a REAL series in the top (or bottom) symbol
+    region legitimately carries a +/-SENTINEL edge, and excluding it would
+    shrink the envelope below a member's region — a false-dismissal bug
+    (caught by the hypothesis envelope-containment property).  Blocks that
+    are pure padding get a sentinel envelope (never selected).
+
+    ``xp`` is the array namespace: jnp for the jit-compatible builders
+    here, np for the out-of-core builder (storage/ooc_build.py) — one
+    definition of the envelope rules for both.
+    """
+    real = (ids_b >= 0)[:, None, :]                           # (B, 1, C)
+    elo = xp.min(xp.where(real, slo, isax.SENTINEL), axis=2).T     # (w, B)
+    ehi = xp.max(xp.where(real, shi, -isax.SENTINEL), axis=2).T    # (w, B)
+    any_real = xp.any(ids_b >= 0, axis=1)                     # (B,)
+    elo = xp.where(any_real[None, :], elo, isax.SENTINEL)
+    ehi = xp.where(any_real[None, :], ehi, isax.SENTINEL)
+    return elo, ehi
+
+
 def assemble_blocks(xn: jax.Array, bounds: jax.Array, ids: jax.Array, *,
                     n: int, w: int, card: int, capacity: int) -> BlockIndex:
     """Cut iSAX-sorted series into fixed-capacity blocks (+ envelopes).
@@ -116,18 +176,7 @@ def assemble_blocks(xn: jax.Array, bounds: jax.Array, ids: jax.Array, *,
     bounds_b = bounds.reshape(b, cap, w, 2)
     slo = jnp.transpose(bounds_b[..., 0], (0, 2, 1))          # (B, w, C)
     shi = jnp.transpose(bounds_b[..., 1], (0, 2, 1))
-    # pad members are identified by id < 0, NOT by sentinel values: a REAL
-    # series in the top (or bottom) symbol region legitimately carries a
-    # +/-SENTINEL edge, and excluding it would shrink the envelope below a
-    # member's region — a false-dismissal bug (caught by the hypothesis
-    # envelope-containment property).
-    real = (ids.reshape(b, cap) >= 0)[:, None, :]             # (B, 1, C)
-    elo = jnp.min(jnp.where(real, slo, isax.SENTINEL), axis=2).T   # (w, B)
-    ehi = jnp.max(jnp.where(real, shi, -isax.SENTINEL), axis=2).T  # (w, B)
-    # blocks that are pure padding: sentinel envelope (never selected)
-    any_real = jnp.any(ids.reshape(b, cap) >= 0, axis=1)      # (B,)
-    elo = jnp.where(any_real[None, :], elo, isax.SENTINEL)
-    ehi = jnp.where(any_real[None, :], ehi, isax.SENTINEL)
+    elo, ehi = block_envelopes(slo, shi, ids.reshape(b, cap))
 
     return BlockIndex(raw=raw_b, slo=slo, shi=shi, elo=elo, ehi=ehi,
                       ids=ids.reshape(b, cap), n=n, w=w, card=card,
@@ -136,6 +185,9 @@ def assemble_blocks(xn: jax.Array, bounds: jax.Array, ids: jax.Array, *,
 
 def flat_view(index: BlockIndex) -> FlatIndex:
     """Reinterpret the block index as a ParIS-style flat SAX array."""
+    if not index.device_resident:
+        raise ValueError("flat_view needs device-resident raw series; this "
+                         "index was opened out-of-core (storage.open_index)")
     b, c, n = index.raw.shape
     w = index.w
     lo = jnp.transpose(index.slo, (1, 0, 2)).reshape(w, b * c)

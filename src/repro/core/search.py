@@ -62,6 +62,45 @@ def _result(front: Frontier, stats: SearchStats) -> SearchResult:
 _bound = frontier_lib.bound
 
 
+def refine_panel(q: jax.Array, q_paa: jax.Array, front: Frontier,
+                 stats: SearchStats, block: jax.Array, ids_b: jax.Array,
+                 lo: jax.Array | None, hi: jax.Array | None,
+                 active: jax.Array, thr: jax.Array, *, n: int, w: int,
+                 lb_filter: bool) -> tuple[Frontier, SearchStats]:
+    """Refine one (C, n) raw block panel against every query at once.
+
+    The per-block unit of work shared by the in-memory block-major schedule
+    and the out-of-core streaming search (storage/ooc_search.py, which feeds
+    it blocks fetched through ``BlockIndex.host_raw``): optional per-series
+    MINDIST filtering, one (Q, C) MXU distance panel, one frontier insert,
+    and the work-stat updates.  ``active`` (Q,) masks queries whose envelope
+    lower bound beat ``thr``; ``lo``/``hi`` are the block's (w, C) per-series
+    bounds (unused when ``lb_filter`` is False).
+    """
+    qn, c = q.shape[0], block.shape[0]
+    if lb_filter:
+        qe = q_paa[:, :, None]                                 # (Q, w, 1)
+        dd = jnp.maximum(jnp.maximum(lo[None] - qe, qe - hi[None]), 0.0)
+        s_lb = (n / w) * jnp.sum(dd * dd, axis=1)              # (Q, C)
+        s_act = (s_lb < thr[:, None]) & active[:, None]
+    else:
+        s_act = jnp.broadcast_to(active[:, None], (qn, c))
+    d = ops.batch_l2(q, block)                                 # (Q, C)
+    live = s_act & (ids_b >= 0)[None, :]
+    d = jnp.where(live, d, INF)
+    front = front.insert(d, jnp.where(live, ids_b[None, :], -1))
+    stats = SearchStats(
+        blocks_visited=stats.blocks_visited + active.astype(jnp.int32),
+        series_refined=stats.series_refined
+        + jnp.sum(live, axis=1, dtype=jnp.int32),
+        lb_series=stats.lb_series
+        + (active.astype(jnp.int32) * c if lb_filter
+           else stats.lb_series * 0),
+        iters=stats.iters,
+    )
+    return front, stats
+
+
 @functools.partial(jax.jit, static_argnames=("k", "blocks_per_iter",
                                              "lb_filter", "deadline_blocks",
                                              "normalize_queries"))
@@ -204,33 +243,15 @@ def search_block_major(index: BlockIndex, queries: jax.Array, *, k: int = 1,
                                                  keepdims=False)   # (C, n)
             ids_b = jax.lax.dynamic_index_in_dim(index.ids, b_id, 0,
                                                  keepdims=False)   # (C,)
+            lo = hi = None
             if lb_filter:
                 lo = jax.lax.dynamic_index_in_dim(index.slo, b_id, 0,
                                                   keepdims=False)  # (w, C)
                 hi = jax.lax.dynamic_index_in_dim(index.shi, b_id, 0,
                                                   keepdims=False)
-                qe = q_paa[:, :, None]                             # (Q, w, 1)
-                dd = jnp.maximum(jnp.maximum(lo[None] - qe, qe - hi[None]),
-                                 0.0)
-                s_lb = (n / index.w) * jnp.sum(dd * dd, axis=1)    # (Q, C)
-                s_act = (s_lb < thr[:, None]) & active[:, None]
-            else:
-                s_act = jnp.broadcast_to(active[:, None], (qn, c))
-            d = ops.batch_l2(q, block)                             # (Q, C)
-            live = s_act & (ids_b >= 0)[None, :]
-            d = jnp.where(live, d, INF)
-            f_n = f_i.insert(d, jnp.where(live, ids_b[None, :], -1))
-            st_n = SearchStats(
-                blocks_visited=st_i.blocks_visited
-                + active.astype(jnp.int32),
-                series_refined=st_i.series_refined
-                + jnp.sum(live, axis=1, dtype=jnp.int32),
-                lb_series=st_i.lb_series
-                + (active.astype(jnp.int32) * c if lb_filter
-                   else st_i.lb_series * 0),
-                iters=st_i.iters,
-            )
-            return f_n, st_n
+            return refine_panel(q, q_paa, f_i, st_i, block, ids_b, lo, hi,
+                                active, thr, n=n, w=index.w,
+                                lb_filter=lb_filter)
 
         f_n, st_n = jax.lax.cond(
             jnp.any(active), refine, lambda cr: cr, (f, st))

@@ -21,7 +21,7 @@ from repro.core.search import SearchResult
 from repro.core.search import search as _search
 
 
-def _prep(v: jax.Array, unit_norm: bool) -> jax.Array:
+def prep_vectors(v: jax.Array, unit_norm: bool = True) -> jax.Array:
     v = v.astype(jnp.float32)
     if unit_norm:
         v = v / jnp.maximum(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-8)
@@ -37,14 +37,14 @@ def build_vector_index(embs: jax.Array, *, w: int = 16, card: int = 256,
                        capacity: int = 512,
                        unit_norm: bool = True) -> BlockIndex:
     """embs (N, d) with d divisible by w."""
-    return index_lib.build(_prep(embs, unit_norm), w=w, card=card,
+    return index_lib.build(prep_vectors(embs, unit_norm), w=w, card=card,
                            capacity=capacity, normalize=False)
 
 
 def search_vectors(index: BlockIndex, queries: jax.Array, *, k: int = 1,
                    unit_norm: bool = True, **kw) -> SearchResult:
     """Exact k-NN over the vector index. queries (Q, d) -> (Q, K) results."""
-    q = _prep(queries, unit_norm)
+    q = prep_vectors(queries, unit_norm)
     return _search(index, q, k=k, normalize_queries=False, **kw)
 
 

@@ -13,6 +13,7 @@ launch per chunk), with the final sort/partition as the construction stage.
 """
 from __future__ import annotations
 
+import os
 from typing import Callable, Iterator, Sequence
 
 import jax
@@ -28,15 +29,28 @@ from repro.kernels import ops
 class ChunkedLoader:
     """Iterate a host dataset in fixed-size chunks with one-chunk prefetch.
 
-    ``source`` is either a host ndarray (sliced lazily — the "file") or a
-    callable ``(start, stop) -> np.ndarray`` (a reader).  The loader keeps at
-    most two chunks in flight: the one the consumer holds and the one being
-    staged to device — the paper's double buffer.
+    ``source`` is a host ndarray (sliced lazily — the "file"), a callable
+    ``(start, stop) -> np.ndarray`` (a reader), or a ``str | Path`` to a
+    headerless row-major series file, which is np.memmap'd and needs
+    ``length`` (points per series; see storage.format.SeriesStore).  The
+    loader keeps at most two chunks in flight: the one the consumer holds
+    and the one being staged to device — the paper's double buffer.
     """
 
     def __init__(self, source, n_series: int | None = None, *,
-                 chunk: int = 1 << 16, device=None):
-        if callable(source):
+                 chunk: int = 1 << 16, device=None,
+                 length: int | None = None, dtype=np.float32):
+        if isinstance(source, (str, os.PathLike)):
+            if length is None:
+                raise ValueError("length required for a file source")
+            mm = np.memmap(source, dtype=np.dtype(dtype), mode="r")
+            if mm.size % length:
+                raise ValueError(f"{source}: size {mm.size} not a multiple "
+                                 f"of series length {length}")
+            mm = mm.reshape(-1, length)
+            self._read = lambda a, b: mm[a:b]
+            self.n_series = mm.shape[0] if n_series is None else n_series
+        elif callable(source):
             if n_series is None:
                 raise ValueError("n_series required for a callable source")
             self._read = source

@@ -20,7 +20,7 @@ with a fori_loop, carrying h.  ``interpret=True`` validates against
 Scope note: forward only (inference prefill / scoring).  The training path
 needs a custom VJP (the standard trick: save h at chunk boundaries and
 recompute inside — same structure Mamba's CUDA kernel uses); scoped in
-DESIGN.md §7 as the next §Perf lever, not wired by default.
+DESIGN.md §8 as the next §Perf lever, not wired by default.
 """
 from __future__ import annotations
 

@@ -2,7 +2,7 @@
 
 ``input_specs`` returns the abstract inputs each cell's step function is
 lowered with — weak-type-correct, shardable, zero allocation.  The sharding
-rules (DESIGN.md §6):
+rules (DESIGN.md §7):
 
   batch        -> data axes ("pod","data")
   params       -> logical-axis resolver (model TP/EP; FSDP over data for the

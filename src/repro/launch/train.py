@@ -1,6 +1,6 @@
 """Training driver: any assigned arch, any mesh, synthetic or file data.
 
-Fault tolerance wired in (DESIGN.md §5): resume-from-latest-checkpoint,
+Fault tolerance wired in (DESIGN.md §6): resume-from-latest-checkpoint,
 SIGTERM -> synchronous final checkpoint, NaN-step skipping (inside the jitted
 step), keep-last-k checkpoints.
 

@@ -1,7 +1,7 @@
 """Attention: chunked online-softmax (flash-style in pure JAX) for training
 and prefill, plus KV-cache decode (full cache and ring-buffer SWA cache).
 
-Design (DESIGN.md §6):
+Design (DESIGN.md §7):
   * training/prefill never materialize (S, S) scores: an outer ``lax.scan``
     over query chunks and an inner scan over KV chunks carry the running
     (max, denominator, accumulator) triple — block memory is

@@ -1,0 +1,12 @@
+"""On-disk index subsystem (DESIGN.md §5): persisted index format,
+two-pass out-of-core build, and streaming exact k-NN search."""
+from repro.storage.format import (SeriesStore, load_index, open_index,
+                                  read_meta, save_index)
+from repro.storage.ooc_build import SummaryBuilder, build_on_disk
+from repro.storage.ooc_search import IOStats, OocSearchResult, ooc_search
+
+__all__ = [
+    "SeriesStore", "save_index", "load_index", "open_index", "read_meta",
+    "build_on_disk", "SummaryBuilder",
+    "ooc_search", "OocSearchResult", "IOStats",
+]

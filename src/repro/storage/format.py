@@ -1,0 +1,328 @@
+"""Persisted index file format + raw-series store (DESIGN.md §5).
+
+The paper's on-disk systems (ParIS/ParIS+) hold only the iSAX summaries in
+memory and leave the raw series on disk; queries touch raw bytes only for
+the leaves that survive pruning.  This module is the serialization layer
+that makes the same split possible here:
+
+  * ``save_index`` persists a built ``BlockIndex`` into one versioned file;
+  * ``load_index`` reads it back fully onto device (the in-memory paths);
+  * ``open_index`` reads ONLY the summaries/envelopes/ids onto device and
+    leaves the raw blocks as an ``np.memmap`` over the file — the
+    out-of-core view that storage/ooc_search.py streams from.
+
+File layout (all little-endian; one file, mmap-friendly):
+
+    0:4    magic  b"DSIX"
+    4:8    u32    format version
+    8:16   u64    meta length L (bytes of UTF-8 JSON)
+    16:24  u64    data_start (absolute, page-aligned)
+    24:24+L       meta JSON: index meta (n, w, card, capacity, n_real,
+                  n_blocks), caller ``extra`` dict, and per-section
+                  {offset (relative to data_start), shape, dtype}
+
+    data_start +  ids (B, C) i4 · slo (B, w, C) f4 · shi · elo (w, B) f4
+                  · ehi — each 64-aligned — then, page-aligned and LAST,
+                  raw (B, C, n) f4, so the memmap window is one contiguous
+                  aligned span and appending raw during a streaming build
+                  (ooc_build.IndexFileWriter) needs no backpatching.
+
+``SeriesStore`` handles the other file kind in play: headerless raw-series
+datasets (row-major float32 (N, n), the standard data-series benchmark
+format), so builds can start from a path instead of an in-RAM array.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import struct
+from pathlib import Path
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.index import BlockIndex, HostRawBlocks
+
+MAGIC = b"DSIX"
+VERSION = 1
+_ALIGN = 64          # section alignment
+_PAGE = 4096         # raw-section (memmap window) alignment
+_FIXED = 24          # bytes before the meta JSON
+
+# Section order is part of the format: raw last (see module docstring).
+_SECTIONS = ("ids", "slo", "shi", "elo", "ehi", "raw")
+
+
+def _align(off: int, align: int) -> int:
+    return (off + align - 1) // align * align
+
+
+def _section_specs(*, n_blocks: int, capacity: int, w: int, n: int) -> dict:
+    """name -> {offset (relative), shape, dtype} for the fixed layout."""
+    b, c = n_blocks, capacity
+    shapes = {
+        "ids": ((b, c), "<i4"),
+        "slo": ((b, w, c), "<f4"),
+        "shi": ((b, w, c), "<f4"),
+        "elo": ((w, b), "<f4"),
+        "ehi": ((w, b), "<f4"),
+        "raw": ((b, c, n), "<f4"),
+    }
+    specs, off = {}, 0
+    for name in _SECTIONS:
+        shape, dtype = shapes[name]
+        off = _align(off, _PAGE if name == "raw" else _ALIGN)
+        specs[name] = {"offset": off, "shape": list(shape), "dtype": dtype}
+        off += int(np.prod(shape)) * np.dtype(dtype).itemsize
+    return specs
+
+
+def _build_meta(index_meta: dict, extra: dict | None) -> tuple[bytes, int]:
+    """-> (meta JSON bytes, absolute data_start)."""
+    specs = _section_specs(
+        n_blocks=index_meta["n_blocks"], capacity=index_meta["capacity"],
+        w=index_meta["w"], n=index_meta["n"])
+    meta = dict(index_meta)
+    meta["extra"] = dict(extra or {})
+    meta["sections"] = specs
+    blob = json.dumps(meta).encode()
+    return blob, _align(_FIXED + len(blob), _PAGE)
+
+
+class IndexFileWriter:
+    """Incremental writer for the index file format.
+
+    ``save_index`` uses it in one shot; the out-of-core builder
+    (storage/ooc_build.py) uses it to append raw blocks as they are
+    permuted off the source file, never holding them all at once.
+    """
+
+    def __init__(self, path: str | Path, *, n: int, w: int, card: int,
+                 capacity: int, n_real: int, n_blocks: int,
+                 extra: dict | None = None):
+        self.path = Path(path)
+        self.meta = dict(n=n, w=w, card=card, capacity=capacity,
+                         n_real=n_real, n_blocks=n_blocks)
+        blob, data_start = _build_meta(self.meta, extra)
+        self.sections = json.loads(blob)["sections"]
+        self.data_start = data_start
+        self._raw_rows = 0
+        # write-to-tmp + rename publish (same property train/checkpoint.py
+        # relies on): a killed build never clobbers an existing good index
+        # and never leaves a partial file at the final path
+        self._tmp = self.path.with_name(
+            f".tmp-{os.getpid()}-{self.path.name}")
+        self._f = open(self._tmp, "wb")
+        self._f.write(MAGIC)
+        self._f.write(struct.pack("<I", VERSION))
+        self._f.write(struct.pack("<QQ", len(blob), data_start))
+        self._f.write(blob)
+
+    def write_section(self, name: str, array: np.ndarray) -> None:
+        spec = self.sections[name]
+        arr = np.ascontiguousarray(array, dtype=np.dtype(spec["dtype"]))
+        if list(arr.shape) != spec["shape"]:
+            raise ValueError(f"{name}: shape {arr.shape} != {spec['shape']}")
+        self._f.seek(self.data_start + spec["offset"])
+        self._f.write(arr.tobytes())
+
+    def append_raw_rows(self, rows: np.ndarray) -> None:
+        """Append (m, n) f32 series rows to the raw section, in block order."""
+        spec = self.sections["raw"]
+        b, c, n = spec["shape"]
+        rows = np.ascontiguousarray(rows, dtype=np.float32)
+        if rows.ndim != 2 or rows.shape[1] != n:
+            raise ValueError(f"raw rows must be (m, {n}), got {rows.shape}")
+        if self._raw_rows + rows.shape[0] > b * c:
+            raise ValueError("raw section overflow")
+        self._f.seek(self.data_start + spec["offset"]
+                     + self._raw_rows * n * 4)
+        self._f.write(rows.tobytes())
+        self._raw_rows += rows.shape[0]
+
+    def close(self) -> None:
+        spec = self.sections["raw"]
+        b, c, _ = spec["shape"]
+        if self._raw_rows not in (0, b * c):
+            self.abort()
+            raise ValueError(
+                f"raw section incomplete: {self._raw_rows} of {b * c} rows")
+        # ensure the file extends to the full raw span even if the last
+        # rows were all-zero (sparse writes must not shorten the file)
+        end = self.data_start + spec["offset"] + b * c * spec_row_bytes(spec)
+        self._f.truncate(end)
+        self._f.close()
+        os.replace(self._tmp, self.path)   # atomic publish
+
+    def abort(self) -> None:
+        self._f.close()
+        self._tmp.unlink(missing_ok=True)
+
+    def __enter__(self) -> "IndexFileWriter":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        if exc_type is None:
+            self.close()
+        else:
+            self.abort()
+
+
+def spec_row_bytes(spec: dict) -> int:
+    """Bytes of one trailing-dim row of a section (raw: one series)."""
+    return spec["shape"][-1] * np.dtype(spec["dtype"]).itemsize
+
+
+def read_meta(path: str | Path) -> dict:
+    """Parse the header; -> meta dict (incl. 'extra', 'sections',
+    'data_start')."""
+    with open(path, "rb") as f:
+        head = f.read(_FIXED)
+        if len(head) < _FIXED or head[:4] != MAGIC:
+            raise ValueError(f"{path}: not an index file (bad magic)")
+        version, = struct.unpack("<I", head[4:8])
+        if version > VERSION:
+            raise ValueError(f"{path}: format version {version} is newer "
+                             f"than supported ({VERSION})")
+        meta_len, data_start = struct.unpack("<QQ", head[8:24])
+        meta = json.loads(f.read(meta_len).decode())
+    meta["version"] = version
+    meta["data_start"] = data_start
+    return meta
+
+
+def _read_section(f, meta: dict, name: str) -> np.ndarray:
+    spec = meta["sections"][name]
+    f.seek(meta["data_start"] + spec["offset"])
+    count = int(np.prod(spec["shape"]))
+    arr = np.fromfile(f, dtype=np.dtype(spec["dtype"]), count=count)
+    if arr.size != count:
+        raise ValueError(f"{name}: truncated index file")
+    return arr.reshape(spec["shape"])
+
+
+def save_index(index: BlockIndex, path: str | Path, *,
+               extra: dict | None = None) -> Path:
+    """Persist a built (device-resident) index into one file."""
+    if not index.device_resident:
+        raise ValueError("index is already out-of-core; nothing to save")
+    path = Path(path)
+    with IndexFileWriter(path, n=index.n, w=index.w, card=index.card,
+                         capacity=index.capacity, n_real=index.n_real,
+                         n_blocks=index.n_blocks, extra=extra) as wr:
+        wr.write_section("ids", np.asarray(index.ids))
+        wr.write_section("slo", np.asarray(index.slo))
+        wr.write_section("shi", np.asarray(index.shi))
+        wr.write_section("elo", np.asarray(index.elo))
+        wr.write_section("ehi", np.asarray(index.ehi))
+        wr.write_section("raw", np.asarray(index.raw))
+    return path
+
+
+def _load_summaries(path: Path, meta: dict) -> dict:
+    with open(path, "rb") as f:
+        return {name: _read_section(f, meta, name)
+                for name in ("ids", "slo", "shi", "elo", "ehi")}
+
+
+def load_index(path: str | Path) -> BlockIndex:
+    """Full load: everything (raw included) onto device — the in-memory
+    paths (`core.search`, `paris`, …) work on the result unchanged."""
+    path = Path(path)
+    meta = read_meta(path)
+    parts = _load_summaries(path, meta)
+    with open(path, "rb") as f:
+        raw = _read_section(f, meta, "raw")
+    return BlockIndex(
+        raw=jnp.asarray(raw), slo=jnp.asarray(parts["slo"]),
+        shi=jnp.asarray(parts["shi"]), elo=jnp.asarray(parts["elo"]),
+        ehi=jnp.asarray(parts["ehi"]), ids=jnp.asarray(parts["ids"]),
+        n=meta["n"], w=meta["w"], card=meta["card"],
+        capacity=meta["capacity"], n_real=meta["n_real"])
+
+
+def open_index(path: str | Path) -> BlockIndex:
+    """Out-of-core open: summaries/envelopes/ids to device, raw blocks left
+    on disk as an ``np.memmap`` behind ``BlockIndex.host_raw``.
+
+    Device-side HBM cost is the summary footprint only — 2·w floats per
+    series + envelopes — which is what lets a dataset far larger than
+    device memory be searched (storage/ooc_search.py).  ``raw`` becomes a
+    zero-width (B, 0, n) placeholder; the in-memory search paths reject it
+    with a pointer here (frontier.prepare).
+    """
+    path = Path(path)
+    meta = read_meta(path)
+    parts = _load_summaries(path, meta)
+    spec = meta["sections"]["raw"]
+    mm = np.memmap(path, dtype=np.dtype(spec["dtype"]), mode="r",
+                   offset=meta["data_start"] + spec["offset"],
+                   shape=tuple(spec["shape"]))
+    b, _, n = spec["shape"]
+    return BlockIndex(
+        raw=jnp.zeros((b, 0, n), jnp.float32),
+        slo=jnp.asarray(parts["slo"]), shi=jnp.asarray(parts["shi"]),
+        elo=jnp.asarray(parts["elo"]), ehi=jnp.asarray(parts["ehi"]),
+        ids=jnp.asarray(parts["ids"]),
+        n=meta["n"], w=meta["w"], card=meta["card"],
+        capacity=meta["capacity"], n_real=meta["n_real"],
+        host_raw=HostRawBlocks(mm, path=str(path)))
+
+
+@dataclasses.dataclass
+class SeriesStore:
+    """A headerless raw-series file: row-major (n_series, length) float32.
+
+    The standard interchange format of the data-series benchmarks (the
+    paper's 100GB datasets ship exactly like this).  Gives builds a file
+    source: ``memmap()`` for random access (the pass-2 permute),
+    ``read`` for the sequential pass-1 stream (plugs into
+    ``data.ChunkedLoader`` as a reader, or just pass the path — the loader
+    mmaps it itself).
+    """
+    path: Path
+    length: int
+    dtype: np.dtype = np.dtype(np.float32)
+
+    def __post_init__(self):
+        self.path = Path(self.path)
+        self.dtype = np.dtype(self.dtype)
+        size = os.path.getsize(self.path)
+        row = self.length * self.dtype.itemsize
+        if row <= 0 or size % row:
+            raise ValueError(
+                f"{self.path}: size {size} is not a multiple of "
+                f"length {self.length} x itemsize {self.dtype.itemsize}")
+        self.n_series = size // row
+        self._mm: np.memmap | None = None
+
+    def __len__(self) -> int:
+        return self.n_series
+
+    @property
+    def nbytes(self) -> int:
+        return self.n_series * self.length * self.dtype.itemsize
+
+    def memmap(self) -> np.memmap:
+        # one mapping for the store's lifetime: ``read`` is the pass-1
+        # per-chunk reader, so remapping per call would be pure syscall
+        # overhead on the streaming hot path
+        if self._mm is None:
+            self._mm = np.memmap(self.path, dtype=self.dtype, mode="r",
+                                 shape=(self.n_series, self.length))
+        return self._mm
+
+    def read(self, start: int, stop: int) -> np.ndarray:
+        """Copy rows [start, stop) off disk (a ChunkedLoader reader)."""
+        return np.array(self.memmap()[start:stop])
+
+    @classmethod
+    def write(cls, path: str | Path, series: np.ndarray) -> "SeriesStore":
+        """Write an (N, n) array as a headerless store (tests/benchmarks)."""
+        arr = np.ascontiguousarray(series, dtype=np.float32)
+        if arr.ndim != 2:
+            raise ValueError(f"series must be 2-D, got {arr.shape}")
+        with open(path, "wb") as f:
+            f.write(arr.tobytes())
+        return cls(path=Path(path), length=arr.shape[1])

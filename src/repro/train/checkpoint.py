@@ -5,7 +5,7 @@ Layout:
         manifest.json      {"step": n, "leaves": [{"path", "shape", "dtype"}]}
         leaf_00000.npy ...
 
-Properties needed for the fault-tolerance story (DESIGN.md §5):
+Properties needed for the fault-tolerance story (DESIGN.md §6):
   * atomic publish — written into ``.tmp-step_<n>`` then os.rename'd, so a
     killed writer never leaves a half checkpoint that restore would trust;
   * async — ``save`` snapshots to host (device_get) in the caller, the file

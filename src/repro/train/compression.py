@@ -8,7 +8,7 @@ dequant-summed locally.  The quantization residual feeds back into the next
 step's gradient (error feedback), which is what keeps convergence intact —
 ``tests/test_train.py`` checks a quadratic converges with compression on.
 
-Honesty note (DESIGN.md §5): a production int8 *all-reduce* needs
+Honesty note (DESIGN.md §6): a production int8 *all-reduce* needs
 reduction-over-int8 support in the collective itself; XLA reduces in the
 operand dtype, and int8 sums overflow.  all_gather+local-sum keeps int8 on
 the wire at the cost of O(N) receive buffers — the right trade for the

@@ -4,7 +4,7 @@ AdamW keeps two f32 moments per parameter (3x param memory in f32) — fine up
 to ~30B at 256 chips with FSDP.  Adafactor factors the second moment of any
 rank>=2 leaf into row/col accumulators (O(sum dims) instead of O(prod dims))
 and keeps no first moment — the nemotron-4-340b config uses it (see
-DESIGN.md §5 memory budget).
+DESIGN.md §6 memory budget).
 
 States are plain pytrees mirroring the param tree (inapplicable slots hold
 size-0 arrays so tree structures always match), so the launch layer derives

@@ -10,6 +10,8 @@ from repro.data import ChunkedLoader
 from repro.data.loader import IncrementalBuilder, build_streaming
 from repro.data import random_walk
 
+from tests._hyp import given, settings, st
+
 
 def test_streaming_equals_oneshot():
     raw = random_walk(1000, 128, seed=11)
@@ -27,6 +29,46 @@ def test_loader_chunking_covers_everything():
     seen = sum(c.shape[0] for c in loader)
     assert seen == 700
     assert len(loader) == 3
+
+
+def test_loader_file_source(tmp_path):
+    """str | Path sources are np.memmap'd (headerless f32 rows)."""
+    raw = random_walk(300, 32, seed=21)
+    path = tmp_path / "series.f32"
+    path.write_bytes(raw.tobytes())
+    for src in (str(path), path):
+        loader = ChunkedLoader(src, chunk=128, length=32)
+        assert loader.n_series == 300 and len(loader) == 3
+        got = np.concatenate([np.asarray(c) for c in loader])
+        np.testing.assert_array_equal(got, raw)
+    with pytest.raises(ValueError, match="length"):
+        ChunkedLoader(str(path), chunk=128)
+    with pytest.raises(ValueError, match="multiple"):
+        ChunkedLoader(str(path), chunk=128, length=31)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_series=st.integers(1, 200), chunk=st.integers(1, 97))
+def test_loader_callable_reader_ragged_final_chunk(n_series, chunk):
+    """Property: a callable reader is asked for exactly the chunk grid —
+    including the ragged final chunk — and the concatenation round-trips."""
+    raw = random_walk(n_series, 16, seed=n_series)
+    calls = []
+
+    def reader(a, b):
+        calls.append((a, b))
+        return raw[a:b]
+
+    loader = ChunkedLoader(reader, n_series, chunk=chunk)
+    got = np.concatenate([np.asarray(c) for c in loader])
+    np.testing.assert_array_equal(got, raw)
+    assert len(loader) == len(calls) == -(-n_series // chunk)
+    starts = list(range(0, n_series, chunk))
+    assert calls == [(s, min(s + chunk, n_series)) for s in starts]
+    # every chunk is full-sized except possibly the last (the ragged one)
+    sizes = [b - a for a, b in calls]
+    assert all(s == chunk for s in sizes[:-1])
+    assert sizes[-1] == n_series - (len(calls) - 1) * chunk
 
 
 def test_ids_are_permutation_with_padding():

@@ -1,0 +1,183 @@
+"""On-disk index subsystem: format round-trip, out-of-core build parity,
+streaming search exactness + bytes-read accounting (DESIGN.md §5)."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+import repro.core as core
+from repro import storage
+from repro.core.ucr import search_scan
+from repro.data import random_walk
+
+# near-zero self-distances carry O(sqrt(eps)) noise in the expanded-form
+# L2 (see kernels/batch_l2.py / test_index.py), hence the absolute term
+DIST_TOL = dict(rtol=1e-5, atol=2e-2)
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    raw = random_walk(4000, 128, seed=31)
+    rng = np.random.default_rng(5)
+    qs = jnp.asarray(raw[rng.choice(4000, 6, replace=False)]
+                     + 0.05 * rng.standard_normal((6, 128))
+                     .astype(np.float32))
+    return raw, qs
+
+
+@pytest.fixture(scope="module")
+def saved(dataset, tmp_path_factory):
+    raw, _ = dataset
+    idx = core.build(jnp.asarray(raw), capacity=128)
+    path = tmp_path_factory.mktemp("idx") / "synthetic.dsix"
+    storage.save_index(idx, path, extra={"dataset": "rw4000"})
+    return idx, path
+
+
+def test_save_load_roundtrip_bit_identical_result(dataset, saved):
+    _, qs = dataset
+    idx, path = saved
+    loaded = storage.load_index(path)
+    for k in (1, 5):
+        a = core.search(idx, qs, k=k)
+        b = core.search(loaded, qs, k=k)
+        assert np.array_equal(np.asarray(a.idx), np.asarray(b.idx))
+        assert np.array_equal(np.asarray(a.dist), np.asarray(b.dist))
+
+
+def test_saved_fields_bit_identical(saved):
+    idx, path = saved
+    loaded = storage.load_index(path)
+    for f in ("raw", "slo", "shi", "elo", "ehi", "ids"):
+        assert np.array_equal(np.asarray(getattr(idx, f)),
+                              np.asarray(getattr(loaded, f))), f
+    for f in ("n", "w", "card", "capacity", "n_real"):
+        assert getattr(idx, f) == getattr(loaded, f), f
+
+
+def test_meta_and_extra(saved):
+    _, path = saved
+    meta = storage.read_meta(path)
+    assert meta["extra"] == {"dataset": "rw4000"}
+    assert meta["version"] == 1
+    # raw is last and page-aligned: the memmap window is one aligned span
+    raw_off = meta["sections"]["raw"]["offset"]
+    assert (meta["data_start"] + raw_off) % 4096 == 0
+    assert raw_off >= max(s["offset"] for n, s in meta["sections"].items()
+                          if n != "raw")
+
+
+def test_bad_magic_rejected(tmp_path):
+    p = tmp_path / "junk.dsix"
+    p.write_bytes(b"NOPE" + b"\0" * 64)
+    with pytest.raises(ValueError, match="magic"):
+        storage.read_meta(p)
+
+
+def test_open_index_is_out_of_core(dataset, saved):
+    _, qs = dataset
+    _, path = saved
+    opened = storage.open_index(path)
+    assert not opened.device_resident
+    assert opened.raw.shape[1] == 0              # no raw bytes on device
+    assert opened.host_raw is not None
+    assert isinstance(opened.host_raw.blocks, np.memmap)
+    # the in-memory paths must refuse it, pointing at ooc_search
+    with pytest.raises(ValueError, match="ooc_search"):
+        core.search(opened, qs)
+    with pytest.raises(ValueError, match="out-of-core"):
+        core.index.flat_view(opened)
+    with pytest.raises(ValueError, match="out-of-core"):
+        storage.save_index(opened, path)
+
+
+@pytest.mark.parametrize("k", [1, 5, 32])
+def test_ooc_search_oracle_parity(dataset, saved, k):
+    raw, qs = dataset
+    _, path = saved
+    opened = storage.open_index(path)
+    res = storage.ooc_search(opened, qs, k=k)
+    want = search_scan(jnp.asarray(raw), qs, k=k)
+    assert np.array_equal(np.asarray(res.idx), np.asarray(want.idx))
+    np.testing.assert_allclose(np.asarray(res.dist), np.asarray(want.dist),
+                               **DIST_TOL)
+
+
+def test_ooc_search_k_exceeds_n_real(tmp_path):
+    raw = random_walk(20, 64, seed=9)
+    store = storage.SeriesStore.write(tmp_path / "tiny.f32", raw)
+    opened = storage.build_on_disk(store, tmp_path / "tiny.dsix", capacity=8)
+    qs = jnp.asarray(raw[:3])
+    res = storage.ooc_search(opened, qs, k=32)
+    want = search_scan(jnp.asarray(raw), qs, k=32)
+    assert np.array_equal(np.asarray(res.idx), np.asarray(want.idx))
+    assert (np.asarray(res.idx)[:, 20:] == -1).all()   # padded tail
+
+
+def test_ooc_build_matches_in_memory_build_bitwise(tmp_path):
+    """The acceptance property: a file-built index is byte-equivalent to
+    save_index(core.build(...)) on the same data."""
+    raw = random_walk(1500, 128, seed=13)
+    store = storage.SeriesStore.write(tmp_path / "s.f32", raw)
+    storage.build_on_disk(store, tmp_path / "ooc.dsix", capacity=64,
+                          chunk=400)
+    idx_mem = core.build(jnp.asarray(raw), capacity=64)
+    idx_ooc = storage.load_index(tmp_path / "ooc.dsix")
+    for f in ("raw", "slo", "shi", "elo", "ehi", "ids"):
+        assert np.array_equal(np.asarray(getattr(idx_mem, f)),
+                              np.asarray(getattr(idx_ooc, f))), f
+
+
+def test_ooc_end_to_end_exact_and_reads_fewer_bytes(tmp_path):
+    """File -> ooc_build -> ooc_search: identical k-NN to search.search on
+    the same data, while reading strictly fewer raw bytes than a scan."""
+    raw = random_walk(20000, 256, seed=42)
+    rng = np.random.default_rng(7)
+    qs = jnp.asarray(raw[rng.choice(20000, 4, replace=False)]
+                     + 0.05 * rng.standard_normal((4, 256))
+                     .astype(np.float32))
+    store = storage.SeriesStore.write(tmp_path / "s.f32", raw)
+    opened = storage.build_on_disk(store, tmp_path / "s.dsix", capacity=256,
+                                   chunk=4096)
+    res = storage.ooc_search(opened, qs, k=5)
+    want = core.search(core.build(jnp.asarray(raw), capacity=256), qs, k=5)
+    assert np.array_equal(np.asarray(res.idx), np.asarray(want.idx))
+    np.testing.assert_allclose(np.asarray(res.dist), np.asarray(want.dist),
+                               **DIST_TOL)
+    assert res.io.bytes_read < res.io.bytes_scan
+    assert res.io.bytes_scan == 20000 * 256 * 4
+    assert 0 < res.io.blocks_fetched <= res.io.blocks_total
+
+
+def test_ooc_search_requires_host_raw(dataset):
+    raw, qs = dataset
+    idx = core.build(jnp.asarray(raw), capacity=128)
+    with pytest.raises(ValueError, match="host_raw"):
+        storage.ooc_search(idx, qs)
+
+
+def test_series_store_roundtrip(tmp_path):
+    raw = random_walk(100, 32, seed=3)
+    store = storage.SeriesStore.write(tmp_path / "x.f32", raw)
+    assert len(store) == 100 and store.length == 32
+    np.testing.assert_array_equal(store.read(10, 20), raw[10:20])
+    np.testing.assert_array_equal(np.asarray(store.memmap()), raw)
+    with pytest.raises(ValueError, match="multiple"):
+        storage.SeriesStore(path=tmp_path / "x.f32", length=33)
+
+
+def test_ooc_build_nondivisible_and_small(tmp_path):
+    """Ragged final chunk + final partial block + capacity > dataset."""
+    raw = random_walk(333, 64, seed=17)
+    store = storage.SeriesStore.write(tmp_path / "r.f32", raw)
+    opened = storage.build_on_disk(store, tmp_path / "r.dsix", capacity=50,
+                                   chunk=128)
+    idx_mem = core.build(jnp.asarray(raw), capacity=50)
+    idx_ooc = storage.load_index(tmp_path / "r.dsix")
+    for f in ("raw", "ids", "elo", "ehi"):
+        assert np.array_equal(np.asarray(getattr(idx_mem, f)),
+                              np.asarray(getattr(idx_ooc, f))), f
+    qs = jnp.asarray(raw[:4])
+    res = storage.ooc_search(opened, qs, k=3)
+    want = search_scan(jnp.asarray(raw), qs, k=3)
+    assert np.array_equal(np.asarray(res.idx), np.asarray(want.idx))
