@@ -1,0 +1,137 @@
+"""Serving benchmark: the block-cache SearchSession, cold vs warm.
+
+The paper's serving claim is two-sided — seconds from disk (ParIS+),
+milliseconds from memory (MESSI).  A serving process with repeated
+traffic sits between the two: `storage.SearchSession` keeps an LRU of
+device-resident raw blocks across query batches, so the surviving
+working set migrates on device and warm batches approach the in-memory
+latency without ever holding more than `cache_blocks` raw blocks.
+
+This driver measures that migration: a fixed sequence of query batches
+is answered twice through one session per cache size — the first pass
+cold (disk reads), the second warm (cache hits) — reporting per-batch
+p50/p99 latency, the warm-pass hit-rate, and disk bytes per pass.
+Sweeping `--cache-blocks` gives hit-rate (and latency) vs cache size.
+
+    PYTHONPATH=src python -m benchmarks.bench_serve \\
+        --size 50000 --cache-blocks 8,32,128 --out BENCH_serve.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import tempfile
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import print_table, write_rows
+from repro import storage
+from repro.data import make_dataset
+
+
+def _serve_pass(session, batches, k: int):
+    """Answer every batch once; -> (per-batch ms, results, fetched, hits)."""
+    f0, h0 = session.blocks_fetched, session.cache_hits
+    lat, results = [], []
+    for qs in batches:
+        t0 = time.perf_counter()
+        res = session.search(qs, k=k)
+        jax.block_until_ready(res.dist)
+        lat.append((time.perf_counter() - t0) * 1e3)
+        results.append(res)
+    return (np.asarray(lat), results,
+            session.blocks_fetched - f0, session.cache_hits - h0)
+
+
+def run(n: int = 50_000, length: int = 256, n_queries: int = 8,
+        n_batches: int = 6, capacity: int = 1024,
+        cache_blocks=(8, 32, 128), k: int = 5,
+        workdir: str | None = None) -> list[dict]:
+    tmp = workdir or tempfile.mkdtemp(prefix="bench_serve_")
+    raw = make_dataset("synthetic", n, length)
+    rng = np.random.default_rng(99)
+    batches = [jnp.asarray(raw[rng.choice(n, n_queries, replace=False)]
+                           + 0.05 * rng.standard_normal((n_queries, length))
+                           .astype(np.float32))
+               for _ in range(n_batches)]
+
+    series_path = os.path.join(tmp, f"serve_{n}.f32")
+    index_path = os.path.join(tmp, f"serve_{n}.dsix")
+    store = storage.SeriesStore.write(series_path, raw)
+    opened = storage.build_on_disk(store, index_path, capacity=capacity)
+
+    # compile warmup on a throwaway session: the jit cache is global but
+    # the block cache is per-session, so the measured cold pass stays cold
+    with storage.SearchSession(opened, cache_blocks=2) as warmup:
+        jax.block_until_ready(warmup.search(batches[0], k=k).dist)
+
+    rows = []
+    for cb in cache_blocks:
+        cb = max(2, min(cb, opened.n_blocks))   # 2 = BlockCache floor
+        with storage.SearchSession(opened, cache_blocks=cb) as sess:
+            cold, cold_res, cold_fetch, _ = _serve_pass(sess, batches, k)
+            warm, warm_res, warm_fetch, warm_hits = _serve_pass(
+                sess, batches, k)
+        for a, b in zip(cold_res, warm_res):           # caching never
+            assert np.array_equal(np.asarray(a.idx),   # changes answers
+                                  np.asarray(b.idx)), "exactness!"
+            assert np.array_equal(np.asarray(a.dist), np.asarray(b.dist))
+        rows.append({
+            "n_series": n, "k": k, "n_batches": n_batches,
+            "queries_per_batch": n_queries,
+            "cache_blocks": cb, "blocks_total": opened.n_blocks,
+            "cold_p50_ms": float(np.percentile(cold, 50)),
+            "cold_p99_ms": float(np.percentile(cold, 99)),
+            "warm_p50_ms": float(np.percentile(warm, 50)),
+            "warm_p99_ms": float(np.percentile(warm, 99)),
+            "warm_speedup": float(np.percentile(cold, 50)
+                                  / max(np.percentile(warm, 50), 1e-9)),
+            "warm_hit_rate": warm_hits / max(warm_hits + warm_fetch, 1),
+            "cold_blocks_fetched": cold_fetch,
+            "warm_blocks_fetched": warm_fetch,
+            "cold_mb_read": cold_fetch * opened.host_raw.block_nbytes / 2**20,
+            "warm_mb_read": warm_fetch * opened.host_raw.block_nbytes / 2**20,
+        })
+    os.remove(series_path)
+    os.remove(index_path)
+    print_table("serving sessions: cold vs warm through the block cache",
+                rows, ["n_series", "k", "cache_blocks", "blocks_total",
+                       "cold_p50_ms", "warm_p50_ms", "warm_speedup",
+                       "warm_hit_rate", "cold_mb_read", "warm_mb_read"])
+    write_rows("serve", rows)
+    return rows
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--size", type=int, default=50_000)
+    ap.add_argument("--length", type=int, default=256)
+    ap.add_argument("--queries", type=int, default=8)
+    ap.add_argument("--batches", type=int, default=6)
+    ap.add_argument("--capacity", type=int, default=1024)
+    ap.add_argument("--cache-blocks", default="8,32,128")
+    ap.add_argument("--k", type=int, default=5)
+    ap.add_argument("--out", default=None,
+                    help="also write rows to this JSON path "
+                         "(e.g. BENCH_serve.json for the CI artifact)")
+    args = ap.parse_args(argv)
+
+    rows = run(n=args.size, length=args.length, n_queries=args.queries,
+               n_batches=args.batches, capacity=args.capacity,
+               cache_blocks=tuple(int(s)
+                                  for s in args.cache_blocks.split(",")),
+               k=args.k)
+    if args.out:
+        with open(args.out, "w") as f:
+            json.dump(rows, f, indent=1)
+        print(f"wrote {args.out}")
+    return 0
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -16,7 +16,8 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_build, bench_capacity, bench_dtw,
-                            bench_ooc, bench_query, bench_scaling)
+                            bench_ooc, bench_query, bench_scaling,
+                            bench_serve)
 
     t0 = time.time()
     if args.quick:
@@ -24,6 +25,8 @@ def main(argv=None) -> int:
         bench_query.run(sizes=(50_000,), datasets=("synthetic",))
         bench_ooc.run(sizes=(20_000,), datasets=("synthetic",),
                       capacity=256, ks=(1, 5))
+        bench_serve.run(n=20_000, n_queries=4, n_batches=4, capacity=256,
+                        cache_blocks=(8, 96))
         bench_dtw.run(n=5_000)
         bench_capacity.run(n=50_000, capacities=(256, 1024))
         bench_scaling.run(device_counts=(1, 4))
@@ -31,6 +34,7 @@ def main(argv=None) -> int:
         bench_build.run()
         bench_query.run()
         bench_ooc.run()
+        bench_serve.run()
         bench_dtw.run()
         bench_capacity.run()
         bench_scaling.run()

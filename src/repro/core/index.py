@@ -51,13 +51,28 @@ class HostRawBlocks:
         self.path = path
 
     @property
+    def dtype(self) -> np.dtype:
+        """On-disk dtype of the raw series (I/O accounting derives
+        itemsize from this, not from an assumed float32)."""
+        return np.dtype(self.blocks.dtype)
+
+    @property
+    def n_blocks(self) -> int:
+        return self.blocks.shape[0]
+
+    @property
     def block_nbytes(self) -> int:
         """Bytes of one (C, n) raw block as stored on disk."""
         _, c, n = self.blocks.shape
-        return c * n * self.blocks.dtype.itemsize
+        return c * n * self.dtype.itemsize
 
     def fetch(self, block_id: int) -> np.ndarray:
-        """Read one (C, n) block into a fresh host array (the disk I/O)."""
+        """Read one (C, n) block into a fresh host array (the disk I/O).
+
+        Called from the block cache's background reader thread
+        (storage/cache.py) as well as the driver: read-only memmap
+        slicing plus a fresh-array copy, so concurrent calls are safe.
+        """
         return np.ascontiguousarray(self.blocks[block_id])
 
 

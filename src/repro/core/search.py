@@ -70,8 +70,9 @@ def refine_panel(q: jax.Array, q_paa: jax.Array, front: Frontier,
     """Refine one (C, n) raw block panel against every query at once.
 
     The per-block unit of work shared by the in-memory block-major schedule
-    and the out-of-core streaming search (storage/ooc_search.py, which feeds
-    it blocks fetched through ``BlockIndex.host_raw``): optional per-series
+    and the out-of-core streaming search (storage/cache.py, which feeds it
+    blocks fetched through the ``BlockIndex.host_raw`` block cache): optional
+    per-series
     MINDIST filtering, one (Q, C) MXU distance panel, one frontier insert,
     and the work-stat updates.  ``active`` (Q,) masks queries whose envelope
     lower bound beat ``thr``; ``lo``/``hi`` are the block's (w, C) per-series
@@ -94,8 +95,7 @@ def refine_panel(q: jax.Array, q_paa: jax.Array, front: Frontier,
         series_refined=stats.series_refined
         + jnp.sum(live, axis=1, dtype=jnp.int32),
         lb_series=stats.lb_series
-        + (active.astype(jnp.int32) * c if lb_filter
-           else stats.lb_series * 0),
+        + (active.astype(jnp.int32) * c if lb_filter else 0),
         iters=stats.iters,
     )
     return front, stats
@@ -131,7 +131,14 @@ def search(index: BlockIndex, queries: jax.Array, *, k: int = 1,
     max_ptr = b if deadline_blocks is None else min(b, deadline_blocks)
 
     def next_lb(ptr):
-        nxt = jax.lax.dynamic_slice_in_dim(order, ptr, 1, axis=1)   # (Q,1)
+        # Invariant: ``cond`` evaluates this even when ptr >= max_ptr —
+        # jnp.logical_and does not short-circuit — so after the final body
+        # trip ptr can reach up to b + kb - 1.  The clamp keeps the slice
+        # start in-bounds explicitly (the clamped value is discarded:
+        # ptr < max_ptr is already False) instead of leaning on
+        # dynamic_slice's implicit start clamping.
+        safe = jnp.minimum(ptr, b - 1)
+        nxt = jax.lax.dynamic_slice_in_dim(order, safe, 1, axis=1)  # (Q,1)
         return jnp.take_along_axis(block_lb, nxt, axis=1)[:, 0]     # (Q,)
 
     def cond(state):
@@ -172,7 +179,7 @@ def search(index: BlockIndex, queries: jax.Array, *, k: int = 1,
                 + jnp.sum(live, axis=(1, 2), dtype=jnp.int32),
                 lb_series=st_i.lb_series
                 + (jnp.sum(active, axis=1, dtype=jnp.int32) * c
-                   if lb_filter else st_i.lb_series * 0),
+                   if lb_filter else 0),
                 iters=st_i.iters,
             )
             return f_n, st_n
@@ -226,7 +233,11 @@ def search_block_major(index: BlockIndex, queries: jax.Array, *, k: int = 1,
 
     def cond(state):
         ptr, f, _ = state
-        live = jax.lax.dynamic_slice_in_dim(suffix, ptr, 1, axis=1)[:, 0]
+        # same invariant as ``next_lb`` in ``search``: logical_and does
+        # not short-circuit, so this slice is evaluated at ptr == max_ptr
+        # after the final trip — clamp explicitly (the value is discarded)
+        safe = jnp.minimum(ptr, b - 1)
+        live = jax.lax.dynamic_slice_in_dim(suffix, safe, 1, axis=1)[:, 0]
         return jnp.logical_and(ptr < max_ptr,
                                jnp.any(live < _bound(f, initial_threshold)))
 

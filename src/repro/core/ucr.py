@@ -20,6 +20,7 @@ import jax.numpy as jnp
 from repro.core import frontier as frontier_lib
 from repro.core import isax
 from repro.core.frontier import INF
+from repro.core.index import RAW_PAD
 from repro.core.search import SearchResult, SearchStats
 from repro.kernels import ops
 
@@ -40,7 +41,7 @@ def search_scan(raw: jax.Array, queries: jax.Array, *, k: int = 1,
     c = min(chunk, n_series)
     pad = (-n_series) % c
     if pad:
-        x = jnp.concatenate([x, jnp.full((pad, n), 1.0e4, jnp.float32)], 0)
+        x = jnp.concatenate([x, jnp.full((pad, n), RAW_PAD, jnp.float32)], 0)
         ids = jnp.concatenate([ids, jnp.full((pad,), -1, jnp.int32)], 0)
     nchunks = x.shape[0] // c
 

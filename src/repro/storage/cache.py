@@ -1,0 +1,331 @@
+"""Device-resident LRU block cache + stateful serving sessions (DESIGN.md §5).
+
+The paper's serving claim is two-sided: ParIS+ answers from disk in
+seconds by overlapping I/O with compute, MESSI answers from memory in
+milliseconds by assuming a hot working set.  A serving process sits
+between the two: the dataset does not fit on device, but query traffic
+is repeated, so the blocks that keep surviving pruning ARE a working
+set.  This module makes that working set explicit:
+
+  * ``BlockCache`` — a capacity-bounded LRU of device-resident raw
+    blocks, keyed by *block id*.  All fetching and prefetching go
+    through it: a speculative read lands in the cache under its id, so
+    a block whose schedule slot is pruned before its turn simply waits
+    there for a later query (or batch) instead of leaking a device
+    buffer behind a stale slot key.  Reads run on a single background
+    reader thread, so the disk latency of block i+1 genuinely overlaps
+    the device compute (and the per-block threshold sync) of block i —
+    the driver thread never blocks inside ``np.ascontiguousarray``.
+
+  * ``SearchSession`` — a stateful wrapper holding one ``BlockCache``
+    across query batches.  Batch t+1 re-reads from disk only the
+    surviving blocks that batch t (and the LRU horizon before it) did
+    not already pull in; repeated traffic converges to MESSI's
+    in-memory behaviour without ever holding more than
+    ``cache_blocks`` raw blocks on device.
+
+Accounting is per batch and split so the paper's pruning claim stays
+measurable under caching: ``IOStats.bytes_read``/``blocks_fetched``
+count actual disk reads only (each block at most once per batch — a
+second same-batch read could only come from an evict-refetch cycle,
+which the >= 2 capacity floor plus the single outstanding prefetch rule
+out), while ``IOStats.cache_hits`` counts surviving blocks served from
+the cache with zero disk traffic.
+
+``storage.ooc_search`` is the one-shot form: a throwaway session with a
+small cache, preserving the streaming memory profile of a single batch.
+"""
+from __future__ import annotations
+
+import functools
+import threading
+from collections import OrderedDict
+from concurrent.futures import Future, ThreadPoolExecutor
+
+import jax
+import numpy as np
+
+from repro.core import frontier as frontier_lib
+from repro.core.index import BlockIndex, HostRawBlocks
+from repro.core.search import refine_panel
+from repro.kernels import ops
+from repro.storage.ooc_search import IOStats, OocSearchResult
+
+
+class BlockCache:
+    """Capacity-bounded LRU of device-resident raw blocks, keyed by block id.
+
+    One background reader thread serves ``prefetch``/``get`` misses in
+    request order; a completed read inserts itself into the LRU under
+    the lock, so an in-flight block can never be orphaned — whoever
+    requested it (or nobody: a pruned speculation) finds it cached.
+    Eviction just drops the reference; the device buffer is freed when
+    the last ``jax.Array`` reference dies.
+
+    ``disk_blocks``/``disk_bytes`` are cumulative actual-disk-read
+    counters (sessions snapshot deltas per batch); a cache hit moves
+    none of them.
+    """
+
+    def __init__(self, host: HostRawBlocks, capacity_blocks: int):
+        if capacity_blocks < 2:
+            # the streaming walk keeps one block in refinement plus one
+            # outstanding prefetch; below 2 the prefetch could evict the
+            # block it was meant to overlap, forcing a same-batch re-read
+            raise ValueError(
+                f"capacity_blocks must be >= 2, got {capacity_blocks}")
+        self.host = host
+        self.capacity_blocks = capacity_blocks
+        self._lru: OrderedDict[int, jax.Array] = OrderedDict()
+        self._inflight: dict[int, Future] = {}
+        self._lock = threading.Lock()
+        self._reader = ThreadPoolExecutor(1, thread_name_prefix="block-read")
+        self.disk_blocks = 0
+        self.disk_bytes = 0
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._lru)
+
+    def __contains__(self, block_id: int) -> bool:
+        """Resident or in flight — either way no new disk read is needed."""
+        with self._lock:
+            return block_id in self._lru or block_id in self._inflight
+
+    def _read(self, block_id: int) -> jax.Array:
+        """Reader-thread body: disk -> host copy -> device, then publish."""
+        try:
+            dev = jax.device_put(self.host.fetch(block_id))
+        except BaseException:
+            # a failed read must not poison the cache: drop the in-flight
+            # entry so the block no longer looks present and the next
+            # request retries; whoever is waiting on this future still
+            # sees the exception
+            with self._lock:
+                self._inflight.pop(block_id, None)
+            raise
+        with self._lock:
+            self.disk_blocks += 1
+            self.disk_bytes += self.host.block_nbytes
+            if self._inflight.pop(block_id, None) is not None:
+                self._insert(block_id, dev)
+        return dev
+
+    def _insert(self, block_id: int, dev: jax.Array) -> None:
+        # caller holds self._lock
+        self._lru[block_id] = dev
+        while len(self._lru) > self.capacity_blocks:
+            self._lru.popitem(last=False)
+
+    def prefetch(self, block_id: int) -> None:
+        """Start reading ``block_id`` in the background; no-op if present."""
+        with self._lock:
+            if block_id in self._lru:
+                self._lru.move_to_end(block_id)
+                return
+            if block_id not in self._inflight:
+                self._inflight[block_id] = self._reader.submit(
+                    self._read, block_id)
+
+    def get(self, block_id: int) -> jax.Array:
+        """The (C, n) device block; blocks only if a disk read is needed."""
+        with self._lock:
+            dev = self._lru.get(block_id)
+            if dev is not None:
+                self._lru.move_to_end(block_id)
+                return dev
+            fut = self._inflight.get(block_id)
+            if fut is None:
+                fut = self._reader.submit(self._read, block_id)
+                self._inflight[block_id] = fut
+        return fut.result()
+
+    def drain(self) -> None:
+        """Wait for every in-flight read to land (settles the counters).
+
+        A failed read is swallowed here: it was speculative (nobody
+        blocked on it), read no bytes, and removed its own in-flight
+        entry — a caller that actually needs the block will ``get`` it
+        again and either succeed or see the error itself.
+        """
+        while True:
+            with self._lock:
+                futs = list(self._inflight.values())
+            if not futs:
+                return
+            for f in futs:
+                try:
+                    f.result()
+                except Exception:
+                    pass
+
+    def clear(self) -> None:
+        self.drain()
+        with self._lock:
+            self._lru.clear()
+
+    def close(self) -> None:
+        self.drain()
+        self._reader.shutdown(wait=True)
+        with self._lock:
+            self._lru.clear()
+
+
+@functools.partial(jax.jit, static_argnames=("n", "w", "lb_filter"))
+def _refine_step(q, q_paa, front, stats, block, ids_b, lo, hi, lbs, *,
+                 n: int, w: int, lb_filter: bool):
+    """One fetched block against all queries — the device side of the loop."""
+    thr = frontier_lib.bound(front)
+    active = lbs < thr
+    return refine_panel(q, q_paa, front, stats, block, ids_b, lo, hi,
+                        active, thr, n=n, w=w, lb_filter=lb_filter)
+
+
+class SearchSession:
+    """Stateful out-of-core serving: one block cache across query batches.
+
+    >>> sess = SearchSession(storage.open_index(path), cache_blocks=64)
+    >>> r1 = sess.search(queries, k=5)          # cold: disk reads
+    >>> r2 = sess.search(queries, k=5)          # warm: cache hits
+    >>> assert r2.io.bytes_read == 0            # when all survivors fit
+
+    Results are bit-identical to ``ooc_search`` on the same index and
+    queries — the cache changes what is read, never what is answered.
+    Cumulative ``cache_hits``/``blocks_fetched``/``hit_rate`` summarize
+    the session; each result's ``io`` carries the per-batch split.
+    """
+
+    def __init__(self, index: BlockIndex, *, cache_blocks: int = 64):
+        if index.host_raw is None:
+            raise ValueError("index has no host_raw — open it with "
+                             "storage.open_index (or pass a built index to "
+                             "core.search instead)")
+        self.index = index
+        self.cache = BlockCache(index.host_raw, cache_blocks)
+        self.batches = 0
+        self.cache_hits = 0
+        self.blocks_fetched = 0
+
+    @property
+    def hit_rate(self) -> float:
+        """Fraction of surviving-block touches served without disk I/O."""
+        return self.cache_hits / max(self.cache_hits + self.blocks_fetched, 1)
+
+    def close(self) -> None:
+        self.cache.close()
+
+    def __enter__(self) -> "SearchSession":
+        return self
+
+    def __exit__(self, exc_type, exc, tb) -> None:
+        self.close()
+
+    def search(self, queries: jax.Array, *, k: int = 1,
+               lb_filter: bool = True,
+               normalize_queries: bool = True) -> OocSearchResult:
+        """Exact k-NN for one (Q, n) query batch through the cache.
+
+        Same walk as DESIGN.md §5: envelope ranking, stage-A seeding,
+        block-major schedule with suffix-min stopping — but every fetch
+        and every speculative prefetch goes through the id-keyed cache.
+        """
+        index, cache = self.index, self.cache
+        host = index.host_raw
+        setup = frontier_lib.prepare(queries, k, w=index.w,
+                                     normalize=normalize_queries)
+        q, q_paa, front = setup.q, setup.q_paa, setup.frontier
+        stats = setup.stats
+        n, w = index.n, index.w
+        n_blocks = index.n_blocks
+        refine = functools.partial(_refine_step, n=n, w=w,
+                                   lb_filter=lb_filter)
+
+        block_lb = ops.lb_scan_planar(q_paa, index.elo, index.ehi, n=n)
+        block_lb_h = np.asarray(block_lb)
+
+        # per-batch accounting: the first touch of each block id decides
+        # hit vs miss; later touches (a get() after its own prefetch) are
+        # the same block and count nothing
+        reads0, bytes0 = cache.disk_blocks, cache.disk_bytes
+        seen: set[int] = set()
+        hits = 0
+
+        def touch(b: int) -> None:
+            nonlocal hits
+            if b not in seen:
+                seen.add(b)
+                if b in cache:
+                    hits += 1
+
+        def fetch(b: int) -> jax.Array:
+            touch(b)
+            return cache.get(b)
+
+        def speculate(b: int) -> None:
+            touch(b)
+            cache.prefetch(b)
+
+        def step(front, stats, dev_block, b: int):
+            ids_b = index.ids[b]
+            lo = index.slo[b] if lb_filter else None
+            hi = index.shi[b] if lb_filter else None
+            return refine(q, q_paa, front, stats, dev_block, ids_b, lo, hi,
+                          block_lb[:, b])
+
+        # -- stage A: each query's best-envelope block seeds the frontier,
+        # pipelined one block ahead so reads overlap the refines ---------
+        stage_a = [int(b) for b in np.unique(np.argmin(block_lb_h, axis=1))]
+        done: set[int] = set()
+        if stage_a:
+            speculate(stage_a[0])
+        for i, b in enumerate(stage_a):
+            if i + 1 < len(stage_a):
+                speculate(stage_a[i + 1])
+            front, stats = step(front, stats, fetch(b), b)
+            done.add(b)
+
+        # -- block-major walk over the surviving schedule -----------------
+        order = np.argsort(block_lb_h.min(axis=0), kind="stable")     # (B,)
+        sched_lb = block_lb_h[:, order]                               # (Q, B)
+        suffix = np.minimum.accumulate(sched_lb[:, ::-1], axis=1)[:, ::-1]
+
+        def pending(ptr: int) -> bool:
+            """Block at schedule slot ptr still needs a refine under thr_h."""
+            return int(order[ptr]) not in done \
+                and bool(np.any(sched_lb[:, ptr] < thr_h))
+
+        thr_h = np.asarray(frontier_lib.bound(front))                 # sync
+        ptr = 0
+        while ptr < n_blocks:
+            if np.all(suffix[:, ptr] >= thr_h):
+                break                       # nothing later helps any query
+            if not pending(ptr):
+                ptr += 1
+                continue                    # pruned (or stage-A-refined)
+            front, stats = step(front, stats, fetch(int(order[ptr])),
+                                int(order[ptr]))                      # async
+            nxt = ptr + 1                   # next survivor under current thr
+            while nxt < n_blocks and not pending(nxt):
+                nxt += 1
+            if nxt < n_blocks and not np.all(suffix[:, nxt] >= thr_h):
+                # threshold-speculative: read overlaps the refine above; if
+                # the slot is pruned before its turn the block just stays
+                # in the cache under its id for a later query/batch
+                speculate(int(order[nxt]))
+            thr_h = np.asarray(frontier_lib.bound(front))   # one sync/block
+            # blocks in (ptr, nxt) were pruned under a bound that only
+            # tightened since — safe to jump straight to the prefetch target
+            ptr = nxt
+
+        cache.drain()   # settle the last speculation into this batch's bill
+        fetched = cache.disk_blocks - reads0
+        io = IOStats(bytes_read=cache.disk_bytes - bytes0,
+                     bytes_scan=index.n_real * n * host.dtype.itemsize,
+                     blocks_fetched=fetched,
+                     blocks_total=n_blocks,
+                     cache_hits=hits)
+        self.batches += 1
+        self.cache_hits += hits
+        self.blocks_fetched += fetched
+        return OocSearchResult(dist=frontier_lib.result_dists(front),
+                               idx=front.ids, stats=stats, io=io)

@@ -9,46 +9,45 @@ envelopes are device-resident, raw series stay on disk.  Per query batch:
      fully-pruned query ever costs);
   3. the block-major schedule of ``search.search_block_major`` runs at the
      Python level: blocks in ascending min-over-queries lower-bound order,
-     each surviving block fetched memmap -> host -> device and refined by
-     the shared ``search.refine_panel``; the suffix-min stopping rule ends
-     the walk as soon as no later block can improve any query's top-k.
+     each surviving block refined by the shared ``search.refine_panel``;
+     the suffix-min stopping rule ends the walk as soon as no later block
+     can improve any query's top-k.
 
-I/O/compute overlap (the ParIS+ contribution) comes from JAX async
-dispatch: the refine step for block i is enqueued and returns immediately,
-so the host reads block i+1 off disk and enqueues its DMA while the device
-is still computing — a one-block-ahead prefetch.  The loop blocks only on
-the (Q,) pruning threshold, once per refined block.
-
-Prefetch is threshold-speculative: block i+1 is chosen with the bound as
-of block i-1.  The bound only tightens, so a speculated block is never
-refined wrongly — at worst its bytes were read and it is dropped; those
-bytes are charged to ``IOStats`` (honesty over optimism).
+The walk itself lives in ``storage.cache.SearchSession``: all raw I/O —
+fetches and the one-block-ahead threshold-speculative prefetch alike —
+goes through a ``BlockCache`` (an id-keyed LRU of device-resident blocks
+with a background reader thread), so disk reads overlap device compute
+without the driver thread ever blocking in a copy, and a speculated
+block whose schedule slot gets pruned simply stays cached under its id.
+``ooc_search`` below is the stateless one-shot form: a throwaway session
+with a small cache, keeping a single batch's device footprint at a few
+blocks.  Serving workloads should hold a ``SearchSession`` instead and
+let repeated traffic hit the cache.
 
 ``IOStats.bytes_read`` vs ``bytes_scan`` is the measurable form of the
 paper's pruning claim: an indexed query answers exactly while reading a
-small fraction of the raw bytes a scan would.
+small fraction of the raw bytes a scan would.  ``cache_hits`` keeps that
+claim measurable under caching, by separating blocks that survived
+pruning but cost no disk traffic.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
-import numpy as np
 
-from repro.core import frontier as frontier_lib
 from repro.core.frontier import SearchStats
 from repro.core.index import BlockIndex
-from repro.core.search import refine_panel
-from repro.kernels import ops
 
 
 class IOStats(NamedTuple):
     """Raw-byte I/O accounting for one out-of-core query batch."""
     bytes_read: int       # raw bytes actually fetched off disk
-    bytes_scan: int       # raw bytes a full scan would read (n_real * n * 4)
-    blocks_fetched: int   # distinct block fetches (incl. speculative ones)
+    bytes_scan: int       # raw bytes a full scan would read
+                          #   (n_real * n * raw itemsize)
+    blocks_fetched: int   # disk block reads (each block at most once/batch)
     blocks_total: int
+    cache_hits: int = 0   # surviving blocks served from the device cache
 
     @property
     def read_fraction(self) -> float:
@@ -72,103 +71,22 @@ class OocSearchResult(NamedTuple):
         return self.idx[..., 0]
 
 
-@functools.partial(jax.jit, static_argnames=("n", "w", "lb_filter"))
-def _refine_step(q, q_paa, front, stats, block, ids_b, lo, hi, lbs, *,
-                 n: int, w: int, lb_filter: bool):
-    """One fetched block against all queries — the device side of the loop."""
-    thr = frontier_lib.bound(front)
-    active = lbs < thr
-    return refine_panel(q, q_paa, front, stats, block, ids_b, lo, hi,
-                        active, thr, n=n, w=w, lb_filter=lb_filter)
-
-
 def ooc_search(index: BlockIndex, queries: jax.Array, *, k: int = 1,
-               lb_filter: bool = True,
-               normalize_queries: bool = True) -> OocSearchResult:
+               lb_filter: bool = True, normalize_queries: bool = True,
+               cache_blocks: int = 4) -> OocSearchResult:
     """Exact k-NN for (Q, n) queries against an index opened out-of-core.
 
     ``index`` must come from ``storage.open_index`` (or ``build_on_disk``):
     summaries on device, raw behind ``index.host_raw``.  Result dist/idx
     are identical to ``search.search`` / ``ucr.search_scan`` on the same
     data — the streaming changes what is read, never what is answered.
+
+    One-shot wrapper over ``cache.SearchSession``: the session (and its
+    ``cache_blocks``-bounded device cache) lives only for this call, so
+    every batch pays cold-disk cost.  Hold a ``SearchSession`` yourself
+    to serve repeated traffic warm.
     """
-    host = index.host_raw
-    if host is None:
-        raise ValueError("index has no host_raw — open it with "
-                         "storage.open_index (or pass a built index to "
-                         "core.search instead)")
-    setup = frontier_lib.prepare(queries, k, w=index.w,
-                                 normalize=normalize_queries)
-    q, q_paa, front = setup.q, setup.q_paa, setup.frontier
-    stats = setup.stats
-    n, w = index.n, index.w
-    n_blocks = index.n_blocks
-    refine = functools.partial(_refine_step, n=n, w=w, lb_filter=lb_filter)
-
-    block_lb = ops.lb_scan_planar(q_paa, index.elo, index.ehi, n=n)  # (Q, B)
-    block_lb_h = np.asarray(block_lb)
-
-    io = {"bytes": 0, "fetches": 0}
-
-    def stage(b: int):
-        """memmap -> host copy -> async DMA; charges the bytes."""
-        io["bytes"] += host.block_nbytes
-        io["fetches"] += 1
-        return jax.device_put(host.fetch(b))
-
-    def step(front, stats, dev_block, b: int):
-        ids_b = index.ids[b]
-        lo = index.slo[b] if lb_filter else None
-        hi = index.shi[b] if lb_filter else None
-        return refine(q, q_paa, front, stats, dev_block, ids_b, lo, hi,
-                      block_lb[:, b])
-
-    # -- stage A: each query's best-envelope block seeds the frontier ----
-    # Each stage-A step refines the block for every query whose envelope
-    # bound beats the then-current threshold; the others are validly
-    # pruned forever (the bound only tightens) — so these blocks are DONE
-    # and drop out of the walk below.
-    done = set()
-    for b in np.unique(np.argmin(block_lb_h, axis=1)):
-        front, stats = step(front, stats, stage(int(b)), int(b))
-        done.add(int(b))
-
-    # -- block-major walk over the surviving schedule --------------------
-    order = np.argsort(block_lb_h.min(axis=0), kind="stable")     # (B,)
-    sched_lb = block_lb_h[:, order]                               # (Q, B)
-    suffix = np.minimum.accumulate(sched_lb[:, ::-1], axis=1)[:, ::-1]
-
-    def pending(ptr: int) -> bool:
-        """Block at schedule slot ptr still needs a fetch under thr_h."""
-        return int(order[ptr]) not in done \
-            and bool(np.any(sched_lb[:, ptr] < thr_h))
-
-    thr_h = np.asarray(frontier_lib.bound(front))                 # sync
-    prefetched: tuple[int, object] | None = None
-    ptr = 0
-    while ptr < n_blocks:
-        if np.all(suffix[:, ptr] >= thr_h):
-            break                           # nothing later helps any query
-        if not pending(ptr):
-            ptr += 1
-            continue                        # pruned (or stage-A-refined)
-        dev = prefetched[1] if prefetched and prefetched[0] == ptr \
-            else stage(int(order[ptr]))
-        prefetched = None
-        front, stats = step(front, stats, dev, int(order[ptr]))   # async
-        nxt = ptr + 1                       # next survivor under current thr
-        while nxt < n_blocks and not pending(nxt):
-            nxt += 1
-        if nxt < n_blocks and not np.all(suffix[:, nxt] >= thr_h):
-            prefetched = (nxt, stage(int(order[nxt])))  # overlaps refine
-        thr_h = np.asarray(frontier_lib.bound(front))   # one sync per block
-        # blocks in (ptr, nxt) were pruned under a bound that only
-        # tightened since — safe to jump straight to the prefetch target
-        ptr = nxt
-
-    io_stats = IOStats(bytes_read=io["bytes"],
-                       bytes_scan=index.n_real * n * 4,
-                       blocks_fetched=io["fetches"],
-                       blocks_total=n_blocks)
-    return OocSearchResult(dist=frontier_lib.result_dists(front),
-                           idx=front.ids, stats=stats, io=io_stats)
+    from repro.storage.cache import SearchSession
+    with SearchSession(index, cache_blocks=cache_blocks) as session:
+        return session.search(queries, k=k, lb_filter=lb_filter,
+                              normalize_queries=normalize_queries)

@@ -1,0 +1,171 @@
+"""Block cache + SearchSession (DESIGN.md §5): warm-cache parity with the
+cold run, disk-read accounting (each block at most once per batch), LRU
+capacity bounds, and hit-rate monotonicity in cache size."""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+import repro.core as core
+from repro import storage
+from repro.core.ucr import search_scan
+from repro.data import random_walk
+
+DIST_TOL = dict(rtol=1e-5, atol=2e-2)
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    raw = random_walk(4000, 128, seed=23)
+    rng = np.random.default_rng(11)
+    qs = jnp.asarray(raw[rng.choice(4000, 6, replace=False)]
+                     + 0.05 * rng.standard_normal((6, 128))
+                     .astype(np.float32))
+    return raw, qs
+
+
+@pytest.fixture(scope="module")
+def opened(dataset, tmp_path_factory):
+    raw, _ = dataset
+    idx = core.build(jnp.asarray(raw), capacity=128)
+    path = tmp_path_factory.mktemp("cache") / "rw.dsix"
+    storage.save_index(idx, path)
+    return storage.open_index(path)
+
+
+def test_session_matches_one_shot_and_oracle(dataset, opened):
+    raw, qs = dataset
+    one_shot = storage.ooc_search(opened, qs, k=5)
+    with storage.SearchSession(opened, cache_blocks=8) as sess:
+        got = sess.search(qs, k=5)
+    assert np.array_equal(np.asarray(got.idx), np.asarray(one_shot.idx))
+    assert np.array_equal(np.asarray(got.dist), np.asarray(one_shot.dist))
+    want = search_scan(jnp.asarray(raw), qs, k=5)
+    assert np.array_equal(np.asarray(got.idx), np.asarray(want.idx))
+    np.testing.assert_allclose(np.asarray(got.dist), np.asarray(want.dist),
+                               **DIST_TOL)
+
+
+def test_warm_repeat_bit_identical_and_zero_disk_bytes(dataset, opened):
+    """The acceptance property: a repeated batch through a session large
+    enough to hold every surviving block answers bit-identically while
+    reading 0 disk bytes."""
+    _, qs = dataset
+    with storage.SearchSession(opened,
+                               cache_blocks=opened.n_blocks) as sess:
+        cold = sess.search(qs, k=5)
+        warm = sess.search(qs, k=5)
+    assert np.array_equal(np.asarray(cold.idx), np.asarray(warm.idx))
+    assert np.array_equal(np.asarray(cold.dist), np.asarray(warm.dist))
+    assert cold.io.blocks_fetched > 0 and cold.io.cache_hits == 0
+    assert warm.io.bytes_read == 0 and warm.io.blocks_fetched == 0
+    # the warm walk touches the same surviving blocks, now all resident
+    assert warm.io.cache_hits == cold.io.blocks_fetched
+    assert sess.hit_rate == pytest.approx(0.5)
+
+
+def test_blocks_fetched_each_block_at_most_once_per_batch(dataset, opened):
+    """Regression for the slot-keyed prefetch bugs: with fetching unified
+    behind the id-keyed cache, one batch reads any given block from disk
+    at most once, and ``blocks_fetched`` counts exactly those reads."""
+    _, qs = dataset
+    calls: list[int] = []
+    orig = opened.host_raw.fetch
+    opened.host_raw.fetch = lambda b: (calls.append(int(b)), orig(b))[1]
+    try:
+        res = storage.ooc_search(opened, qs, k=5)
+    finally:
+        del opened.host_raw.fetch          # restore the class method
+    counts = np.bincount(calls, minlength=opened.n_blocks)
+    assert counts.max() <= 1, f"block(s) read twice in one batch: " \
+        f"{np.nonzero(counts > 1)[0].tolist()}"
+    assert res.io.blocks_fetched == len(calls)
+    assert res.io.bytes_read == len(calls) * opened.host_raw.block_nbytes
+
+
+def test_small_cache_evicts_but_stays_exact(dataset, opened):
+    raw, qs = dataset
+    want = search_scan(jnp.asarray(raw), qs, k=3)
+    with storage.SearchSession(opened, cache_blocks=2) as sess:
+        got = sess.search(qs, k=3)
+        assert len(sess.cache) <= 2
+    assert np.array_equal(np.asarray(got.idx), np.asarray(want.idx))
+
+
+def test_hit_rate_monotone_in_cache_capacity(dataset, opened):
+    """LRU is a stack algorithm and the block-touch trace is cache-
+    independent, so total hits over a fixed batch sequence can only grow
+    with capacity — and the answers never change."""
+    raw, _ = dataset
+    rng = np.random.default_rng(77)
+    batches = [jnp.asarray(raw[rng.choice(4000, 4, replace=False)]
+                           + 0.05 * rng.standard_normal((4, 128))
+                           .astype(np.float32))
+               for _ in range(4)]
+    hits, results = [], []
+    for cap in (2, 4, 8, 16, opened.n_blocks):
+        with storage.SearchSession(opened, cache_blocks=cap) as sess:
+            res = [sess.search(b, k=3) for b in batches]
+            hits.append(sess.cache_hits)
+        results.append(res)
+    assert hits == sorted(hits), f"hits not monotone in capacity: {hits}"
+    assert hits[-1] > hits[0]              # repetition across batches exists
+    for res in results[1:]:
+        for a, b in zip(results[0], res):
+            assert np.array_equal(np.asarray(a.idx), np.asarray(b.idx))
+            assert np.array_equal(np.asarray(a.dist), np.asarray(b.dist))
+
+
+def test_cache_capacity_floor():
+    class _Host:                           # never touched before the raise
+        pass
+    with pytest.raises(ValueError, match=">= 2"):
+        storage.BlockCache(_Host(), 1)
+
+
+def test_session_requires_host_raw(dataset):
+    raw, qs = dataset
+    idx = core.build(jnp.asarray(raw), capacity=128)
+    with pytest.raises(ValueError, match="host_raw"):
+        storage.SearchSession(idx)
+
+
+def test_bytes_scan_derives_itemsize_from_raw_dtype(dataset, opened):
+    _, qs = dataset
+    res = storage.ooc_search(opened, qs, k=1)
+    item = opened.host_raw.dtype.itemsize
+    assert res.io.bytes_scan == opened.n_real * opened.n * item
+
+
+def test_failed_read_does_not_poison_the_cache(dataset, opened):
+    """A transient I/O error must not leave a stale in-flight entry that
+    masquerades as a cached block (and re-raises forever): the failed
+    read removes itself and the next request retries."""
+    raw, qs = dataset
+
+    def broken(b):
+        raise OSError("transient read failure")
+
+    with storage.SearchSession(opened, cache_blocks=8) as sess:
+        opened.host_raw.fetch = broken
+        try:
+            with pytest.raises(OSError, match="transient"):
+                sess.search(qs, k=3)       # every disk read fails loudly
+        finally:
+            del opened.host_raw.fetch      # restore the class method
+        sess.cache.drain()                 # let failed speculations settle
+        assert not sess.cache._inflight    # nothing stale left behind
+        got = sess.search(qs, k=3)         # "disk" healed: retry succeeds
+    want = search_scan(jnp.asarray(raw), qs, k=3)
+    assert np.array_equal(np.asarray(got.idx), np.asarray(want.idx))
+
+
+def test_no_inflight_reads_survive_a_batch(dataset, opened):
+    """A speculated-then-pruned read is drained into the cache (and this
+    batch's bill) before the result is returned — nothing is left in
+    flight to double-charge or leak."""
+    _, qs = dataset
+    with storage.SearchSession(opened, cache_blocks=8) as sess:
+        sess.search(qs, k=5)
+        assert not sess.cache._inflight
+        assert len(sess.cache) <= 8

@@ -116,6 +116,23 @@ def test_deadline_gives_anytime_upper_bound():
             <= np.asarray(exact.stats.blocks_visited)).all()
 
 
+def test_deadline_equal_to_block_count_stays_exact():
+    """deadline_blocks == n_blocks is the no-op deadline: the while_loop
+    cond still evaluates next_lb at ptr == B (logical_and does not
+    short-circuit) and must stay in-bounds via the explicit clamp."""
+    raw = jnp.asarray(dataset("walk", 2048))
+    qs = jnp.asarray(dataset("walk", 2048)[:4] * 1.01)
+    idx = core.build(raw, capacity=32)
+    exact = core.search(idx, qs)
+    capped = core.search(idx, qs, deadline_blocks=idx.n_blocks)
+    assert np.array_equal(np.asarray(capped.idx), np.asarray(exact.idx))
+    np.testing.assert_allclose(np.asarray(capped.dist),
+                               np.asarray(exact.dist), rtol=1e-6, atol=1e-6)
+    from repro.core.search import search_block_major
+    bm = search_block_major(idx, qs, deadline_blocks=idx.n_blocks)
+    assert np.array_equal(np.asarray(bm.idx), np.asarray(exact.idx))
+
+
 def test_pruning_hierarchy_matches_paper():
     """The paper's claim: MESSI refines fewer series than ParIS, both far
     fewer than the full scan (Fig. 9/12 mechanism)."""
