@@ -19,7 +19,8 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.core as core
-from benchmarks.common import print_table, timeit, write_rows
+from benchmarks.common import (BenchRunner, csv_ints, csv_strs, print_table,
+                               timeit, write_rows)
 from repro.data import make_dataset
 from repro.data.loader import ChunkedLoader, IncrementalBuilder
 
@@ -69,5 +70,16 @@ def run(sizes=(50_000, 200_000), datasets=("synthetic", "sald", "seismic"),
     return rows
 
 
+def main(argv=None) -> int:
+    return (BenchRunner(__doc__)
+            .arg("--sizes", type=csv_ints, default=(50_000, 200_000))
+            .arg("--datasets", type=csv_strs,
+                 default=("synthetic", "sald", "seismic"))
+            .arg("--capacity", type=int, default=1024)
+            .main(lambda a: run(sizes=a.sizes, datasets=a.datasets,
+                                capacity=a.capacity), argv))
+
+
 if __name__ == "__main__":
-    run()
+    import sys
+    sys.exit(main())

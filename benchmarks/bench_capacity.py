@@ -11,7 +11,8 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.core as core
-from benchmarks.common import print_table, timeit, write_rows
+from benchmarks.common import (BenchRunner, csv_ints, print_table,
+                               timeit, write_rows)
 from repro.core.search import search_block_major
 from repro.core.ucr import search_scan
 from repro.data import make_dataset
@@ -48,5 +49,16 @@ def run(n: int = 100_000, capacities=(128, 256, 512, 1024, 2048),
     return rows
 
 
+def main(argv=None) -> int:
+    return (BenchRunner(__doc__)
+            .arg("--size", type=int, default=100_000)
+            .arg("--capacities", type=csv_ints,
+                 default=(128, 256, 512, 1024, 2048))
+            .arg("--queries", type=int, default=16)
+            .main(lambda a: run(n=a.size, capacities=a.capacities,
+                                n_queries=a.queries), argv))
+
+
 if __name__ == "__main__":
-    run()
+    import sys
+    sys.exit(main())

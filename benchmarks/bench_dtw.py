@@ -6,7 +6,7 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.core as core
-from benchmarks.common import print_table, timeit, write_rows
+from benchmarks.common import BenchRunner, print_table, timeit, write_rows
 from repro.core import dtw as D
 from repro.core import isax
 from repro.data import make_dataset
@@ -46,5 +46,16 @@ def run(n: int = 20_000, length: int = 128, r: int = 6,
     return rows
 
 
+def main(argv=None) -> int:
+    return (BenchRunner(__doc__)
+            .arg("--size", type=int, default=20_000)
+            .arg("--length", type=int, default=128)
+            .arg("--band", type=int, default=6)
+            .arg("--queries", type=int, default=8)
+            .main(lambda a: run(n=a.size, length=a.length, r=a.band,
+                                n_queries=a.queries), argv))
+
+
 if __name__ == "__main__":
-    run()
+    import sys
+    sys.exit(main())

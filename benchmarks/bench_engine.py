@@ -1,0 +1,152 @@
+"""Query-engine matrix benchmark: wall-time per metric x schedule x
+backend cell (core/engine.py).
+
+One dataset, every implemented cell of the matrix the engine composes —
+ED / DTW / Cosine, query-major / block-major / flat, device-resident /
+cached-blocks (plus the two-round distributed out-of-core protocol over
+two shard sessions) — each cell's exactness asserted against its oracle
+before it is timed.  The JSON rows are the per-cell trajectory CI
+tracks (`BENCH_engine.json`).
+
+    PYTHONPATH=src python -m benchmarks.bench_engine \\
+        --size 20000 --k 5 --out BENCH_engine.json
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as core
+from benchmarks.common import BenchRunner, print_table, timeit, write_rows
+from repro import storage
+from repro.core import distributed, dtw as D, engine, vector
+from repro.core.paris import search_paris
+from repro.core.search import search_block_major
+from repro.core.ucr import search_scan
+from repro.data import make_dataset
+
+
+def run(n: int = 20_000, length: int = 128, n_queries: int = 8,
+        capacity: int = 256, k: int = 5, r: int = 6,
+        workdir: str | None = None) -> list[dict]:
+    tmp = workdir or tempfile.mkdtemp(prefix="bench_engine_")
+    try:
+        return _run(tmp, n=n, length=length, n_queries=n_queries,
+                    capacity=capacity, k=k, r=r)
+    finally:
+        if workdir is None:
+            shutil.rmtree(tmp, ignore_errors=True)
+
+
+def _run(tmp: str, *, n: int, length: int, n_queries: int, capacity: int,
+         k: int, r: int) -> list[dict]:
+    raw = make_dataset("synthetic", n, length)
+    rng = np.random.default_rng(99)
+    qs = jnp.asarray(raw[rng.choice(n, n_queries, replace=False)]
+                     + 0.05 * rng.standard_normal((n_queries, length))
+                     .astype(np.float32))
+    raw_j = jnp.asarray(raw)
+    idx = core.build(raw_j, capacity=capacity)
+
+    index_path = os.path.join(tmp, f"engine_{n}.dsix")
+    storage.save_index(idx, index_path)
+    opened = storage.open_index(index_path)
+
+    # shard files for the distributed-ooc cell (disjoint halves, global ids)
+    half = n // 2
+    shard_paths = []
+    for s in range(2):
+        ids = jnp.arange(s * half, (s + 1) * half, dtype=jnp.int32)
+        sidx = core.build(raw_j[s * half:(s + 1) * half],
+                          capacity=capacity, ids=ids)
+        path = os.path.join(tmp, f"engine_{n}_shard{s}.dsix")
+        storage.save_index(sidx, path)
+        shard_paths.append(path)
+
+    # embeddings for the cosine cells: the raw series reinterpreted as
+    # length-d vectors (d == length, divisible by w)
+    vidx = vector.build_vector_index(raw_j, capacity=capacity)
+    v_path = os.path.join(tmp, f"engine_{n}_vec.dsix")
+    storage.save_index(vidx, v_path)
+    v_opened = storage.open_index(v_path)
+
+    oracle = search_scan(raw_j, qs, k=k)
+    oracle_dtw = D.search_dtw(idx, qs, r=r, k=k)
+    oracle_cos = vector.search_vectors(vidx, qs, k=k)
+
+    def ooc(metric=None):
+        return lambda: storage.ooc_search(opened, qs, k=k, metric=metric,
+                                          cache_blocks=8)
+
+    def ooc_cos():
+        return storage.ooc_search(v_opened, qs, k=k,
+                                  metric=engine.Cosine(), cache_blocks=8)
+
+    def dist_ooc():
+        sessions = [storage.SearchSession(storage.open_index(p),
+                                          cache_blocks=8)
+                    for p in shard_paths]
+        try:
+            return distributed.search_sharded_ooc(sessions, qs, k=k)
+        finally:
+            for s in sessions:
+                s.close()
+
+    cells = [
+        ("ed", "query_major", "device",
+         lambda: core.search(idx, qs, k=k), oracle),
+        ("ed", "block_major", "device",
+         lambda: search_block_major(idx, qs, k=k), oracle),
+        ("ed", "flat", "device",
+         lambda: search_paris(idx, qs, k=k), oracle),
+        ("ed", "block_major", "cached", ooc(), oracle),
+        ("ed", "block_major", "cached_x2_shards", dist_ooc, oracle),
+        ("dtw", "query_major", "device",
+         lambda: D.search_dtw(idx, qs, r=r, k=k), oracle_dtw),
+        ("dtw", "block_major", "cached",
+         ooc(engine.DTW(r=r)), oracle_dtw),
+        ("cosine", "query_major", "device",
+         lambda: vector.search_vectors(vidx, qs, k=k), oracle_cos),
+        ("cosine", "block_major", "cached", ooc_cos, oracle_cos),
+    ]
+
+    rows = []
+    for metric, schedule, backend, fn, want in cells:
+        t, res = timeit(fn, iters=2)
+        assert np.array_equal(np.asarray(res.idx),
+                              np.asarray(want.idx)), \
+            f"exactness! {metric}/{schedule}/{backend}"
+        rows.append({
+            "metric": metric, "schedule": schedule, "backend": backend,
+            "n_series": n, "k": k, "ms_per_query": t / n_queries * 1e3,
+            "refined_frac": float(np.mean(np.asarray(
+                res.stats.series_refined))) / n,
+        })
+
+    print_table("query-engine matrix (metric x schedule x backend)", rows,
+                ["metric", "schedule", "backend", "n_series", "k",
+                 "ms_per_query", "refined_frac"])
+    write_rows("engine", rows)
+    return rows
+
+
+def main(argv=None) -> int:
+    return (BenchRunner(__doc__)
+            .arg("--size", type=int, default=20_000)
+            .arg("--length", type=int, default=128)
+            .arg("--queries", type=int, default=8)
+            .arg("--capacity", type=int, default=256)
+            .arg("--k", type=int, default=5)
+            .arg("--band", type=int, default=6)
+            .main(lambda a: run(n=a.size, length=a.length,
+                                n_queries=a.queries, capacity=a.capacity,
+                                k=a.k, r=a.band), argv))
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

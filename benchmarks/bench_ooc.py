@@ -17,8 +17,6 @@ claim at configurable sizes —
 """
 from __future__ import annotations
 
-import argparse
-import json
 import os
 import tempfile
 
@@ -26,7 +24,8 @@ import jax.numpy as jnp
 import numpy as np
 
 import repro.core as core
-from benchmarks.common import print_table, timeit, write_rows
+from benchmarks.common import (BenchRunner, csv_ints, csv_strs, print_table,
+                               timeit, write_rows)
 from repro import storage
 from repro.data import make_dataset
 
@@ -88,26 +87,15 @@ def run(sizes=(50_000, 200_000), datasets=("synthetic",),
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--sizes", default="50000,200000")
-    ap.add_argument("--datasets", default="synthetic")
-    ap.add_argument("--k", default="1,5")
-    ap.add_argument("--queries", type=int, default=8)
-    ap.add_argument("--capacity", type=int, default=1024)
-    ap.add_argument("--out", default=None,
-                    help="also write rows to this JSON path "
-                         "(e.g. BENCH_ooc.json for the CI artifact)")
-    args = ap.parse_args(argv)
-
-    rows = run(sizes=tuple(int(s) for s in args.sizes.split(",")),
-               datasets=tuple(args.datasets.split(",")),
-               n_queries=args.queries, capacity=args.capacity,
-               ks=tuple(int(s) for s in args.k.split(",")))
-    if args.out:
-        with open(args.out, "w") as f:
-            json.dump(rows, f, indent=1)
-        print(f"wrote {args.out}")
-    return 0
+    return (BenchRunner(__doc__)
+            .arg("--sizes", type=csv_ints, default=(50_000, 200_000))
+            .arg("--datasets", type=csv_strs, default=("synthetic",))
+            .arg("--k", type=csv_ints, default=(1, 5))
+            .arg("--queries", type=int, default=8)
+            .arg("--capacity", type=int, default=1024)
+            .main(lambda a: run(sizes=a.sizes, datasets=a.datasets,
+                                n_queries=a.queries, capacity=a.capacity,
+                                ks=a.k), argv))
 
 
 if __name__ == "__main__":

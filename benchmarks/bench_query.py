@@ -20,15 +20,13 @@ EXPERIMENTS.md §Perf:
 """
 from __future__ import annotations
 
-import argparse
-import json
-
 import jax
 import jax.numpy as jnp
 import numpy as np
 
 import repro.core as core
-from benchmarks.common import print_table, timeit, write_rows
+from benchmarks.common import (BenchRunner, csv_ints, csv_strs, print_table,
+                               timeit, write_rows)
 from repro.core.paris import search_paris
 from repro.core.search import search_block_major
 from repro.core.ucr import search_scan
@@ -89,28 +87,18 @@ def run(sizes=(100_000, 400_000), datasets=("synthetic", "sald", "seismic"),
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--sizes", default="100000,400000",
-                    help="comma-separated dataset sizes")
-    ap.add_argument("--datasets", default="synthetic,sald,seismic")
-    ap.add_argument("--k", default="1",
-                    help="comma-separated k sweep, e.g. 1,5,32")
-    ap.add_argument("--queries", type=int, default=16)
-    ap.add_argument("--capacity", type=int, default=1024)
-    ap.add_argument("--out", default=None,
-                    help="also write rows to this JSON path "
-                         "(e.g. BENCH_query.json for the CI artifact)")
-    args = ap.parse_args(argv)
-
-    rows = run(sizes=tuple(int(s) for s in args.sizes.split(",")),
-               datasets=tuple(args.datasets.split(",")),
-               n_queries=args.queries, capacity=args.capacity,
-               ks=tuple(int(s) for s in args.k.split(",")))
-    if args.out:
-        with open(args.out, "w") as f:
-            json.dump(rows, f, indent=1)
-        print(f"wrote {args.out}")
-    return 0
+    return (BenchRunner(__doc__)
+            .arg("--sizes", type=csv_ints, default=(100_000, 400_000),
+                 help="comma-separated dataset sizes")
+            .arg("--datasets", type=csv_strs,
+                 default=("synthetic", "sald", "seismic"))
+            .arg("--k", type=csv_ints, default=(1,),
+                 help="comma-separated k sweep, e.g. 1,5,32")
+            .arg("--queries", type=int, default=16)
+            .arg("--capacity", type=int, default=1024)
+            .main(lambda a: run(sizes=a.sizes, datasets=a.datasets,
+                                n_queries=a.queries, capacity=a.capacity,
+                                ks=a.k), argv))
 
 
 if __name__ == "__main__":

@@ -16,7 +16,7 @@ import os
 import subprocess
 import sys
 
-from benchmarks.common import print_table, write_rows
+from benchmarks.common import BenchRunner, csv_ints, print_table, write_rows
 
 _PAYLOAD = r"""
 import json, time
@@ -76,5 +76,12 @@ def run(device_counts=(1, 2, 4, 8)) -> list[dict]:
     return rows
 
 
+def main(argv=None) -> int:
+    return (BenchRunner(__doc__)
+            .arg("--devices", type=csv_ints, default=(1, 2, 4, 8))
+            .main(lambda a: run(device_counts=a.devices), argv))
+
+
 if __name__ == "__main__":
-    run()
+    import sys
+    sys.exit(main())

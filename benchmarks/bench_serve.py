@@ -18,8 +18,6 @@ Sweeping `--cache-blocks` gives hit-rate (and latency) vs cache size.
 """
 from __future__ import annotations
 
-import argparse
-import json
 import os
 import tempfile
 import time
@@ -28,7 +26,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from benchmarks.common import print_table, write_rows
+from benchmarks.common import BenchRunner, csv_ints, print_table, write_rows
 from repro import storage
 from repro.data import make_dataset
 
@@ -107,29 +105,18 @@ def run(n: int = 50_000, length: int = 256, n_queries: int = 8,
 
 
 def main(argv=None) -> int:
-    ap = argparse.ArgumentParser(description=__doc__)
-    ap.add_argument("--size", type=int, default=50_000)
-    ap.add_argument("--length", type=int, default=256)
-    ap.add_argument("--queries", type=int, default=8)
-    ap.add_argument("--batches", type=int, default=6)
-    ap.add_argument("--capacity", type=int, default=1024)
-    ap.add_argument("--cache-blocks", default="8,32,128")
-    ap.add_argument("--k", type=int, default=5)
-    ap.add_argument("--out", default=None,
-                    help="also write rows to this JSON path "
-                         "(e.g. BENCH_serve.json for the CI artifact)")
-    args = ap.parse_args(argv)
-
-    rows = run(n=args.size, length=args.length, n_queries=args.queries,
-               n_batches=args.batches, capacity=args.capacity,
-               cache_blocks=tuple(int(s)
-                                  for s in args.cache_blocks.split(",")),
-               k=args.k)
-    if args.out:
-        with open(args.out, "w") as f:
-            json.dump(rows, f, indent=1)
-        print(f"wrote {args.out}")
-    return 0
+    return (BenchRunner(__doc__)
+            .arg("--size", type=int, default=50_000)
+            .arg("--length", type=int, default=256)
+            .arg("--queries", type=int, default=8)
+            .arg("--batches", type=int, default=6)
+            .arg("--capacity", type=int, default=1024)
+            .arg("--cache-blocks", type=csv_ints, default=(8, 32, 128))
+            .arg("--k", type=int, default=5)
+            .main(lambda a: run(n=a.size, length=a.length,
+                                n_queries=a.queries, n_batches=a.batches,
+                                capacity=a.capacity,
+                                cache_blocks=a.cache_blocks, k=a.k), argv))
 
 
 if __name__ == "__main__":

@@ -1,6 +1,8 @@
-"""Shared benchmark utilities: timing, dataset cache, CSV output."""
+"""Shared benchmark utilities: timing, table/JSON output, and the
+``BenchRunner`` CLI harness every ``bench_*`` driver builds on."""
 from __future__ import annotations
 
+import argparse
 import json
 import os
 import time
@@ -11,6 +13,51 @@ import numpy as np
 
 OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                        "bench")
+
+
+def csv_ints(s: str) -> tuple[int, ...]:
+    """argparse type for comma-separated int sweeps, e.g. --k 1,5,32."""
+    return tuple(int(x) for x in s.split(","))
+
+
+def csv_strs(s: str) -> tuple[str, ...]:
+    return tuple(s.split(","))
+
+
+class BenchRunner:
+    """The per-driver CLI boilerplate, hoisted: argparse construction,
+    the ``--out`` JSON artifact emission (``BENCH_*.json`` in CI), and
+    the exit-code contract — previously copy-pasted across the seven
+    ``bench_*`` drivers.
+
+    >>> def main(argv=None):
+    ...     return (BenchRunner(__doc__)
+    ...             .arg("--sizes", type=csv_ints, default=(50_000,))
+    ...             .main(lambda a: run(sizes=a.sizes), argv))
+    """
+
+    def __init__(self, description: str | None = None):
+        self.ap = argparse.ArgumentParser(
+            description=description,
+            formatter_class=argparse.RawDescriptionHelpFormatter)
+        self.ap.add_argument(
+            "--out", default=None,
+            help="also write rows to this JSON path "
+                 "(e.g. BENCH_query.json for the CI artifact)")
+
+    def arg(self, *args, **kw) -> "BenchRunner":
+        self.ap.add_argument(*args, **kw)
+        return self
+
+    def main(self, run: Callable[[argparse.Namespace], list[dict]],
+             argv=None) -> int:
+        args = self.ap.parse_args(argv)
+        rows = run(args)
+        if args.out:
+            with open(args.out, "w") as f:
+                json.dump(rows, f, indent=1)
+            print(f"wrote {args.out}")
+        return 0
 
 
 def timeit(fn: Callable, *args, warmup: int = 1, iters: int = 3,

@@ -16,13 +16,14 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_build, bench_capacity, bench_dtw,
-                            bench_ooc, bench_query, bench_scaling,
-                            bench_serve)
+                            bench_engine, bench_ooc, bench_query,
+                            bench_scaling, bench_serve)
 
     t0 = time.time()
     if args.quick:
         bench_build.run(sizes=(20_000,), datasets=("synthetic",))
         bench_query.run(sizes=(50_000,), datasets=("synthetic",))
+        bench_engine.run(n=10_000, capacity=256)
         bench_ooc.run(sizes=(20_000,), datasets=("synthetic",),
                       capacity=256, ks=(1, 5))
         bench_serve.run(n=20_000, n_queries=4, n_batches=4, capacity=256,
@@ -33,6 +34,7 @@ def main(argv=None) -> int:
     else:
         bench_build.run()
         bench_query.run()
+        bench_engine.run()
         bench_ooc.run()
         bench_serve.run()
         bench_dtw.run()

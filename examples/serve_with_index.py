@@ -130,12 +130,15 @@ def main():
         # its reported hit-rate) starts genuinely cold
         with storage.SearchSession(index, cache_blocks=2) as warmup:
             jax.block_until_ready(
-                warmup.search(vector.prep_vectors(batches[0][1]), k=args.k,
-                              normalize_queries=False).dist)
+                warmup.search(batches[0][1], k=args.k,
+                              metric=vector.Cosine()).dist)
         session = storage.SearchSession(index,
                                         cache_blocks=args.cache_blocks)
-        run = lambda qe: session.search(vector.prep_vectors(qe), k=args.k,
-                                        normalize_queries=False)
+        # the engine's Cosine metric owns the unit-norm prep, so the
+        # session serves raw embeddings directly (DESIGN.md §4 matrix:
+        # Cosine x cached backend)
+        run = lambda qe: session.search(qe, k=args.k,
+                                        metric=vector.Cosine())
 
     lat_ms = []
     for qi, q_embs in batches:                          # the serving loop

@@ -1,14 +1,17 @@
 """Core library: the paper's contribution (parallel iSAX indexing for exact
 similarity search — ParIS / ParIS+ / MESSI), TPU-native. See DESIGN.md."""
-from repro.core import frontier, isax
+from repro.core import engine, frontier, isax
+from repro.core.engine import DTW, Cosine, ED, QueryPlan
 from repro.core.frontier import Frontier, QuerySetup, SearchStats
 from repro.core.index import BlockIndex, FlatIndex, build, build_flat, flat_view
-from repro.core.search import SearchResult, search
+from repro.core.search import SearchResult, search, search_block_major
 from repro.core.paris import search_flat, search_paris
 from repro.core.ucr import search_scan
 
 __all__ = [
-    "frontier", "isax", "Frontier", "QuerySetup", "BlockIndex", "FlatIndex",
+    "engine", "frontier", "isax", "QueryPlan", "ED", "DTW", "Cosine",
+    "Frontier", "QuerySetup", "BlockIndex", "FlatIndex",
     "build", "build_flat", "flat_view", "SearchResult", "SearchStats",
-    "search", "search_flat", "search_paris", "search_scan",
+    "search", "search_block_major", "search_flat", "search_paris",
+    "search_scan",
 ]

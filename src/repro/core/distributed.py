@@ -4,8 +4,10 @@ The paper's worker threads become mesh devices.  Every device is symmetric
 (as every core is in the paper): the dataset is range-sharded over ALL mesh
 axes flattened, each device builds its own BlockIndex shard completely
 independently (the paper's "workers process distinct subtrees ... no need for
-synchronization"), and query answering uses the two-round shared-frontier
-protocol (the k-NN generalization of the paper's shared BSF):
+synchronization"), and query answering is the two-round shared-frontier
+protocol (the k-NN generalization of the paper's shared BSF), wrapped
+around an arbitrary ``engine.QueryPlan`` — any metric, either ordered
+schedule, either backend:
 
   round 1: every shard seeds its approximate top-k frontier (stage A) ->
            pmin all-reduce of the k-th-best distance (one scalar per
@@ -19,6 +21,12 @@ protocol (the k-NN generalization of the paper's shared BSF):
            an all-gather + frontier merge (core/frontier.py) then yields
            the identical global top-k on every shard.
 
+``search_sharded`` runs the protocol inside one shard_map over
+device-resident shards; ``search_sharded_ooc`` runs the SAME two rounds
+at the host level over out-of-core shards (one ``storage.SearchSession``
+per shard — the paper's multi-node on-disk deployment), with the pmin
+becoming an np.minimum reduce between the stage-A pass and the walks.
+
 Total communication per query batch: one (Q,) scalar all-reduce + one
 (Q, K) frontier all-gather — independent of dataset size, which is what
 makes this design runnable at 1000+ nodes.
@@ -26,7 +34,7 @@ makes this design runnable at 1000+ nodes.
 from __future__ import annotations
 
 import functools
-from typing import Any
+from typing import Any, Sequence
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +42,7 @@ from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 import repro.core.index as index_lib
 from repro.compat import shard_map
+from repro.core import engine
 from repro.core import frontier as frontier_lib
 from repro.core.frontier import Frontier
 from repro.core.index import BlockIndex
@@ -87,7 +96,7 @@ def build_sharded(raw: jax.Array, mesh: Mesh, *, w: int = 16, card: int = 256,
     return fn(raw, ids)
 
 
-def _merge_shards(res: SearchResult, ax) -> tuple[jax.Array, jax.Array]:
+def _merge_shards(res, ax) -> tuple[jax.Array, jax.Array]:
     """All-gather per-shard (Q, K) results and merge into the global top-k.
 
     Merging happens in the sqrt-distance domain (monotone, so the
@@ -102,33 +111,30 @@ def search_sharded(sharded_index: BlockIndex, queries: jax.Array, mesh: Mesh,
                    *, k: int = 1, blocks_per_iter: int = 4,
                    lb_filter: bool = True,
                    deadline_blocks: int | None = None,
-                   schedule: str = "block_major") -> SearchResult:
+                   schedule: str = "block_major",
+                   metric=None) -> SearchResult:
     """Exact global k-NN over all shards. queries (Q, n) replicated.
 
-    ``schedule``: "block_major" (optimized batched schedule, the production
-    default — see search.py) or "query_major" (the paper-faithful
-    priority-queue order, kept as the measured baseline)."""
+    The two-round protocol wrapped around an ``engine.QueryPlan``:
+    ``schedule`` picks "block_major" (optimized batched schedule, the
+    production default) or "query_major" (the paper-faithful priority-
+    queue order, kept as the measured baseline); ``metric`` overrides
+    the metric axis (default z-normed ``ED`` — pass ``engine.Cosine()``
+    for a sharded vector index built with ``normalize=False``).
+    """
     ax = _all_axes(mesh)
     specs = index_pspecs(mesh, like=sharded_index)
+    m = engine.ED(lb_filter=lb_filter) if metric is None else metric
+    plan = engine.QueryPlan(metric=m, schedule=schedule, k=k,
+                            blocks_per_iter=blocks_per_iter,
+                            deadline_blocks=deadline_blocks)
 
     def _search(local_index, q):
-        from repro.core import isax
-        from repro.core.search import search, search_block_major
-        qz = isax.znorm(q).astype(jnp.float32)
-        q_paa = isax.paa(qz, local_index.w)
         # round 1: local approximate top-k -> global k-th-best all-reduce
-        f_a, _ = frontier_lib.approximate(local_index, qz, q_paa, k)
+        _, f_a, _, _ = engine.prepare(m, local_index, q, k)
         thr_g = jax.lax.pmin(f_a.threshold(), ax)
         # round 2: exact local search seeded with the global threshold
-        if schedule == "block_major":
-            res = search_block_major(local_index, q, k=k, lb_filter=lb_filter,
-                                     initial_threshold=thr_g,
-                                     deadline_blocks=deadline_blocks)
-        else:
-            res = search(local_index, q, k=k,
-                         blocks_per_iter=blocks_per_iter,
-                         lb_filter=lb_filter, initial_threshold=thr_g,
-                         deadline_blocks=deadline_blocks)
+        res = engine.run(local_index, q, plan, initial_threshold=thr_g)
         # merge: all-gather the (Q, K) shard frontiers -> global top-k
         dist_g, idx_g = _merge_shards(res, ax)
         stats = SearchStats(
@@ -146,6 +152,69 @@ def search_sharded(sharded_index: BlockIndex, queries: jax.Array, mesh: Mesh,
     fn = shard_map(_search, mesh=mesh, in_specs=(specs, P(None)),
                        out_specs=out, check_vma=False)
     return fn(sharded_index, queries)
+
+
+def search_sharded_ooc(sessions: Sequence, queries: jax.Array, *,
+                       k: int = 1, lb_filter: bool = True,
+                       normalize_queries: bool = True, metric=None):
+    """Distributed OUT-OF-CORE exact k-NN: the same two-round protocol,
+    host-level, over per-shard ``storage.SearchSession``s.
+
+    Each session wraps one shard's on-disk index (disjoint series,
+    global ids — e.g. built per shard with ``core.build(..., ids=...)``
+    and persisted).  Round 1 runs stage A on every shard (fetching only
+    best-envelope blocks, which stay warm in each shard's cache) and
+    min-reduces the k-th-best thresholds; round 2 runs every shard's
+    cached block-major walk seeded with that global bound, so each
+    shard prunes as tightly as the shared-memory BSF would allow;
+    finally the per-shard frontiers merge into the global top-k.
+
+    Returns an ``OocSearchResult`` whose stats/io are summed over
+    shards; round 1's stage-A disk reads are billed into each shard's
+    round-2 IOStats (SearchSession carries them forward), so
+    ``io.blocks_fetched`` is the protocol's FULL disk cost, directly
+    comparable to running the shards blind.  -> global exact top-k,
+    identical to a single out-of-core search over the union of the
+    shards.  (``stats.iters`` stays 0: the cached walk does not count
+    while_loop trips.)
+    """
+    import numpy as np
+
+    from repro.storage.ooc_search import IOStats, OocSearchResult
+
+    if not sessions:
+        raise ValueError("search_sharded_ooc needs at least one session")
+    kw = dict(k=k, lb_filter=lb_filter, normalize_queries=normalize_queries,
+              metric=metric)
+    # round 1: per-shard stage-A thresholds -> host pmin
+    thr_g = jnp.asarray(np.minimum.reduce(
+        [s.approximate_threshold(queries, **kw) for s in sessions]))
+    # round 2: exact per-shard walks seeded with the global bound
+    results = [s.search(queries, initial_threshold=thr_g, **kw)
+               for s in sessions]
+    # merge: per-shard frontiers (sqrt domain, disjoint ids) -> global top-k
+    front = Frontier(results[0].dist, results[0].idx)
+    for r in results[1:]:
+        front = frontier_lib.merge(front, Frontier(r.dist, r.idx))
+    stats = SearchStats(
+        blocks_visited=functools.reduce(
+            jnp.add, [r.stats.blocks_visited for r in results]),
+        series_refined=functools.reduce(
+            jnp.add, [r.stats.series_refined for r in results]),
+        lb_series=functools.reduce(
+            jnp.add, [r.stats.lb_series for r in results]),
+        iters=functools.reduce(
+            jnp.maximum, [r.stats.iters for r in results]),
+    )
+    io = IOStats(
+        bytes_read=sum(r.io.bytes_read for r in results),
+        bytes_scan=sum(r.io.bytes_scan for r in results),
+        blocks_fetched=sum(r.io.blocks_fetched for r in results),
+        blocks_total=sum(r.io.blocks_total for r in results),
+        cache_hits=sum(r.io.cache_hits for r in results),
+    )
+    return OocSearchResult(dist=front.dists, idx=front.ids,
+                           stats=stats, io=io)
 
 
 def search_sharded_scan(raw: jax.Array, queries: jax.Array, mesh: Mesh,

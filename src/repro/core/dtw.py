@@ -2,91 +2,28 @@
 in the index structure: we can index a dataset once, and then use this index
 to answer both Euclidean and DTW similarity search queries").
 
-Pieces:
-  * exact DTW with a Sakoe-Chiba band, vectorized over candidates via an
-    anti-diagonal lax.scan (the row-major DP has an in-row dependency; the
-    anti-diagonal order removes it, which is the standard way to vectorize
-    DTW on SIMD machines — and on the VPU);
-  * LB_Keogh lower bound from the query envelope (U/L over the band);
-  * an index-level lower bound: MINDIST between the PAA of the query envelope
-    and the stored iSAX region bounds — envelope-widened regions keep the
-    no-false-dismissal guarantee, so the SAME BlockIndex answers DTW queries.
+The DTW machinery now lives in `core/engine.py` as the ``DTW(r)`` metric
+adapter — this module keeps the stable public faces:
+
+  * exact banded DTW (`dtw_band`: anti-diagonal lax.scan — the standard
+    way to vectorize the DP on SIMD machines, and on the VPU);
+  * the LB_Keogh family (`query_envelope`, `lb_keogh`) and the
+    index-level bound (`envelope_block_lb`): envelope-widened region
+    MINDIST keeps the no-false-dismissal guarantee, so the SAME
+    BlockIndex answers DTW queries;
+  * `search_dtw`, a `DTW(r)` query plan on the paper-faithful
+    query-major schedule.  Out-of-core DTW is the same metric on the
+    cached backend: ``storage.SearchSession.search(qs, metric=DTW(r))``.
 """
 from __future__ import annotations
 
-import functools
-from typing import NamedTuple
-
 import jax
-import jax.numpy as jnp
 
-from repro.core import frontier as frontier_lib
-from repro.core import isax
+from repro.core import engine
+from repro.core.engine import (DTW, QueryPlan, dtw_band, lb_keogh,  # noqa: F401
+                               query_envelope)
 from repro.core.index import BlockIndex
-from repro.core.search import INF, SearchStats, SearchResult
-from repro.kernels import ops
-
-
-def query_envelope(q: jax.Array, r: int) -> tuple[jax.Array, jax.Array]:
-    """Keogh envelope: U_i = max(q[i-r:i+r+1]), L_i = min(...). q (..., n)."""
-    n = q.shape[-1]
-    pads = [(0, 0)] * (q.ndim - 1) + [(r, r)]
-    qu = jnp.pad(q, pads, constant_values=-jnp.inf)
-    ql = jnp.pad(q, pads, constant_values=jnp.inf)
-    iu = jnp.arange(n)[:, None] + jnp.arange(2 * r + 1)[None, :]
-    u = jnp.max(qu[..., iu], axis=-1)
-    l = jnp.min(ql[..., iu], axis=-1)
-    return u, l
-
-
-def lb_keogh(q_env: tuple[jax.Array, jax.Array], x: jax.Array) -> jax.Array:
-    """LB_Keogh(Q, x)^2 for raw candidates. u,l (Q, n); x (N, n) -> (Q, N)."""
-    u, l = q_env
-    above = jnp.maximum(x[None] - u[:, None], 0.0)
-    below = jnp.maximum(l[:, None] - x[None], 0.0)
-    d = above + below   # at most one of the two is nonzero per element
-    return jnp.sum(d * d, axis=-1)
-
-
-def dtw_band(a: jax.Array, b: jax.Array, r: int) -> jax.Array:
-    """Exact squared-DTW with band r. a (..., n) vs b (..., n), broadcast.
-
-    Anti-diagonal DP: diag k holds cells (i, j) with i+j == k; each diagonal
-    depends only on the previous two, so the whole diagonal updates in one
-    vector op. Cells outside the band are +INF.
-    """
-    a, b = jnp.broadcast_arrays(a, b)
-    n = a.shape[-1]
-    i_idx = jnp.arange(n)
-
-    def diag_cost(k):
-        # cell (i, k-i) for i in [0, n)
-        j = k - i_idx
-        valid = (j >= 0) & (j < n) & (jnp.abs(i_idx - j) <= r)
-        jc = jnp.clip(j, 0, n - 1)
-        c = (a[..., i_idx] - jnp.take(b, jc, axis=-1)) ** 2
-        return jnp.where(valid, c, INF)
-
-    # dp diagonals indexed by i (row); shifting aligns (i-1, j), (i, j-1), (i-1, j-1)
-    def shift_down(d):  # d[i] -> d[i-1]
-        return jnp.concatenate([jnp.full(d.shape[:-1] + (1,), INF), d[..., :-1]],
-                               axis=-1)
-
-    def body(carry, k):
-        prev, prev2 = carry   # diag k-1, diag k-2 (indexed by i)
-        c = diag_cost(k)
-        best = jnp.minimum(jnp.minimum(prev, shift_down(prev)),
-                           shift_down(prev2))
-        cur = c + jnp.where(k == 0, 0.0, best)
-        cur = jnp.minimum(cur, INF)   # keep +INF cells from overflowing
-        return (cur, prev), None
-
-    init_shape = a.shape[:-1] + (n,)
-    prev = jnp.full(init_shape, INF)
-    prev2 = jnp.full(init_shape, INF)
-    (last, second), _ = jax.lax.scan(body, (prev, prev2),
-                                     jnp.arange(2 * n - 1))
-    return last[..., n - 1]   # cell (n-1, n-1) lives on diag 2n-2 at i=n-1
+from repro.core.search import INF, SearchResult  # noqa: F401
 
 
 def envelope_block_lb(index: BlockIndex, u_paa: jax.Array, l_paa: jax.Array
@@ -95,91 +32,24 @@ def envelope_block_lb(index: BlockIndex, u_paa: jax.Array, l_paa: jax.Array
 
     MINDIST between the interval [l_paa, u_paa] and the block envelope
     [elo, ehi]: zero when they overlap, gap^2 otherwise — which lower-bounds
-    LB_Keogh_PAA and hence DTW. Uses the planar lb kernel twice.
+    LB_Keogh_PAA and hence DTW.
     """
-    n = index.n
-    # distance from interval [l, u] to interval [lo, hi] per segment:
-    # max(0, lo - u, l - hi); implement with the existing kernel by querying
-    # u against (lo, +S) and l against (-S, hi) and summing the pieces.
-    big = isax.SENTINEL
-    w, b = index.elo.shape
-    above = ops.lb_scan_planar(u_paa, index.elo,
-                               jnp.full((w, b), big, jnp.float32), n=n)
-    below = ops.lb_scan_planar(l_paa, jnp.full((w, b), -big, jnp.float32),
-                               index.ehi, n=n)
-    return above + below
+    return engine.interval_planar_lb(u_paa, l_paa, index.elo, index.ehi,
+                                     n=index.n)
 
 
-@functools.partial(jax.jit, static_argnames=("r", "k", "blocks_per_iter"))
 def search_dtw(index: BlockIndex, queries: jax.Array, *, r: int, k: int = 1,
                blocks_per_iter: int = 2) -> SearchResult:
     """Exact DTW k-NN using the unchanged Euclidean BlockIndex.
 
     Carries the same top-k Frontier as the Euclidean paths; pruning is
-    against the k-th best DTW distance so far (squared domain).
+    against the k-th best DTW distance so far (squared domain).  Work
+    stats keep their historical DTW meaning on every backend
+    (``DTW.finalize_stats``): every visited block costs a full panel of
+    LB_Keogh bounds AND a full panel of banded-DP distances (the DP is
+    computed for all candidates, then masked), so
+    ``series_refined == lb_series == blocks_visited * capacity``.
     """
-    q = isax.znorm(queries).astype(jnp.float32)
-    qn = q.shape[0]
-    b, c, n = index.raw.shape
-    u, l = query_envelope(q, r)
-    u_paa, l_paa = isax.paa(u, index.w), isax.paa(l, index.w)
-
-    block_lb = envelope_block_lb(index, u_paa, l_paa)          # (Q, B)
-
-    # stage A: exact DTW against the best block seeds the frontier
-    b0 = jnp.argmin(block_lb, axis=1)
-    blocks0 = index.raw[b0]                                    # (Q, C, n)
-    d0 = dtw_band(q[:, None, :], blocks0, r)                   # (Q, C)
-    front = frontier_lib.init(qn, k).insert(d0, index.ids[b0])
-
-    order = jnp.argsort(block_lb, axis=1)
-    kb = min(blocks_per_iter, b)
-
-    def next_lb(ptr):
-        nxt = jax.lax.dynamic_slice_in_dim(order, ptr, 1, axis=1)
-        return jnp.take_along_axis(block_lb, nxt, axis=1)[:, 0]
-
-    def cond(state):
-        ptr, f, _ = state
-        return jnp.logical_and(ptr < b, jnp.any(next_lb(ptr) < f.threshold()))
-
-    def body(state):
-        ptr, f, visited = state
-        thr = f.threshold()
-        idxs = jax.lax.dynamic_slice_in_dim(order, ptr, kb, axis=1)
-        lbs = jnp.take_along_axis(block_lb, idxs, axis=1)
-        active = lbs < thr[:, None]
-
-        def refine(cr):
-            f_i, visited_i = cr
-            blocks = index.raw[idxs]                           # (Q,K,C,n)
-            ids = index.ids[idxs]
-            # second-level filter: LB_Keogh on raw values (tighter than PAA)
-            above = jnp.maximum(blocks - u[:, None, None, :], 0.0)
-            below = jnp.maximum(l[:, None, None, :] - blocks, 0.0)
-            dd = above + below
-            lbk = jnp.sum(dd * dd, axis=-1)                    # (Q,K,C)
-            s_act = (lbk < thr[:, None, None]) & active[..., None] \
-                    & (ids >= 0)
-            d = dtw_band(q[:, None, None, :], blocks, r)       # (Q,K,C)
-            d = jnp.where(s_act, d, INF)
-            f_n = f_i.insert(d.reshape(qn, -1),
-                             jnp.where(s_act, ids, -1).reshape(qn, -1))
-            return (f_n,
-                    visited_i + jnp.sum(active, axis=1, dtype=jnp.int32))
-
-        f_n, visited_n = jax.lax.cond(
-            jnp.any(active), refine, lambda cr: cr, (f, visited))
-        return ptr + kb, f_n, visited_n
-
-    ptr0 = jnp.zeros((), jnp.int32)
-    visited0 = jnp.zeros((qn,), jnp.int32)
-    _, front, visited = jax.lax.while_loop(
-        cond, body, (ptr0, front, visited0))
-
-    stats = SearchStats(blocks_visited=visited,
-                        series_refined=visited * c,
-                        lb_series=visited * c,
-                        iters=jnp.zeros((), jnp.int32))
-    return SearchResult(dist=frontier_lib.result_dists(front),
-                        idx=front.ids, stats=stats)
+    plan = QueryPlan(metric=DTW(r=r), schedule="query_major", k=k,
+                     blocks_per_iter=blocks_per_iter)
+    return engine.run(index, queries, plan)

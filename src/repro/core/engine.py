@@ -1,0 +1,800 @@
+"""One query engine: metric x schedule x backend (DESIGN.md §4).
+
+ParIS/ParIS+ (on-disk) and MESSI (in-memory) are one algorithmic
+skeleton — rank candidates by a lower bound, seed a best-so-far top-k,
+refine survivors under the tightening k-th-best bound — specialized to
+where the raw data lives and how workers coordinate.  This module is
+that skeleton, written once, with each axis pluggable:
+
+  * **metric** — what "distance" and "lower bound" mean.  A ``Metric``
+    supplies query preparation, the block-envelope lower bound, the
+    per-series lower bound and the exact distance; concrete adapters:
+    ``ED`` (z-normed Euclidean, the paper's core), ``DTW(r)`` (Sakoe-
+    Chiba band, the paper's §V extension over the UNCHANGED index) and
+    ``Cosine`` (unit-norm embeddings, the paper's §V vector claim).
+  * **schedule** — the traversal order and stopping rule.
+    ``query_major`` (paper-faithful per-query priority order),
+    ``block_major`` (each block once, min-over-queries order with a
+    suffix-min stopping table) and ``flat`` (the ParIS whole-SAX-array
+    scan with chunked refinement).
+  * **backend** — where raw series live.  Device-resident indexes run
+    fully jitted (``run`` / ``run_flat``); indexes opened out-of-core
+    run the same block-major walk at the host level, every fetch and
+    speculative prefetch driven through a callback into a
+    ``storage.BlockCache`` (``run_cached``, used by
+    ``storage.SearchSession``).
+
+The public drivers (``core.search``, ``core.dtw``, ``core.vector``,
+``core.paris``, ``storage.SearchSession``) are thin wrappers that
+construct plans; the distributed two-round protocol
+(``core.distributed``) wraps ANY plan.  Every ``Metric.distances``
+call lives in this module: the two pruned refine loops
+(``panel_refine``, shared by both block-major backends, and the
+gathered refine inside ``_query_major``) are where the DESIGN.md §8
+fused LB+select kernel plugs in; stage-A seeding (``prepare`` /
+``_cached_stage_a``) and the flat chunk refine (``run_flat``) also
+call it and need the same swap to fuse end to end.
+
+Exactness: a schedule only skips work whose metric lower bound is >= the
+frontier's k-th-best distance, and every metric's bounds satisfy
+``block_lb <= series_lb <= distance``, so no true k-NN member is ever
+dismissed — for any metric, schedule, backend, or k.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import frontier as frontier_lib
+from repro.core import isax
+from repro.core.frontier import Frontier, INF, SearchStats, query_block_l2
+from repro.core.index import BlockIndex, FlatIndex, RAW_PAD
+from repro.kernels import ops
+
+_bound = frontier_lib.bound
+
+SCHEDULES = ("query_major", "block_major", "flat")
+
+
+class QueryState(NamedTuple):
+    """Metric-prepared queries: ``q`` plus metric-owned aux arrays
+    (ED/Cosine: the PAA; DTW: the Keogh envelope and its PAA)."""
+    q: jax.Array
+    aux: tuple
+
+
+# ---------------------------------------------------------------------------
+# metric adapters
+# ---------------------------------------------------------------------------
+
+def prep_vectors(v: jax.Array, unit_norm: bool = True) -> jax.Array:
+    """Embedding preparation for the Cosine metric (was core/vector.py).
+
+    Unit-normalization makes Euclidean top-k == cosine top-k; the
+    sqrt(d) rescale keeps per-dim values ~N(0,1)-sized so the iSAX
+    breakpoints (standard-normal quantiles) stay discriminative.  A
+    global scale preserves the NN ordering exactly.
+    """
+    v = v.astype(jnp.float32)
+    if unit_norm:
+        v = v / jnp.maximum(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-8)
+        v = v * jnp.sqrt(jnp.float32(v.shape[-1]))
+    return v
+
+
+def query_envelope(q: jax.Array, r: int) -> tuple[jax.Array, jax.Array]:
+    """Keogh envelope: U_i = max(q[i-r:i+r+1]), L_i = min(...). q (..., n)."""
+    n = q.shape[-1]
+    pads = [(0, 0)] * (q.ndim - 1) + [(r, r)]
+    qu = jnp.pad(q, pads, constant_values=-jnp.inf)
+    ql = jnp.pad(q, pads, constant_values=jnp.inf)
+    iu = jnp.arange(n)[:, None] + jnp.arange(2 * r + 1)[None, :]
+    u = jnp.max(qu[..., iu], axis=-1)
+    l = jnp.min(ql[..., iu], axis=-1)
+    return u, l
+
+
+def lb_keogh(q_env: tuple[jax.Array, jax.Array], x: jax.Array) -> jax.Array:
+    """LB_Keogh(Q, x)^2 for raw candidates. u,l (Q, n); x (N, n) -> (Q, N)."""
+    u, l = q_env
+    above = jnp.maximum(x[None] - u[:, None], 0.0)
+    below = jnp.maximum(l[:, None] - x[None], 0.0)
+    d = above + below   # at most one of the two is nonzero per element
+    return jnp.sum(d * d, axis=-1)
+
+
+def interval_planar_lb(u_paa: jax.Array, l_paa: jax.Array, lo: jax.Array,
+                       hi: jax.Array, *, n: int) -> jax.Array:
+    """Squared MINDIST of interval [l_paa, u_paa] to regions [lo, hi].
+
+    Per segment: max(0, lo - u, l - hi) — zero when they overlap —
+    which lower-bounds LB_Keogh_PAA and hence DTW against any series in
+    the region.  Implemented with the existing planar kernel by
+    querying u against (lo, +S) and l against (-S, hi) and summing the
+    pieces.  lo/hi (w, M): M may be blocks (envelopes) or individual
+    series (the flat schedule).
+    """
+    big = isax.SENTINEL
+    w, m = lo.shape
+    above = ops.lb_scan_planar(u_paa, lo,
+                               jnp.full((w, m), big, jnp.float32), n=n)
+    below = ops.lb_scan_planar(l_paa, jnp.full((w, m), -big, jnp.float32),
+                               hi, n=n)
+    return above + below
+
+
+def dtw_band(a: jax.Array, b: jax.Array, r: int) -> jax.Array:
+    """Exact squared-DTW with band r. a (..., n) vs b (..., n), broadcast.
+
+    Anti-diagonal DP: diag k holds cells (i, j) with i+j == k; each
+    diagonal depends only on the previous two, so the whole diagonal
+    updates in one vector op. Cells outside the band are +INF.
+    """
+    a, b = jnp.broadcast_arrays(a, b)
+    n = a.shape[-1]
+    i_idx = jnp.arange(n)
+
+    def diag_cost(k):
+        # cell (i, k-i) for i in [0, n)
+        j = k - i_idx
+        valid = (j >= 0) & (j < n) & (jnp.abs(i_idx - j) <= r)
+        jc = jnp.clip(j, 0, n - 1)
+        c = (a[..., i_idx] - jnp.take(b, jc, axis=-1)) ** 2
+        return jnp.where(valid, c, INF)
+
+    # dp diagonals indexed by i (row); shifting aligns (i-1, j), (i, j-1),
+    # (i-1, j-1)
+    def shift_down(d):  # d[i] -> d[i-1]
+        return jnp.concatenate([jnp.full(d.shape[:-1] + (1,), INF),
+                                d[..., :-1]], axis=-1)
+
+    def body(carry, k):
+        prev, prev2 = carry   # diag k-1, diag k-2 (indexed by i)
+        c = diag_cost(k)
+        best = jnp.minimum(jnp.minimum(prev, shift_down(prev)),
+                           shift_down(prev2))
+        cur = c + jnp.where(k == 0, 0.0, best)
+        cur = jnp.minimum(cur, INF)   # keep +INF cells from overflowing
+        return (cur, prev), None
+
+    init_shape = a.shape[:-1] + (n,)
+    prev = jnp.full(init_shape, INF)
+    prev2 = jnp.full(init_shape, INF)
+    (last, second), _ = jax.lax.scan(body, (prev, prev2),
+                                     jnp.arange(2 * n - 1))
+    return last[..., n - 1]   # cell (n-1, n-1) lives on diag 2n-2 at i=n-1
+
+
+@dataclasses.dataclass(frozen=True)
+class ED:
+    """Z-normalized Euclidean distance — the paper's core metric.
+
+    ``lb_filter`` toggles the per-series MINDIST filter inside a
+    surviving block (the paper's "MESSI performs fewer real distance
+    calculations" mechanism); ``normalize=False`` is the prepared-vector
+    path (queries arrive already cast/scaled).
+    """
+    normalize: bool = True
+    lb_filter: bool = True
+
+    @property
+    def filters(self) -> bool:
+        return self.lb_filter
+
+    # per-series filtering reads the stored iSAX region bounds
+    needs_bounds = True
+
+    def prep_queries(self, queries: jax.Array, *, w: int) -> QueryState:
+        q = (isax.znorm(queries) if self.normalize
+             else queries).astype(jnp.float32)
+        return QueryState(q=q, aux=(isax.paa(q, w),))
+
+    def block_lb(self, qs: QueryState, lo: jax.Array, hi: jax.Array, *,
+                 n: int) -> jax.Array:
+        """MINDIST of each query to planar (w, M) region bounds -> (Q, M).
+
+        M may be blocks (envelopes) or individual series (the flat
+        schedule) — the bound is the same formula either way.
+        """
+        return ops.lb_scan_planar(qs.aux[0], lo, hi, n=n)
+
+    def series_lb(self, qs: QueryState, block: jax.Array, lo: jax.Array,
+                  hi: jax.Array, *, n: int, w: int) -> jax.Array:
+        q_paa = qs.aux[0]
+        if lo.ndim == 2:                                   # panel (w, C)
+            qe = q_paa[:, :, None]                         # (Q, w, 1)
+            dd = jnp.maximum(jnp.maximum(lo[None] - qe, qe - hi[None]), 0.0)
+            return (n / w) * jnp.sum(dd * dd, axis=1)      # (Q, C)
+        qe = q_paa[:, None, :, None]                       # gathered (Q,1,w,1)
+        dd = jnp.maximum(jnp.maximum(lo - qe, qe - hi), 0.0)
+        return (n / w) * jnp.sum(dd * dd, axis=2)          # (Q, K, C)
+
+    def distances(self, qs: QueryState, block: jax.Array) -> jax.Array:
+        if block.ndim == 2:            # shared (C, n) panel: one MXU pass
+            return ops.batch_l2(qs.q, block)
+        return query_block_l2(qs.q, block)   # per-query gather (Q, ..., C, n)
+
+    def finalize_stats(self, stats: SearchStats, capacity: int
+                       ) -> SearchStats:
+        """Counter semantics are already right for ED: ``series_refined``
+        counts filter survivors (the panel is masked before insert)."""
+        return stats
+
+
+@dataclasses.dataclass(frozen=True)
+class Cosine(ED):
+    """Cosine similarity over embeddings, served as Euclidean top-k.
+
+    ``prep_vectors`` maps both corpus (at build) and queries (here) onto
+    the sqrt(d)-scaled unit sphere, where d^2 = dim * (2 - 2 cos) is
+    monotone in cosine — so the exact ED frontier IS the exact cosine
+    top-k, descending (``vector.cosine_scores`` inverts the map).
+    """
+    normalize: bool = False     # never z-norm embeddings
+    unit_norm: bool = True
+
+    def prep_queries(self, queries: jax.Array, *, w: int) -> QueryState:
+        q = prep_vectors(queries, self.unit_norm)
+        return QueryState(q=q, aux=(isax.paa(q, w),))
+
+
+@dataclasses.dataclass(frozen=True)
+class DTW:
+    """Sakoe-Chiba-band DTW over the UNCHANGED Euclidean index (paper §V).
+
+    The block lower bound widens the query to its Keogh envelope and
+    takes the interval-to-region MINDIST, which lower-bounds
+    LB_Keogh_PAA and hence DTW — no-false-dismissal carries over.  The
+    per-series filter is LB_Keogh on the raw values (tighter than PAA);
+    it reads the fetched block itself, so it needs no stored bounds.
+    """
+    r: int
+
+    filters = True
+    needs_bounds = False
+
+    def prep_queries(self, queries: jax.Array, *, w: int) -> QueryState:
+        q = isax.znorm(queries).astype(jnp.float32)
+        u, l = query_envelope(q, self.r)
+        return QueryState(q=q, aux=(u, l, isax.paa(u, w), isax.paa(l, w)))
+
+    def block_lb(self, qs: QueryState, lo: jax.Array, hi: jax.Array, *,
+                 n: int) -> jax.Array:
+        """Interval [l_paa, u_paa] to region [lo, hi] MINDIST -> (Q, M)."""
+        return interval_planar_lb(qs.aux[2], qs.aux[3], lo, hi, n=n)
+
+    def series_lb(self, qs: QueryState, block: jax.Array, lo, hi, *,
+                  n: int, w: int) -> jax.Array:
+        u, l = qs.aux[0], qs.aux[1]
+        if block.ndim == 2:                               # panel (C, n)
+            return lb_keogh((u, l), block)                # (Q, C)
+        above = jnp.maximum(block - u[:, None, None, :], 0.0)
+        below = jnp.maximum(l[:, None, None, :] - block, 0.0)
+        dd = above + below
+        return jnp.sum(dd * dd, axis=-1)                  # (Q, K, C)
+
+    def distances(self, qs: QueryState, block: jax.Array) -> jax.Array:
+        if block.ndim <= 3:            # (C, n) panel or (Q, C, n) stage A
+            return dtw_band(qs.q[:, None, :], block, self.r)
+        return dtw_band(qs.q[:, None, None, :], block, self.r)  # (Q,K,C,n)
+
+    def finalize_stats(self, stats: SearchStats, capacity: int
+                       ) -> SearchStats:
+        """DTW's historical convention, now uniform across backends:
+        every visited block costs a full panel of LB_Keogh bounds AND a
+        full panel of banded-DP distances (the DP runs for all
+        candidates, then masks), so ``series_refined == lb_series ==
+        blocks_visited * capacity`` — the filter-survivor count the
+        generic refine accumulated would claim pruning savings the DP
+        never realizes."""
+        v = stats.blocks_visited
+        return SearchStats(blocks_visited=v, series_refined=v * capacity,
+                           lb_series=v * capacity,
+                           iters=jnp.zeros((), jnp.int32))
+
+
+# ---------------------------------------------------------------------------
+# plans
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class QueryPlan:
+    """One cell of the metric x schedule matrix, plus its tuning knobs.
+
+    Hashable (static under jit): the pruning-threshold seed — a traced
+    (Q,) array in the distributed protocol — is an argument of
+    ``run``/``run_flat``/``run_cached``, never part of the plan.  The
+    backend axis is picked by which runner the plan is handed to.
+    """
+    metric: object = ED()
+    schedule: str = "block_major"
+    k: int = 1
+    blocks_per_iter: int = 4        # query_major refine width
+    deadline_blocks: int | None = None   # anytime cap; None = exact
+    chunk: int = 4096               # flat-schedule refinement chunk
+
+    def __post_init__(self):
+        if self.schedule not in SCHEDULES:
+            raise ValueError(f"schedule must be one of {SCHEDULES}, "
+                             f"got {self.schedule!r}")
+
+
+def _require_device_resident(index: BlockIndex) -> None:
+    if not index.device_resident:
+        raise ValueError(
+            "index raw series are not device-resident (opened out-of-core "
+            "via storage.open_index); use engine.run_cached through a "
+            "storage.SearchSession (or storage.ooc_search), or "
+            "storage.load_index for the in-memory backends")
+
+
+def prepare(metric, index: BlockIndex, queries: jax.Array, k: int
+            ) -> tuple[QueryState, Frontier, jax.Array, SearchStats]:
+    """Metric prep + block ranking + stage-A seeding (device backend).
+
+    The paper's approximate phase, metric-generic: one block-LB kernel
+    pass ranks every envelope, then each query's best block is refined
+    exactly and seeds the top-k frontier.
+    """
+    _require_device_resident(index)
+    qs = metric.prep_queries(queries, w=index.w)
+    qn = qs.q.shape[0]
+    block_lb = metric.block_lb(qs, index.elo, index.ehi, n=index.n)
+    b0 = jnp.argmin(block_lb, axis=1)                         # (Q,)
+    d0 = metric.distances(qs, index.raw[b0])                  # (Q, C)
+    front = frontier_lib.init(qn, k).insert(d0, index.ids[b0])
+    return qs, front, block_lb, frontier_lib.stats_init(qn)
+
+
+def panel_refine(metric, qs: QueryState, front: Frontier, stats: SearchStats,
+                 block: jax.Array, ids_b: jax.Array,
+                 lo: jax.Array | None, hi: jax.Array | None,
+                 active: jax.Array, thr: jax.Array, *,
+                 n: int, w: int) -> tuple[Frontier, SearchStats]:
+    """Refine one (C, n) raw block panel against every query at once.
+
+    The per-block unit of work shared by the block-major schedule on
+    both backends (device while_loop and the cached host walk): optional
+    per-series lower-bound filtering, one (Q, C) distance panel, one
+    frontier insert, and the work-stat updates.  ``active`` (Q,) masks
+    queries whose block lower bound beat ``thr``; ``lo``/``hi`` are the
+    block's (w, C) per-series bounds (None when the metric filters off
+    the raw values, or not at all).
+    """
+    qn, c = qs.q.shape[0], block.shape[0]
+    if metric.filters:
+        s_lb = metric.series_lb(qs, block, lo, hi, n=n, w=w)   # (Q, C)
+        s_act = (s_lb < thr[:, None]) & active[:, None]
+    else:
+        s_act = jnp.broadcast_to(active[:, None], (qn, c))
+    d = metric.distances(qs, block)                            # (Q, C)
+    live = s_act & (ids_b >= 0)[None, :]
+    d = jnp.where(live, d, INF)
+    front = front.insert(d, jnp.where(live, ids_b[None, :], -1))
+    stats = SearchStats(
+        blocks_visited=stats.blocks_visited + active.astype(jnp.int32),
+        series_refined=stats.series_refined
+        + jnp.sum(live, axis=1, dtype=jnp.int32),
+        lb_series=stats.lb_series
+        + (active.astype(jnp.int32) * c if metric.filters else 0),
+        iters=stats.iters,
+    )
+    return front, stats
+
+
+# ---------------------------------------------------------------------------
+# device backend: the two ordered schedules + the flat scan
+# ---------------------------------------------------------------------------
+
+def _query_major(metric, index: BlockIndex, qs: QueryState, front: Frontier,
+                 block_lb: jax.Array, stats0: SearchStats, *,
+                 blocks_per_iter: int, deadline_blocks: int | None,
+                 initial_threshold) -> tuple[Frontier, SearchStats]:
+    """Paper-faithful order: each query refines ITS next-best blocks.
+
+    Per-query LB-argsorted schedule + lax.while_loop refining the next
+    ``blocks_per_iter`` blocks per trip; exits when every query's next
+    block LB >= its pruning bound.  Ordered traversal + that stopping
+    rule ARE the paper's priority-queue semantics; the heap itself is an
+    artifact of MIMD threads.
+    """
+    b, c, n = index.raw.shape
+    qn = qs.q.shape[0]
+    kb = min(blocks_per_iter, b)
+
+    order = jnp.argsort(block_lb, axis=1)                     # (Q, B)
+    max_ptr = b if deadline_blocks is None else min(b, deadline_blocks)
+
+    def next_lb(ptr):
+        # Invariant: ``cond`` evaluates this even when ptr >= max_ptr —
+        # jnp.logical_and does not short-circuit — so after the final body
+        # trip ptr can reach up to b + kb - 1.  The clamp keeps the slice
+        # start in-bounds explicitly (the clamped value is discarded:
+        # ptr < max_ptr is already False) instead of leaning on
+        # dynamic_slice's implicit start clamping.
+        safe = jnp.minimum(ptr, b - 1)
+        nxt = jax.lax.dynamic_slice_in_dim(order, safe, 1, axis=1)  # (Q,1)
+        return jnp.take_along_axis(block_lb, nxt, axis=1)[:, 0]     # (Q,)
+
+    def cond(state):
+        ptr, f, _ = state
+        return jnp.logical_and(ptr < max_ptr,
+                               jnp.any(next_lb(ptr)
+                                       < _bound(f, initial_threshold)))
+
+    def body(state):
+        ptr, f, st = state
+        thr = _bound(f, initial_threshold)
+        idxs = jax.lax.dynamic_slice_in_dim(order, ptr, kb, axis=1)  # (Q,K)
+        lbs = jnp.take_along_axis(block_lb, idxs, axis=1)            # (Q,K)
+        active = lbs < thr[:, None]                                  # (Q,K)
+
+        def refine(carry):
+            f_i, st_i = carry
+            blocks = index.raw[idxs]                                # (Q,K,C,n)
+            ids = index.ids[idxs]                                   # (Q,K,C)
+            if metric.filters:
+                lo = index.slo[idxs] if metric.needs_bounds else None
+                hi = index.shi[idxs] if metric.needs_bounds else None
+                s_lb = metric.series_lb(qs, blocks, lo, hi,
+                                        n=n, w=index.w)             # (Q,K,C)
+                s_act = (s_lb < thr[:, None, None]) & active[..., None]
+            else:
+                s_act = jnp.broadcast_to(active[..., None], ids.shape)
+            d = metric.distances(qs, blocks)                        # (Q,K,C)
+            live = s_act & (ids >= 0)
+            d = jnp.where(live, d, INF)
+            f_n = f_i.insert(d.reshape(qn, -1),
+                             jnp.where(live, ids, -1).reshape(qn, -1))
+            st_n = SearchStats(
+                blocks_visited=st_i.blocks_visited
+                + jnp.sum(active, axis=1, dtype=jnp.int32),
+                series_refined=st_i.series_refined
+                + jnp.sum(live, axis=(1, 2), dtype=jnp.int32),
+                lb_series=st_i.lb_series
+                + (jnp.sum(active, axis=1, dtype=jnp.int32) * c
+                   if metric.filters else 0),
+                iters=st_i.iters,
+            )
+            return f_n, st_n
+
+        f_n, st_n = jax.lax.cond(
+            jnp.any(active), refine, lambda cr: cr, (f, st))
+        st_n = st_n._replace(iters=st_n.iters + 1)
+        return ptr + kb, f_n, st_n
+
+    ptr0 = jnp.zeros((), jnp.int32)
+    _, front, stats = jax.lax.while_loop(cond, body, (ptr0, front, stats0))
+    return front, stats
+
+
+def block_major_schedule(block_lb, xp=jnp):
+    """Shared block-major schedule: visit order + suffix-min stop table.
+
+    Blocks ascend by min-over-queries lower bound; the suffix min over
+    the scheduled LB matrix gives the exact stopping rule (when
+    suffix[ptr, q] >= threshold[q] nothing later can improve q's top-k).
+    ``xp`` is jnp on the device backend, np on the cached host walk —
+    one definition of the schedule for both.
+    """
+    if xp is jnp:
+        order = xp.argsort(xp.min(block_lb, axis=0))          # (B,)
+        sched_lb = block_lb[:, order]                         # (Q, B)
+        suffix = jax.lax.cummin(sched_lb[:, ::-1], axis=1)[:, ::-1]
+    else:
+        order = np.argsort(block_lb.min(axis=0), kind="stable")
+        sched_lb = block_lb[:, order]
+        suffix = np.minimum.accumulate(sched_lb[:, ::-1], axis=1)[:, ::-1]
+    return order, sched_lb, suffix
+
+
+def _block_major(metric, index: BlockIndex, qs: QueryState, front: Frontier,
+                 block_lb: jax.Array, stats0: SearchStats, *,
+                 deadline_blocks: int | None, initial_threshold
+                 ) -> tuple[Frontier, SearchStats]:
+    """Beyond-paper batched order: every block visited at most once.
+
+    Each visit is one contiguous ``dynamic_slice`` (no gather) plus one
+    (Q, C) panel against all still-active queries; the suffix-min table
+    supplies the same no-false-dismissal stopping rule (see EXPERIMENTS.md
+    §Perf for why this wins on batch hardware).
+    """
+    b, c, n = index.raw.shape
+
+    order, _, suffix = block_major_schedule(block_lb)
+    max_ptr = b if deadline_blocks is None else min(b, deadline_blocks)
+
+    def cond(state):
+        ptr, f, _ = state
+        # same invariant as ``next_lb`` in the query-major schedule:
+        # logical_and does not short-circuit, so this slice is evaluated
+        # at ptr == max_ptr after the final trip — clamp explicitly (the
+        # value is discarded)
+        safe = jnp.minimum(ptr, b - 1)
+        live = jax.lax.dynamic_slice_in_dim(suffix, safe, 1, axis=1)[:, 0]
+        return jnp.logical_and(ptr < max_ptr,
+                               jnp.any(live < _bound(f, initial_threshold)))
+
+    def body(state):
+        ptr, f, st = state
+        thr = _bound(f, initial_threshold)
+        b_id = order[ptr]
+        lbs = jax.lax.dynamic_slice_in_dim(block_lb, b_id, 1, axis=1)[:, 0]
+        active = lbs < thr                                    # (Q,)
+
+        def refine(cr):
+            f_i, st_i = cr
+            block = jax.lax.dynamic_index_in_dim(index.raw, b_id, 0,
+                                                 keepdims=False)   # (C, n)
+            ids_b = jax.lax.dynamic_index_in_dim(index.ids, b_id, 0,
+                                                 keepdims=False)   # (C,)
+            lo = hi = None
+            if metric.filters and metric.needs_bounds:
+                lo = jax.lax.dynamic_index_in_dim(index.slo, b_id, 0,
+                                                  keepdims=False)  # (w, C)
+                hi = jax.lax.dynamic_index_in_dim(index.shi, b_id, 0,
+                                                  keepdims=False)
+            return panel_refine(metric, qs, f_i, st_i, block, ids_b, lo, hi,
+                                active, thr, n=n, w=index.w)
+
+        f_n, st_n = jax.lax.cond(
+            jnp.any(active), refine, lambda cr: cr, (f, st))
+        st_n = st_n._replace(iters=st_n.iters + 1)
+        return ptr + 1, f_n, st_n
+
+    ptr0 = jnp.zeros((), jnp.int32)
+    _, front, stats = jax.lax.while_loop(cond, body, (ptr0, front, stats0))
+    return front, stats
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def run(index: BlockIndex, queries: jax.Array, plan: QueryPlan,
+        initial_threshold: jax.Array | None = None):
+    """Execute a plan against a device-resident index. -> SearchResult.
+
+    ``initial_threshold`` tightens the pruning bound (squared distance)
+    — the distributed protocol passes the globally-reduced k-th-best
+    here (the paper's shared-BSF variable); it never appears in the
+    result, which always holds this index's own top-k.
+    """
+    from repro.core.search import SearchResult   # thin wrapper layer
+    if plan.schedule == "flat":
+        raise ValueError("the flat schedule scans a FlatIndex — use "
+                         "engine.run_flat (or paris.search_flat)")
+    qs, front, block_lb, stats0 = prepare(plan.metric, index, queries, plan.k)
+    if plan.schedule == "query_major":
+        front, stats = _query_major(
+            plan.metric, index, qs, front, block_lb, stats0,
+            blocks_per_iter=plan.blocks_per_iter,
+            deadline_blocks=plan.deadline_blocks,
+            initial_threshold=initial_threshold)
+    else:
+        front, stats = _block_major(
+            plan.metric, index, qs, front, block_lb, stats0,
+            deadline_blocks=plan.deadline_blocks,
+            initial_threshold=initial_threshold)
+    stats = plan.metric.finalize_stats(stats, index.capacity)
+    return SearchResult(dist=frontier_lib.result_dists(front),
+                        idx=front.ids, stats=stats)
+
+
+@functools.partial(jax.jit, static_argnames=("plan",))
+def run_flat(index: FlatIndex, queries: jax.Array, plan: QueryPlan,
+             block_index: BlockIndex | None = None,
+             initial_threshold: jax.Array | None = None):
+    """The ParIS schedule: one planar LB pass over EVERY series, then
+    chunked candidate refinement with the running frontier.
+
+    ``block_index`` (optional) enables stage-A seeding from the block
+    view; without it the scan starts from an empty frontier (the first
+    chunk is then refined in full, which seeds it).  Metric-generic: the
+    per-series planar bound is the same ``Metric.block_lb`` formula
+    evaluated on per-series (not per-block) region bounds.
+    """
+    from repro.core.search import SearchResult
+    metric = plan.metric
+    npad, n = index.raw.shape
+    if block_index is not None:
+        qs, front, _, _ = prepare(metric, block_index, queries, plan.k)
+    else:
+        qs = metric.prep_queries(queries, w=index.w)
+        front = frontier_lib.init(qs.q.shape[0], plan.k)
+    q = qs.q
+    qn = q.shape[0]
+    c = min(plan.chunk, npad)
+    pad = (-npad) % c
+
+    lo, hi, raw, ids = index.lo, index.hi, index.raw, index.ids
+    if pad:
+        lo = jnp.concatenate([lo, jnp.full((index.w, pad), isax.SENTINEL)], 1)
+        hi = jnp.concatenate([hi, jnp.full((index.w, pad), isax.SENTINEL)], 1)
+        raw = jnp.concatenate(
+            [raw, jnp.full((pad, n), RAW_PAD, jnp.float32)], 0)
+        ids = jnp.concatenate([ids, jnp.full((pad,), -1, jnp.int32)], 0)
+
+    # phase 2 — the flat LB scan over the ENTIRE SAX array (one kernel pass)
+    lb = metric.block_lb(qs, lo, hi, n=n)                     # (Q, Np+pad)
+
+    # phase 3 — chunked candidate refinement with the running frontier
+    nchunks = raw.shape[0] // c
+    raw_c = raw.reshape(nchunks, c, n)
+    ids_c = ids.reshape(nchunks, c)
+    lb_c = lb.reshape(qn, nchunks, c)
+
+    def step(carry, inp):
+        front, refined = carry
+        raw_k, ids_k, lb_k = inp                              # (C,n),(C,),(Q,C)
+        thr = _bound(front, initial_threshold)
+        act = (lb_k < thr[:, None]) & (ids_k[None, :] >= 0)
+
+        def refine(cr):
+            front_j, refined_j = cr
+            d = metric.distances(qs, raw_k)                   # (Q, C)
+            d = jnp.where(act, d, INF)
+            front_n = front_j.insert(d, jnp.where(act, ids_k[None, :], -1))
+            return (front_n,
+                    refined_j + jnp.sum(act, axis=1, dtype=jnp.int32))
+
+        carry = jax.lax.cond(jnp.any(act), refine, lambda cr: cr,
+                             (front, refined))
+        return carry, None
+
+    (front, refined), _ = jax.lax.scan(
+        step, (front, jnp.zeros((qn,), jnp.int32)),
+        (raw_c, ids_c, jnp.moveaxis(lb_c, 1, 0)))
+
+    stats = SearchStats(
+        blocks_visited=jnp.full((qn,), nchunks, jnp.int32),
+        series_refined=refined,
+        lb_series=jnp.full((qn,), index.n_real, jnp.int32),   # whole array
+        iters=jnp.asarray(nchunks, jnp.int32),
+    )
+    return SearchResult(dist=frontier_lib.result_dists(front),
+                        idx=front.ids, stats=stats)
+
+
+# ---------------------------------------------------------------------------
+# cached backend: the same block-major walk, host-driven through callbacks
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("metric", "n", "w"))
+def _cached_refine_step(metric, qs, front, stats, block, ids_b, lo, hi, lbs,
+                        initial_threshold, *, n: int, w: int):
+    """One fetched block against all queries — the device side of the walk."""
+    thr = _bound(front, initial_threshold)
+    active = lbs < thr
+    return panel_refine(metric, qs, front, stats, block, ids_b, lo, hi,
+                        active, thr, n=n, w=w)
+
+
+def cached_setup(index: BlockIndex, queries: jax.Array, plan: QueryPlan
+                 ) -> tuple[QueryState, Frontier, jax.Array, SearchStats]:
+    """Query prep + block ranking for an index whose raw lives off-device.
+
+    Only summaries/envelopes are touched (they are device-resident on an
+    opened index); the frontier starts EMPTY — stage A needs raw blocks,
+    which the walk fetches through its callback.
+    """
+    metric = plan.metric
+    qs = metric.prep_queries(queries, w=index.w)
+    qn = qs.q.shape[0]
+    block_lb = metric.block_lb(qs, index.elo, index.ehi, n=index.n)
+    return (qs, frontier_lib.init(qn, plan.k), block_lb,
+            frontier_lib.stats_init(qn))
+
+
+def _cached_stage_a(index, plan, qs, front, stats, block_lb, block_lb_h,
+                    fetch, speculate, initial_threshold):
+    """Stage A on the cached backend: each query's best-envelope block
+    seeds the frontier, pipelined one block ahead so reads overlap the
+    refines.  Returns the refined block ids alongside the new state."""
+    step = functools.partial(_cached_refine_step, plan.metric,
+                             n=index.n, w=index.w)
+    needs = plan.metric.filters and plan.metric.needs_bounds
+    stage_a = [int(b) for b in np.unique(np.argmin(block_lb_h, axis=1))]
+    done: set[int] = set()
+    if stage_a:
+        speculate(stage_a[0])
+    for i, b in enumerate(stage_a):
+        if i + 1 < len(stage_a):
+            speculate(stage_a[i + 1])
+        lo = index.slo[b] if needs else None
+        hi = index.shi[b] if needs else None
+        front, stats = step(qs, front, stats, fetch(b), index.ids[b],
+                            lo, hi, block_lb[:, b], initial_threshold)
+        done.add(b)
+    return front, stats, done
+
+
+def run_cached(index: BlockIndex, queries: jax.Array, plan: QueryPlan, *,
+               fetch: Callable[[int], jax.Array],
+               speculate: Callable[[int], None] = lambda b: None,
+               initial_threshold: jax.Array | None = None
+               ) -> tuple[Frontier, SearchStats]:
+    """The §5 host-level walk: the block-major schedule driven through a
+    fetch callback (``storage.BlockCache`` in production).
+
+    Same schedule, same stopping rule, same ``panel_refine`` as the
+    device block-major backend — only the block transport differs:
+    ``fetch(b)`` must return the (C, n) device block (blocking only if a
+    disk read is needed), ``speculate(b)`` starts a background read.
+    The one-block-ahead speculation is threshold-speculative: the bound
+    only tightens, so it can waste bytes but never wrongly refine.
+    Returns the local frontier and stats; I/O accounting belongs to the
+    callback owner (the session).
+    """
+    if plan.schedule != "block_major":
+        raise ValueError("the cached backend walks the block-major "
+                         f"schedule; got {plan.schedule!r}")
+    if plan.deadline_blocks is not None:
+        raise ValueError("deadline_blocks is not implemented on the cached "
+                         "backend (ROADMAP: anytime semantics for cached "
+                         "plans); drop it from the plan or use the "
+                         "device-resident backend")
+    qs, front, block_lb, stats = cached_setup(index, queries, plan)
+    block_lb_h = np.asarray(block_lb)
+    n_blocks = index.n_blocks
+    step = functools.partial(_cached_refine_step, plan.metric,
+                             n=index.n, w=index.w)
+    needs = plan.metric.filters and plan.metric.needs_bounds
+
+    front, stats, done = _cached_stage_a(
+        index, plan, qs, front, stats, block_lb, block_lb_h,
+        fetch, speculate, initial_threshold)
+
+    # -- block-major walk over the surviving schedule -----------------
+    order, sched_lb, suffix = block_major_schedule(block_lb_h, xp=np)
+
+    def pending(ptr: int) -> bool:
+        """Block at schedule slot ptr still needs a refine under thr_h."""
+        return int(order[ptr]) not in done \
+            and bool(np.any(sched_lb[:, ptr] < thr_h))
+
+    thr_h = np.asarray(_bound(front, initial_threshold))              # sync
+    ptr = 0
+    while ptr < n_blocks:
+        if np.all(suffix[:, ptr] >= thr_h):
+            break                       # nothing later helps any query
+        if not pending(ptr):
+            ptr += 1
+            continue                    # pruned (or stage-A-refined)
+        b_id = int(order[ptr])
+        lo = index.slo[b_id] if needs else None
+        hi = index.shi[b_id] if needs else None
+        front, stats = step(qs, front, stats, fetch(b_id), index.ids[b_id],
+                            lo, hi, block_lb[:, b_id],
+                            initial_threshold)                        # async
+        nxt = ptr + 1                   # next survivor under current thr
+        while nxt < n_blocks and not pending(nxt):
+            nxt += 1
+        if nxt < n_blocks and not np.all(suffix[:, nxt] >= thr_h):
+            # threshold-speculative: read overlaps the refine above; if
+            # the slot is pruned before its turn the block just stays
+            # in the cache under its id for a later query/batch
+            speculate(int(order[nxt]))
+        thr_h = np.asarray(_bound(front, initial_threshold))  # one sync/block
+        # blocks in (ptr, nxt) were pruned under a bound that only
+        # tightened since — safe to jump straight to the prefetch target
+        ptr = nxt
+    return front, plan.metric.finalize_stats(stats, index.capacity)
+
+
+def run_cached_stage_a(index: BlockIndex, queries: jax.Array,
+                       plan: QueryPlan, *,
+                       fetch: Callable[[int], jax.Array],
+                       speculate: Callable[[int], None] = lambda b: None
+                       ) -> Frontier:
+    """Stage A only, on the cached backend: the approximate top-k after
+    refining each query's best-envelope block.  The distributed
+    out-of-core protocol min-reduces its ``threshold()`` across shards
+    (round 1) before every shard pays for the full walk."""
+    qs, front, block_lb, stats = cached_setup(index, queries, plan)
+    front, _, _ = _cached_stage_a(
+        index, plan, qs, front, stats, block_lb, np.asarray(block_lb),
+        fetch, speculate, None)
+    return front

@@ -97,7 +97,7 @@ class BlockIndex:
     n_real: int      # number of non-padding series
     # Out-of-core hook: set by storage.open_index, which leaves ``raw`` as a
     # zero-width (B, 0, n) placeholder and keeps the real blocks on disk.
-    # The device search paths refuse such an index (frontier.prepare);
+    # The device search paths refuse such an index (engine/frontier prepare);
     # storage.ooc_search streams blocks through HostRawBlocks.fetch instead.
     host_raw: HostRawBlocks | None = None
 

@@ -6,95 +6,38 @@ dataset (stored in the SAX array), and prune ... the series that are not
 pruned are stored in a candidate list, which real distance calculation
 workers consume in parallel".
 
-TPU adaptation: the LB scan over the whole array is one Pallas kernel pass
-(the most SIMD-friendly phase of the paper — it is why ParIS exists).  The
-candidate list becomes a chunked lax.scan with a conditional refine per chunk
-(a chunk with no survivors is skipped wholesale), carrying the running top-k
-Frontier — the analogue of the workers' shared k-NN BSF updates; pruning is
-against the frontier's k-th-best distance (DESIGN.md §4a).  No ordering, no
-envelopes: the structural contrast with MESSI (search.py) is exactly the
-paper's.
+TPU adaptation (the ``flat`` schedule of core/engine.py): the LB scan over
+the whole array is one Pallas kernel pass (the most SIMD-friendly phase of
+the paper — it is why ParIS exists).  The candidate list becomes a chunked
+lax.scan with a conditional refine per chunk (a chunk with no survivors is
+skipped wholesale), carrying the running top-k Frontier — the analogue of
+the workers' shared k-NN BSF updates; pruning is against the frontier's
+k-th-best distance (DESIGN.md §4a).  No ordering, no envelopes: the
+structural contrast with MESSI (search.py) is exactly the paper's.
 """
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
 
-from repro.core import frontier as frontier_lib
-from repro.core import isax
-from repro.core.frontier import INF
+from repro.core import engine
+from repro.core.engine import ED, QueryPlan
 from repro.core.index import BlockIndex, FlatIndex, flat_view
-from repro.core.search import SearchResult, SearchStats
-from repro.kernels import ops
+from repro.core.search import SearchResult
 
 
-@functools.partial(jax.jit, static_argnames=("k", "chunk"))
 def search_flat(index: FlatIndex, queries: jax.Array, *, k: int = 1,
                 block_index: BlockIndex | None = None,
                 initial_threshold: jax.Array | None = None,
                 chunk: int = 4096) -> SearchResult:
-    """Exact k-NN via the ParIS algorithm. queries (Q, n)."""
-    setup = frontier_lib.prepare(queries, k, index=block_index, w=index.w)
-    q, q_paa = setup.q, setup.q_paa
-    npad, n = index.raw.shape
-    qn = q.shape[0]
-    c = min(chunk, npad)
-    pad = (-npad) % c
+    """Exact k-NN via the ParIS algorithm. queries (Q, n).
 
-    lo, hi, raw, ids = index.lo, index.hi, index.raw, index.ids
-    if pad:
-        lo = jnp.concatenate([lo, jnp.full((index.w, pad), isax.SENTINEL)], 1)
-        hi = jnp.concatenate([hi, jnp.full((index.w, pad), isax.SENTINEL)], 1)
-        raw = jnp.concatenate(
-            [raw, jnp.full((pad, n), 1.0e4, jnp.float32)], 0)
-        ids = jnp.concatenate([ids, jnp.full((pad,), -1, jnp.int32)], 0)
-
-    # Phase 1 — approximate top-k frontier.  The paper seeds from the best
-    # leaf; prepare() ran the same stage-A routine as MESSI when a block
-    # index is available, else the scan starts from an empty frontier (the
-    # first chunk is then refined in full, which seeds it).
-
-    # Phase 2 — the flat LB scan over the ENTIRE SAX array (one kernel pass).
-    lb = ops.lb_scan_planar(q_paa, lo, hi, n=n)               # (Q, Np+pad)
-
-    # Phase 3 — chunked candidate refinement with the running frontier.
-    nchunks = raw.shape[0] // c
-    raw_c = raw.reshape(nchunks, c, n)
-    ids_c = ids.reshape(nchunks, c)
-    lb_c = lb.reshape(qn, nchunks, c)
-
-    def step(carry, inp):
-        front, refined = carry
-        raw_k, ids_k, lb_k = inp                              # (C,n),(C,),(Q,C)
-        thr = frontier_lib.bound(front, initial_threshold)
-        act = (lb_k < thr[:, None]) & (ids_k[None, :] >= 0)
-
-        def refine(cr):
-            front_j, refined_j = cr
-            d = ops.batch_l2(q, raw_k)                        # (Q, C)
-            d = jnp.where(act, d, INF)
-            front_n = front_j.insert(d, jnp.where(act, ids_k[None, :], -1))
-            return (front_n,
-                    refined_j + jnp.sum(act, axis=1, dtype=jnp.int32))
-
-        carry = jax.lax.cond(jnp.any(act), refine, lambda cr: cr,
-                             (front, refined))
-        return carry, None
-
-    (front, refined), _ = jax.lax.scan(
-        step, (setup.frontier, jnp.zeros((qn,), jnp.int32)),
-        (raw_c, ids_c, jnp.moveaxis(lb_c, 1, 0)))
-
-    stats = SearchStats(
-        blocks_visited=jnp.full((qn,), nchunks, jnp.int32),
-        series_refined=refined,
-        lb_series=jnp.full((qn,), index.n_real, jnp.int32),   # whole array
-        iters=jnp.asarray(nchunks, jnp.int32),
-    )
-    return SearchResult(dist=frontier_lib.result_dists(front),
-                        idx=front.ids, stats=stats)
+    ``block_index`` (optional) enables the paper's approximate phase:
+    stage-A seeding from the best-envelope block; without it the scan
+    starts from an empty frontier.
+    """
+    plan = QueryPlan(metric=ED(), schedule="flat", k=k, chunk=chunk)
+    return engine.run_flat(index, queries, plan, block_index,
+                           initial_threshold)
 
 
 def search_paris(index: BlockIndex, queries: jax.Array, *, k: int = 1,

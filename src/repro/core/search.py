@@ -1,45 +1,43 @@
-"""MESSI-style exact k-NN query answering, vectorized for TPU (DESIGN.md §4).
+"""MESSI-style exact k-NN query answering (DESIGN.md §4).
 
-Paper mapping:
-  Stage A  "search the tree for the query's leaf, compute real distances in
-           it, store the minimum in BSF"            -> best-envelope block
-           argmin + one batched L2 against it (frontier.approximate).
-  Stage C  "surviving leaves go into priority queues ordered by lower bound;
-           workers pop, stop a queue when its head's LB >= BSF"
-                                                    -> per-query LB-argsorted
-           block schedule + lax.while_loop that refines the next K blocks per
-           iteration and exits when every query's next block LB >= its
-           pruning bound.  Ordered traversal + that stopping rule ARE the
-           priority-queue semantics; the heap itself is an artifact of MIMD
-           threads.
-  k-NN BSF "the BSF array holds the k best-so-far answers; pruning uses the
-           k-th best distance"                      -> the shared top-k
-           Frontier (core/frontier.py); the pruning bound is
-           ``frontier.threshold()`` = the k-th best distance, so skipping
-           only blocks/series with LB >= threshold can never discard a true
-           k-NN member (no false dismissals, any k).
-  per-series lower-bound filtering inside a leaf     -> lb_filter=True masks
-           refinement to series whose own MINDIST < threshold (the stats
-           expose the paper's "MESSI performs fewer real distance
-           calculations" claim).
+Both schedules now live in `core/engine.py` — this module is the
+Euclidean face of the engine, kept as the stable public API.  Paper
+mapping (details in the engine docstrings):
+
+  Stage A  "search the tree for the query's leaf, compute real distances
+           in it, store the minimum in BSF"       -> `engine.prepare`
+           (best-envelope block argmin + one batched L2 against it).
+  Stage C  "surviving leaves go into priority queues ordered by lower
+           bound; workers pop, stop a queue when its head's LB >= BSF"
+                                                  -> the `query_major`
+           schedule (per-query LB-argsorted blocks + lax.while_loop);
+           `block_major` is the beyond-paper batched order (each block
+           once, suffix-min stopping table — see EXPERIMENTS.md §Perf).
+  k-NN BSF "the BSF array holds the k best-so-far answers; pruning uses
+           the k-th best distance"                -> the shared top-k
+           Frontier (core/frontier.py): pruning against
+           ``frontier.threshold()`` can never discard a true k-NN
+           member (no false dismissals, any k).
+  per-series lower-bound filtering inside a leaf  -> ED(lb_filter=True)
+           masks refinement to series whose own MINDIST < threshold
+           (the stats expose the paper's "MESSI performs fewer real
+           distance calculations" claim).
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple
 
 import jax
-import jax.numpy as jnp
 
-from repro.core import frontier as frontier_lib
-from repro.core.frontier import Frontier, INF, SearchStats, query_block_l2
+from repro.core import engine
+from repro.core.engine import ED, QueryPlan
+from repro.core.frontier import Frontier, INF, SearchStats  # re-exported
 from repro.core.index import BlockIndex
-from repro.kernels import ops
 
 
 class SearchResult(NamedTuple):
-    dist: jax.Array              # (Q, K) exact k-NN Euclidean distances, ascending
-    idx: jax.Array               # (Q, K) original ids; -1 = fewer than K real series
+    dist: jax.Array              # (Q, K) exact k-NN distances, ascending
+    idx: jax.Array               # (Q, K) original ids; -1 = fewer than K real
     stats: SearchStats
 
     @property
@@ -53,57 +51,17 @@ class SearchResult(NamedTuple):
         return self.idx[..., 0]
 
 
-def _result(front: Frontier, stats: SearchStats) -> SearchResult:
-    """sqrt the squared frontier distances; empty slots stay (INF, -1)."""
-    return SearchResult(dist=frontier_lib.result_dists(front),
-                        idx=front.ids, stats=stats)
-
-
-_bound = frontier_lib.bound
-
-
 def refine_panel(q: jax.Array, q_paa: jax.Array, front: Frontier,
                  stats: SearchStats, block: jax.Array, ids_b: jax.Array,
                  lo: jax.Array | None, hi: jax.Array | None,
                  active: jax.Array, thr: jax.Array, *, n: int, w: int,
                  lb_filter: bool) -> tuple[Frontier, SearchStats]:
-    """Refine one (C, n) raw block panel against every query at once.
-
-    The per-block unit of work shared by the in-memory block-major schedule
-    and the out-of-core streaming search (storage/cache.py, which feeds it
-    blocks fetched through the ``BlockIndex.host_raw`` block cache): optional
-    per-series
-    MINDIST filtering, one (Q, C) MXU distance panel, one frontier insert,
-    and the work-stat updates.  ``active`` (Q,) masks queries whose envelope
-    lower bound beat ``thr``; ``lo``/``hi`` are the block's (w, C) per-series
-    bounds (unused when ``lb_filter`` is False).
-    """
-    qn, c = q.shape[0], block.shape[0]
-    if lb_filter:
-        qe = q_paa[:, :, None]                                 # (Q, w, 1)
-        dd = jnp.maximum(jnp.maximum(lo[None] - qe, qe - hi[None]), 0.0)
-        s_lb = (n / w) * jnp.sum(dd * dd, axis=1)              # (Q, C)
-        s_act = (s_lb < thr[:, None]) & active[:, None]
-    else:
-        s_act = jnp.broadcast_to(active[:, None], (qn, c))
-    d = ops.batch_l2(q, block)                                 # (Q, C)
-    live = s_act & (ids_b >= 0)[None, :]
-    d = jnp.where(live, d, INF)
-    front = front.insert(d, jnp.where(live, ids_b[None, :], -1))
-    stats = SearchStats(
-        blocks_visited=stats.blocks_visited + active.astype(jnp.int32),
-        series_refined=stats.series_refined
-        + jnp.sum(live, axis=1, dtype=jnp.int32),
-        lb_series=stats.lb_series
-        + (active.astype(jnp.int32) * c if lb_filter else 0),
-        iters=stats.iters,
-    )
-    return front, stats
+    """Back-compat shim: the ED specialization of ``engine.panel_refine``."""
+    qs = engine.QueryState(q=q, aux=(q_paa,))
+    return engine.panel_refine(ED(lb_filter=lb_filter), qs, front, stats,
+                               block, ids_b, lo, hi, active, thr, n=n, w=w)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "blocks_per_iter",
-                                             "lb_filter", "deadline_blocks",
-                                             "normalize_queries"))
 def search(index: BlockIndex, queries: jax.Array, *, k: int = 1,
            blocks_per_iter: int = 4, lb_filter: bool = True,
            initial_threshold: jax.Array | None = None,
@@ -120,155 +78,29 @@ def search(index: BlockIndex, queries: jax.Array, *, k: int = 1,
     ``normalize_queries=False`` is the generic-vector path (core/vector.py):
     the index was built with normalize=False and queries arrive prepared.
     """
-    setup = frontier_lib.prepare(queries, k, index=index,
-                                 normalize=normalize_queries)
-    q, q_paa, front, block_lb, stats0 = setup
-    b, c, n = index.raw.shape
-    qn = q.shape[0]
-    kb = min(blocks_per_iter, b)
-
-    order = jnp.argsort(block_lb, axis=1)                     # (Q, B)
-    max_ptr = b if deadline_blocks is None else min(b, deadline_blocks)
-
-    def next_lb(ptr):
-        # Invariant: ``cond`` evaluates this even when ptr >= max_ptr —
-        # jnp.logical_and does not short-circuit — so after the final body
-        # trip ptr can reach up to b + kb - 1.  The clamp keeps the slice
-        # start in-bounds explicitly (the clamped value is discarded:
-        # ptr < max_ptr is already False) instead of leaning on
-        # dynamic_slice's implicit start clamping.
-        safe = jnp.minimum(ptr, b - 1)
-        nxt = jax.lax.dynamic_slice_in_dim(order, safe, 1, axis=1)  # (Q,1)
-        return jnp.take_along_axis(block_lb, nxt, axis=1)[:, 0]     # (Q,)
-
-    def cond(state):
-        ptr, f, _ = state
-        return jnp.logical_and(ptr < max_ptr,
-                               jnp.any(next_lb(ptr)
-                                       < _bound(f, initial_threshold)))
-
-    def body(state):
-        ptr, f, st = state
-        thr = _bound(f, initial_threshold)
-        idxs = jax.lax.dynamic_slice_in_dim(order, ptr, kb, axis=1)  # (Q,K)
-        lbs = jnp.take_along_axis(block_lb, idxs, axis=1)            # (Q,K)
-        active = lbs < thr[:, None]                                  # (Q,K)
-
-        def refine(carry):
-            f_i, st_i = carry
-            blocks = index.raw[idxs]                                # (Q,K,C,n)
-            ids = index.ids[idxs]                                   # (Q,K,C)
-            if lb_filter:
-                lo = index.slo[idxs]                                # (Q,K,w,C)
-                hi = index.shi[idxs]
-                qe = q_paa[:, None, :, None]                        # (Q,1,w,1)
-                dd = jnp.maximum(jnp.maximum(lo - qe, qe - hi), 0.0)
-                s_lb = (n / index.w) * jnp.sum(dd * dd, axis=2)     # (Q,K,C)
-                s_act = (s_lb < thr[:, None, None]) & active[..., None]
-            else:
-                s_act = jnp.broadcast_to(active[..., None], ids.shape)
-            d = query_block_l2(q, blocks)                           # (Q,K,C)
-            live = s_act & (ids >= 0)
-            d = jnp.where(live, d, INF)
-            f_n = f_i.insert(d.reshape(qn, -1),
-                             jnp.where(live, ids, -1).reshape(qn, -1))
-            st_n = SearchStats(
-                blocks_visited=st_i.blocks_visited
-                + jnp.sum(active, axis=1, dtype=jnp.int32),
-                series_refined=st_i.series_refined
-                + jnp.sum(live, axis=(1, 2), dtype=jnp.int32),
-                lb_series=st_i.lb_series
-                + (jnp.sum(active, axis=1, dtype=jnp.int32) * c
-                   if lb_filter else 0),
-                iters=st_i.iters,
-            )
-            return f_n, st_n
-
-        f_n, st_n = jax.lax.cond(
-            jnp.any(active), refine, lambda cr: cr, (f, st))
-        st_n = st_n._replace(iters=st_n.iters + 1)
-        return ptr + kb, f_n, st_n
-
-    ptr0 = jnp.zeros((), jnp.int32)
-    _, front, stats = jax.lax.while_loop(cond, body, (ptr0, front, stats0))
-    return _result(front, stats)
+    plan = QueryPlan(metric=ED(normalize=normalize_queries,
+                               lb_filter=lb_filter),
+                     schedule="query_major", k=k,
+                     blocks_per_iter=blocks_per_iter,
+                     deadline_blocks=deadline_blocks)
+    return engine.run(index, queries, plan, initial_threshold)
 
 
-@functools.partial(jax.jit, static_argnames=("k", "lb_filter",
-                                             "deadline_blocks",
-                                             "normalize_queries"))
 def search_block_major(index: BlockIndex, queries: jax.Array, *, k: int = 1,
                        lb_filter: bool = True,
                        initial_threshold: jax.Array | None = None,
                        deadline_blocks: int | None = None,
                        normalize_queries: bool = True) -> SearchResult:
-    """Exact k-NN with a BLOCK-major schedule (beyond-paper optimization).
+    """Exact k-NN with the BLOCK-major schedule (beyond-paper optimization).
 
-    The paper's MESSI pops per-query priority queues — each thread gathers
-    ITS query's next-best leaf.  For a BATCH of queries on matrix hardware
-    that plan re-fetches (Q x K x C x n) raw bytes per round; the fetches,
-    not the pruned distance math, dominate (measured 92 ms/query vs 11
-    ms/query brute force at 50k x 256 on CPU — see EXPERIMENTS.md §Perf).
-
-    Here the roles flip: blocks are visited ONCE each, in ascending
-    min-over-queries lower-bound order; every visit is one contiguous
-    ``dynamic_slice`` (no gather) plus one (Q, C) MXU panel against all
-    still-active queries.  A suffix-min table over the scheduled LB matrix
-    gives the exact per-query stopping rule (when suffix_min[ptr, q] >=
-    threshold[q] nothing later can improve q's top-k; when that holds for
-    all q we stop) — the same no-false-dismissal guarantee, O(B log B)
-    schedule setup.
+    Blocks are visited ONCE each, in ascending min-over-queries lower-bound
+    order; every visit is one contiguous ``dynamic_slice`` plus one (Q, C)
+    MXU panel against all still-active queries, with the suffix-min table
+    supplying the exact per-query stopping rule (measured rationale in
+    EXPERIMENTS.md §Perf; schedule internals in core/engine.py).
     """
-    setup = frontier_lib.prepare(queries, k, index=index,
-                                 normalize=normalize_queries)
-    q, q_paa, front, block_lb, stats0 = setup
-    b, c, n = index.raw.shape
-    qn = q.shape[0]
-
-    order = jnp.argsort(jnp.min(block_lb, axis=0))            # (B,)
-    sched_lb = block_lb[:, order]                             # (Q, B)
-    # suffix min over the schedule: can anything at >= ptr still help q?
-    suffix = jax.lax.cummin(sched_lb[:, ::-1], axis=1)[:, ::-1]
-    max_ptr = b if deadline_blocks is None else min(b, deadline_blocks)
-
-    def cond(state):
-        ptr, f, _ = state
-        # same invariant as ``next_lb`` in ``search``: logical_and does
-        # not short-circuit, so this slice is evaluated at ptr == max_ptr
-        # after the final trip — clamp explicitly (the value is discarded)
-        safe = jnp.minimum(ptr, b - 1)
-        live = jax.lax.dynamic_slice_in_dim(suffix, safe, 1, axis=1)[:, 0]
-        return jnp.logical_and(ptr < max_ptr,
-                               jnp.any(live < _bound(f, initial_threshold)))
-
-    def body(state):
-        ptr, f, st = state
-        thr = _bound(f, initial_threshold)
-        b_id = order[ptr]
-        lbs = jax.lax.dynamic_slice_in_dim(block_lb, b_id, 1, axis=1)[:, 0]
-        active = lbs < thr                                    # (Q,)
-
-        def refine(cr):
-            f_i, st_i = cr
-            block = jax.lax.dynamic_index_in_dim(index.raw, b_id, 0,
-                                                 keepdims=False)   # (C, n)
-            ids_b = jax.lax.dynamic_index_in_dim(index.ids, b_id, 0,
-                                                 keepdims=False)   # (C,)
-            lo = hi = None
-            if lb_filter:
-                lo = jax.lax.dynamic_index_in_dim(index.slo, b_id, 0,
-                                                  keepdims=False)  # (w, C)
-                hi = jax.lax.dynamic_index_in_dim(index.shi, b_id, 0,
-                                                  keepdims=False)
-            return refine_panel(q, q_paa, f_i, st_i, block, ids_b, lo, hi,
-                                active, thr, n=n, w=index.w,
-                                lb_filter=lb_filter)
-
-        f_n, st_n = jax.lax.cond(
-            jnp.any(active), refine, lambda cr: cr, (f, st))
-        st_n = st_n._replace(iters=st_n.iters + 1)
-        return ptr + 1, f_n, st_n
-
-    ptr0 = jnp.zeros((), jnp.int32)
-    _, front, stats = jax.lax.while_loop(cond, body, (ptr0, front, stats0))
-    return _result(front, stats)
+    plan = QueryPlan(metric=ED(normalize=normalize_queries,
+                               lb_filter=lb_filter),
+                     schedule="block_major", k=k,
+                     deadline_blocks=deadline_blocks)
+    return engine.run(index, queries, plan, initial_threshold)

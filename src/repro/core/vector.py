@@ -8,7 +8,12 @@ invariant); unit-normalization gives cosine search since
 ||a - b||^2 = 2 - 2 cos(a, b) on the unit sphere — so the exact Euclidean
 top-k frontier (DESIGN.md §4a) IS the exact cosine top-k, descending.
 
-Used by examples/serve_with_index.py to serve k-NN over LM hidden states.
+The preparation now lives in `core/engine.py` as ``prep_vectors`` /
+the ``Cosine`` metric adapter; this module keeps the public faces.
+Device-resident serving goes through `search_vectors`; out-of-core
+serving through ``storage.SearchSession.search(qs, metric=Cosine())``
+(used by examples/serve_with_index.py to serve k-NN over LM hidden
+states).
 """
 from __future__ import annotations
 
@@ -16,21 +21,10 @@ import jax
 import jax.numpy as jnp
 
 from repro.core import index as index_lib
+from repro.core.engine import Cosine, prep_vectors  # noqa: F401 (re-export)
 from repro.core.index import BlockIndex
 from repro.core.search import SearchResult
 from repro.core.search import search as _search
-
-
-def prep_vectors(v: jax.Array, unit_norm: bool = True) -> jax.Array:
-    v = v.astype(jnp.float32)
-    if unit_norm:
-        v = v / jnp.maximum(jnp.linalg.norm(v, axis=-1, keepdims=True), 1e-8)
-        # rescale so per-dim values are ~N(0,1)-sized: iSAX breakpoints are
-        # standard-normal quantiles and unit vectors (entries ~ 1/sqrt(d))
-        # would otherwise collapse into the central regions. A global scale
-        # preserves the NN ordering exactly.
-        v = v * jnp.sqrt(jnp.float32(v.shape[-1]))
-    return v
 
 
 def build_vector_index(embs: jax.Array, *, w: int = 16, card: int = 256,
@@ -43,7 +37,12 @@ def build_vector_index(embs: jax.Array, *, w: int = 16, card: int = 256,
 
 def search_vectors(index: BlockIndex, queries: jax.Array, *, k: int = 1,
                    unit_norm: bool = True, **kw) -> SearchResult:
-    """Exact k-NN over the vector index. queries (Q, d) -> (Q, K) results."""
+    """Exact k-NN over the vector index. queries (Q, d) -> (Q, K) results.
+
+    Equivalent to a ``Cosine(unit_norm=...)`` plan on the query-major
+    schedule; the preparation runs eagerly here (one pass per batch) so
+    a caller can also prep once and hit the ED path directly.
+    """
     q = prep_vectors(queries, unit_norm)
     return _search(index, q, k=k, normalize_queries=False, **kw)
 

@@ -9,8 +9,15 @@ All core/ code calls these wrappers, never the kernels directly.  Dispatch:
   * mode="interpret" : Pallas kernels in interpret mode (CPU correctness runs;
                        the tests also call kernels directly with sweeps).
   * mode="pallas"    : compiled Pallas unconditionally (real TPU runs).
+
+The starting mode comes from the ``REPRO_KERNEL_MODE`` environment
+variable (validated at import time against the same set) so CI jobs and
+benchmark runs can select ref/interpret/pallas without code edits;
+``set_mode`` still overrides it at runtime.
 """
 from __future__ import annotations
+
+import os
 
 import jax
 import jax.numpy as jnp
@@ -20,8 +27,20 @@ from repro.kernels.batch_l2 import batch_l2 as _batch_l2_kernel
 from repro.kernels.isax_summarize import isax_summarize as _summ_kernel
 from repro.kernels.lb_scan import lb_scan as _lb_kernel
 
-_MODE = "auto"
+_ENV_VAR = "REPRO_KERNEL_MODE"
 _VALID = ("auto", "ref", "interpret", "pallas")
+
+
+def _mode_from_env() -> str:
+    mode = os.environ.get(_ENV_VAR, "auto")
+    if mode not in _VALID:
+        raise ValueError(
+            f"{_ENV_VAR}={mode!r} is not a valid kernel mode; "
+            f"choose one of {_VALID}")
+    return mode
+
+
+_MODE = _mode_from_env()
 
 
 def set_mode(mode: str) -> None:

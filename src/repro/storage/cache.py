@@ -18,11 +18,17 @@ set.  This module makes that working set explicit:
     the driver thread never blocks inside ``np.ascontiguousarray``.
 
   * ``SearchSession`` — a stateful wrapper holding one ``BlockCache``
-    across query batches.  Batch t+1 re-reads from disk only the
-    surviving blocks that batch t (and the LRU horizon before it) did
-    not already pull in; repeated traffic converges to MESSI's
-    in-memory behaviour without ever holding more than
-    ``cache_blocks`` raw blocks on device.
+    across query batches.  The walk itself is ``engine.run_cached``:
+    the same block-major schedule as the device backend, driven through
+    this session's fetch/speculate callbacks — which makes the session
+    metric-generic: ``search(qs, metric=DTW(r))`` is out-of-core DTW,
+    ``search(qs, metric=Cosine())`` serves embeddings, and
+    ``initial_threshold`` seeds the pruning bound for the distributed
+    out-of-core protocol (core/distributed.py).  Batch t+1 re-reads
+    from disk only the surviving blocks that batch t (and the LRU
+    horizon before it) did not already pull in; repeated traffic
+    converges to MESSI's in-memory behaviour without ever holding more
+    than ``cache_blocks`` raw blocks on device.
 
 Accounting is per batch and split so the paper's pruning claim stays
 measurable under caching: ``IOStats.bytes_read``/``blocks_fetched``
@@ -37,7 +43,6 @@ small cache, preserving the streaming memory profile of a single batch.
 """
 from __future__ import annotations
 
-import functools
 import threading
 from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
@@ -45,10 +50,9 @@ from concurrent.futures import Future, ThreadPoolExecutor
 import jax
 import numpy as np
 
+from repro.core import engine
 from repro.core import frontier as frontier_lib
 from repro.core.index import BlockIndex, HostRawBlocks
-from repro.core.search import refine_panel
-from repro.kernels import ops
 from repro.storage.ooc_search import IOStats, OocSearchResult
 
 
@@ -171,16 +175,6 @@ class BlockCache:
             self._lru.clear()
 
 
-@functools.partial(jax.jit, static_argnames=("n", "w", "lb_filter"))
-def _refine_step(q, q_paa, front, stats, block, ids_b, lo, hi, lbs, *,
-                 n: int, w: int, lb_filter: bool):
-    """One fetched block against all queries — the device side of the loop."""
-    thr = frontier_lib.bound(front)
-    active = lbs < thr
-    return refine_panel(q, q_paa, front, stats, block, ids_b, lo, hi,
-                        active, thr, n=n, w=w, lb_filter=lb_filter)
-
-
 class SearchSession:
     """Stateful out-of-core serving: one block cache across query batches.
 
@@ -205,6 +199,11 @@ class SearchSession:
         self.batches = 0
         self.cache_hits = 0
         self.blocks_fetched = 0
+        # disk reads performed by approximate_threshold (protocol round 1)
+        # that no batch has billed yet; folded into the next search()'s
+        # IOStats so every read appears in exactly one batch's bill
+        self._carry_blocks = 0
+        self._carry_bytes = 0
 
     @property
     def hit_rate(self) -> float:
@@ -220,28 +219,59 @@ class SearchSession:
     def __exit__(self, exc_type, exc, tb) -> None:
         self.close()
 
+    def _plan(self, k: int, lb_filter: bool, normalize_queries: bool,
+              metric) -> engine.QueryPlan:
+        if metric is None:
+            metric = engine.ED(normalize=normalize_queries,
+                               lb_filter=lb_filter)
+        return engine.QueryPlan(metric=metric, schedule="block_major", k=k)
+
+    def approximate_threshold(self, queries: jax.Array, *, k: int = 1,
+                              lb_filter: bool = True,
+                              normalize_queries: bool = True,
+                              metric=None) -> np.ndarray:
+        """(Q,) squared k-th-best distance after stage A only.
+
+        Round 1 of the distributed out-of-core protocol
+        (``distributed.search_sharded_ooc``): each shard refines just
+        its queries' best-envelope blocks and the thresholds are
+        min-reduced across shards.  The fetched blocks stay in the
+        session cache, so round 2 re-touches them as warm hits; their
+        disk reads are carried into the next ``search()``'s IOStats so
+        the protocol's full I/O cost stays visible (and comparable to a
+        blind single-round search).
+        """
+        plan = self._plan(k, lb_filter, normalize_queries, metric)
+        reads0, bytes0 = self.cache.disk_blocks, self.cache.disk_bytes
+        front = engine.run_cached_stage_a(
+            self.index, queries, plan,
+            fetch=self.cache.get, speculate=self.cache.prefetch)
+        self.cache.drain()
+        self._carry_blocks += self.cache.disk_blocks - reads0
+        self._carry_bytes += self.cache.disk_bytes - bytes0
+        return np.asarray(front.threshold())
+
     def search(self, queries: jax.Array, *, k: int = 1,
                lb_filter: bool = True,
-               normalize_queries: bool = True) -> OocSearchResult:
+               normalize_queries: bool = True,
+               metric=None,
+               initial_threshold: jax.Array | None = None
+               ) -> OocSearchResult:
         """Exact k-NN for one (Q, n) query batch through the cache.
 
-        Same walk as DESIGN.md §5: envelope ranking, stage-A seeding,
-        block-major schedule with suffix-min stopping — but every fetch
-        and every speculative prefetch goes through the id-keyed cache.
+        The walk is ``engine.run_cached`` — the §5 block-major schedule
+        (envelope ranking, stage-A seeding, suffix-min stopping) with
+        every fetch and every speculative prefetch going through the
+        id-keyed cache.  ``metric`` picks the plan's metric axis
+        (default ``ED``; ``lb_filter``/``normalize_queries`` are folded
+        into the default and ignored when an explicit metric is given).
+        ``initial_threshold`` (squared) seeds the pruning bound — the
+        distributed protocol passes the globally-reduced k-th best; it
+        never appears in the result, which holds this shard's own top-k.
         """
         index, cache = self.index, self.cache
         host = index.host_raw
-        setup = frontier_lib.prepare(queries, k, w=index.w,
-                                     normalize=normalize_queries)
-        q, q_paa, front = setup.q, setup.q_paa, setup.frontier
-        stats = setup.stats
-        n, w = index.n, index.w
-        n_blocks = index.n_blocks
-        refine = functools.partial(_refine_step, n=n, w=w,
-                                   lb_filter=lb_filter)
-
-        block_lb = ops.lb_scan_planar(q_paa, index.elo, index.ehi, n=n)
-        block_lb_h = np.asarray(block_lb)
+        plan = self._plan(k, lb_filter, normalize_queries, metric)
 
         # per-batch accounting: the first touch of each block id decides
         # hit vs miss; later touches (a get() after its own prefetch) are
@@ -265,65 +295,18 @@ class SearchSession:
             touch(b)
             cache.prefetch(b)
 
-        def step(front, stats, dev_block, b: int):
-            ids_b = index.ids[b]
-            lo = index.slo[b] if lb_filter else None
-            hi = index.shi[b] if lb_filter else None
-            return refine(q, q_paa, front, stats, dev_block, ids_b, lo, hi,
-                          block_lb[:, b])
-
-        # -- stage A: each query's best-envelope block seeds the frontier,
-        # pipelined one block ahead so reads overlap the refines ---------
-        stage_a = [int(b) for b in np.unique(np.argmin(block_lb_h, axis=1))]
-        done: set[int] = set()
-        if stage_a:
-            speculate(stage_a[0])
-        for i, b in enumerate(stage_a):
-            if i + 1 < len(stage_a):
-                speculate(stage_a[i + 1])
-            front, stats = step(front, stats, fetch(b), b)
-            done.add(b)
-
-        # -- block-major walk over the surviving schedule -----------------
-        order = np.argsort(block_lb_h.min(axis=0), kind="stable")     # (B,)
-        sched_lb = block_lb_h[:, order]                               # (Q, B)
-        suffix = np.minimum.accumulate(sched_lb[:, ::-1], axis=1)[:, ::-1]
-
-        def pending(ptr: int) -> bool:
-            """Block at schedule slot ptr still needs a refine under thr_h."""
-            return int(order[ptr]) not in done \
-                and bool(np.any(sched_lb[:, ptr] < thr_h))
-
-        thr_h = np.asarray(frontier_lib.bound(front))                 # sync
-        ptr = 0
-        while ptr < n_blocks:
-            if np.all(suffix[:, ptr] >= thr_h):
-                break                       # nothing later helps any query
-            if not pending(ptr):
-                ptr += 1
-                continue                    # pruned (or stage-A-refined)
-            front, stats = step(front, stats, fetch(int(order[ptr])),
-                                int(order[ptr]))                      # async
-            nxt = ptr + 1                   # next survivor under current thr
-            while nxt < n_blocks and not pending(nxt):
-                nxt += 1
-            if nxt < n_blocks and not np.all(suffix[:, nxt] >= thr_h):
-                # threshold-speculative: read overlaps the refine above; if
-                # the slot is pruned before its turn the block just stays
-                # in the cache under its id for a later query/batch
-                speculate(int(order[nxt]))
-            thr_h = np.asarray(frontier_lib.bound(front))   # one sync/block
-            # blocks in (ptr, nxt) were pruned under a bound that only
-            # tightened since — safe to jump straight to the prefetch target
-            ptr = nxt
+        front, stats = engine.run_cached(
+            index, queries, plan, fetch=fetch, speculate=speculate,
+            initial_threshold=initial_threshold)
 
         cache.drain()   # settle the last speculation into this batch's bill
-        fetched = cache.disk_blocks - reads0
-        io = IOStats(bytes_read=cache.disk_bytes - bytes0,
-                     bytes_scan=index.n_real * n * host.dtype.itemsize,
+        fetched = cache.disk_blocks - reads0 + self._carry_blocks
+        io = IOStats(bytes_read=cache.disk_bytes - bytes0 + self._carry_bytes,
+                     bytes_scan=index.n_real * index.n * host.dtype.itemsize,
                      blocks_fetched=fetched,
-                     blocks_total=n_blocks,
+                     blocks_total=index.n_blocks,
                      cache_hits=hits)
+        self._carry_blocks = self._carry_bytes = 0
         self.batches += 1
         self.cache_hits += hits
         self.blocks_fetched += fetched

@@ -9,16 +9,19 @@ envelopes are device-resident, raw series stay on disk.  Per query batch:
      fully-pruned query ever costs);
   3. the block-major schedule of ``search.search_block_major`` runs at the
      Python level: blocks in ascending min-over-queries lower-bound order,
-     each surviving block refined by the shared ``search.refine_panel``;
+     each surviving block refined by the shared ``engine.panel_refine``;
      the suffix-min stopping rule ends the walk as soon as no later block
      can improve any query's top-k.
 
-The walk itself lives in ``storage.cache.SearchSession``: all raw I/O —
-fetches and the one-block-ahead threshold-speculative prefetch alike —
-goes through a ``BlockCache`` (an id-keyed LRU of device-resident blocks
-with a background reader thread), so disk reads overlap device compute
+The walk itself is ``core.engine.run_cached`` driven by a
+``storage.cache.SearchSession``: all raw I/O — fetches and the
+one-block-ahead threshold-speculative prefetch alike — goes through a
+``BlockCache`` (an id-keyed LRU of device-resident blocks with a
+background reader thread), so disk reads overlap device compute
 without the driver thread ever blocking in a copy, and a speculated
 block whose schedule slot gets pruned simply stays cached under its id.
+The walk is metric-generic: ``metric=engine.DTW(r)`` is out-of-core
+DTW, ``metric=engine.Cosine()`` serves embeddings.
 ``ooc_search`` below is the stateless one-shot form: a throwaway session
 with a small cache, keeping a single batch's device footprint at a few
 blocks.  Serving workloads should hold a ``SearchSession`` instead and
@@ -73,13 +76,15 @@ class OocSearchResult(NamedTuple):
 
 def ooc_search(index: BlockIndex, queries: jax.Array, *, k: int = 1,
                lb_filter: bool = True, normalize_queries: bool = True,
-               cache_blocks: int = 4) -> OocSearchResult:
+               cache_blocks: int = 4, metric=None) -> OocSearchResult:
     """Exact k-NN for (Q, n) queries against an index opened out-of-core.
 
     ``index`` must come from ``storage.open_index`` (or ``build_on_disk``):
     summaries on device, raw behind ``index.host_raw``.  Result dist/idx
     are identical to ``search.search`` / ``ucr.search_scan`` on the same
     data — the streaming changes what is read, never what is answered.
+    ``metric`` picks the plan's metric axis (``engine.DTW(r)`` is
+    out-of-core DTW, ``engine.Cosine()`` serves embeddings; default ED).
 
     One-shot wrapper over ``cache.SearchSession``: the session (and its
     ``cache_blocks``-bounded device cache) lives only for this call, so
@@ -89,4 +94,5 @@ def ooc_search(index: BlockIndex, queries: jax.Array, *, k: int = 1,
     from repro.storage.cache import SearchSession
     with SearchSession(index, cache_blocks=cache_blocks) as session:
         return session.search(queries, k=k, lb_filter=lb_filter,
-                              normalize_queries=normalize_queries)
+                              normalize_queries=normalize_queries,
+                              metric=metric)

@@ -1,0 +1,387 @@
+"""FROZEN pre-engine search drivers — the golden reference for
+tests/test_engine.py.
+
+These are verbatim copies of the four device-resident query drivers as
+they stood immediately before the `core/engine.py` refactor (PR 4):
+
+  * ``search``             — MESSI query-major (core/search.py)
+  * ``search_block_major`` — MESSI block-major (core/search.py)
+  * ``search_flat``        — ParIS flat SAX-array scan (core/paris.py)
+  * ``search_dtw``         — DTW over the Euclidean index (core/dtw.py)
+
+They depend only on modules the refactor left numerically untouched
+(``frontier``, ``isax``, ``index``, ``kernels.ops``), so running them
+today reproduces the pre-refactor traced graphs exactly.  The parity
+matrix asserts the engine-backed wrappers are BIT-identical to these on
+fixed-seed inputs for k in {1, 5, 32}.
+
+Do not "improve" this file: its value is that it does not change.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import frontier as frontier_lib
+from repro.core import isax
+from repro.core.frontier import Frontier, INF, SearchStats, query_block_l2
+from repro.core.index import BlockIndex, FlatIndex, flat_view
+from repro.core.search import SearchResult
+from repro.kernels import ops
+
+_bound = frontier_lib.bound
+
+
+def _result(front: Frontier, stats: SearchStats) -> SearchResult:
+    return SearchResult(dist=frontier_lib.result_dists(front),
+                        idx=front.ids, stats=stats)
+
+
+def refine_panel(q, q_paa, front, stats, block, ids_b, lo, hi,
+                 active, thr, *, n, w, lb_filter):
+    qn, c = q.shape[0], block.shape[0]
+    if lb_filter:
+        qe = q_paa[:, :, None]                                 # (Q, w, 1)
+        dd = jnp.maximum(jnp.maximum(lo[None] - qe, qe - hi[None]), 0.0)
+        s_lb = (n / w) * jnp.sum(dd * dd, axis=1)              # (Q, C)
+        s_act = (s_lb < thr[:, None]) & active[:, None]
+    else:
+        s_act = jnp.broadcast_to(active[:, None], (qn, c))
+    d = ops.batch_l2(q, block)                                 # (Q, C)
+    live = s_act & (ids_b >= 0)[None, :]
+    d = jnp.where(live, d, INF)
+    front = front.insert(d, jnp.where(live, ids_b[None, :], -1))
+    stats = SearchStats(
+        blocks_visited=stats.blocks_visited + active.astype(jnp.int32),
+        series_refined=stats.series_refined
+        + jnp.sum(live, axis=1, dtype=jnp.int32),
+        lb_series=stats.lb_series
+        + (active.astype(jnp.int32) * c if lb_filter else 0),
+        iters=stats.iters,
+    )
+    return front, stats
+
+
+@functools.partial(jax.jit, static_argnames=("k", "blocks_per_iter",
+                                             "lb_filter", "deadline_blocks",
+                                             "normalize_queries"))
+def search(index: BlockIndex, queries: jax.Array, *, k: int = 1,
+           blocks_per_iter: int = 4, lb_filter: bool = True,
+           initial_threshold: jax.Array | None = None,
+           deadline_blocks: int | None = None,
+           normalize_queries: bool = True) -> SearchResult:
+    setup = frontier_lib.prepare(queries, k, index=index,
+                                 normalize=normalize_queries)
+    q, q_paa, front, block_lb, stats0 = setup
+    b, c, n = index.raw.shape
+    qn = q.shape[0]
+    kb = min(blocks_per_iter, b)
+
+    order = jnp.argsort(block_lb, axis=1)                     # (Q, B)
+    max_ptr = b if deadline_blocks is None else min(b, deadline_blocks)
+
+    def next_lb(ptr):
+        safe = jnp.minimum(ptr, b - 1)
+        nxt = jax.lax.dynamic_slice_in_dim(order, safe, 1, axis=1)  # (Q,1)
+        return jnp.take_along_axis(block_lb, nxt, axis=1)[:, 0]     # (Q,)
+
+    def cond(state):
+        ptr, f, _ = state
+        return jnp.logical_and(ptr < max_ptr,
+                               jnp.any(next_lb(ptr)
+                                       < _bound(f, initial_threshold)))
+
+    def body(state):
+        ptr, f, st = state
+        thr = _bound(f, initial_threshold)
+        idxs = jax.lax.dynamic_slice_in_dim(order, ptr, kb, axis=1)  # (Q,K)
+        lbs = jnp.take_along_axis(block_lb, idxs, axis=1)            # (Q,K)
+        active = lbs < thr[:, None]                                  # (Q,K)
+
+        def refine(carry):
+            f_i, st_i = carry
+            blocks = index.raw[idxs]                                # (Q,K,C,n)
+            ids = index.ids[idxs]                                   # (Q,K,C)
+            if lb_filter:
+                lo = index.slo[idxs]                                # (Q,K,w,C)
+                hi = index.shi[idxs]
+                qe = q_paa[:, None, :, None]                        # (Q,1,w,1)
+                dd = jnp.maximum(jnp.maximum(lo - qe, qe - hi), 0.0)
+                s_lb = (n / index.w) * jnp.sum(dd * dd, axis=2)     # (Q,K,C)
+                s_act = (s_lb < thr[:, None, None]) & active[..., None]
+            else:
+                s_act = jnp.broadcast_to(active[..., None], ids.shape)
+            d = query_block_l2(q, blocks)                           # (Q,K,C)
+            live = s_act & (ids >= 0)
+            d = jnp.where(live, d, INF)
+            f_n = f_i.insert(d.reshape(qn, -1),
+                             jnp.where(live, ids, -1).reshape(qn, -1))
+            st_n = SearchStats(
+                blocks_visited=st_i.blocks_visited
+                + jnp.sum(active, axis=1, dtype=jnp.int32),
+                series_refined=st_i.series_refined
+                + jnp.sum(live, axis=(1, 2), dtype=jnp.int32),
+                lb_series=st_i.lb_series
+                + (jnp.sum(active, axis=1, dtype=jnp.int32) * c
+                   if lb_filter else 0),
+                iters=st_i.iters,
+            )
+            return f_n, st_n
+
+        f_n, st_n = jax.lax.cond(
+            jnp.any(active), refine, lambda cr: cr, (f, st))
+        st_n = st_n._replace(iters=st_n.iters + 1)
+        return ptr + kb, f_n, st_n
+
+    ptr0 = jnp.zeros((), jnp.int32)
+    _, front, stats = jax.lax.while_loop(cond, body, (ptr0, front, stats0))
+    return _result(front, stats)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "lb_filter",
+                                             "deadline_blocks",
+                                             "normalize_queries"))
+def search_block_major(index: BlockIndex, queries: jax.Array, *, k: int = 1,
+                       lb_filter: bool = True,
+                       initial_threshold: jax.Array | None = None,
+                       deadline_blocks: int | None = None,
+                       normalize_queries: bool = True) -> SearchResult:
+    setup = frontier_lib.prepare(queries, k, index=index,
+                                 normalize=normalize_queries)
+    q, q_paa, front, block_lb, stats0 = setup
+    b, c, n = index.raw.shape
+
+    order = jnp.argsort(jnp.min(block_lb, axis=0))            # (B,)
+    sched_lb = block_lb[:, order]                             # (Q, B)
+    suffix = jax.lax.cummin(sched_lb[:, ::-1], axis=1)[:, ::-1]
+    max_ptr = b if deadline_blocks is None else min(b, deadline_blocks)
+
+    def cond(state):
+        ptr, f, _ = state
+        safe = jnp.minimum(ptr, b - 1)
+        live = jax.lax.dynamic_slice_in_dim(suffix, safe, 1, axis=1)[:, 0]
+        return jnp.logical_and(ptr < max_ptr,
+                               jnp.any(live < _bound(f, initial_threshold)))
+
+    def body(state):
+        ptr, f, st = state
+        thr = _bound(f, initial_threshold)
+        b_id = order[ptr]
+        lbs = jax.lax.dynamic_slice_in_dim(block_lb, b_id, 1, axis=1)[:, 0]
+        active = lbs < thr                                    # (Q,)
+
+        def refine(cr):
+            f_i, st_i = cr
+            block = jax.lax.dynamic_index_in_dim(index.raw, b_id, 0,
+                                                 keepdims=False)   # (C, n)
+            ids_b = jax.lax.dynamic_index_in_dim(index.ids, b_id, 0,
+                                                 keepdims=False)   # (C,)
+            lo = hi = None
+            if lb_filter:
+                lo = jax.lax.dynamic_index_in_dim(index.slo, b_id, 0,
+                                                  keepdims=False)  # (w, C)
+                hi = jax.lax.dynamic_index_in_dim(index.shi, b_id, 0,
+                                                  keepdims=False)
+            return refine_panel(q, q_paa, f_i, st_i, block, ids_b, lo, hi,
+                                active, thr, n=n, w=index.w,
+                                lb_filter=lb_filter)
+
+        f_n, st_n = jax.lax.cond(
+            jnp.any(active), refine, lambda cr: cr, (f, st))
+        st_n = st_n._replace(iters=st_n.iters + 1)
+        return ptr + 1, f_n, st_n
+
+    ptr0 = jnp.zeros((), jnp.int32)
+    _, front, stats = jax.lax.while_loop(cond, body, (ptr0, front, stats0))
+    return _result(front, stats)
+
+
+@functools.partial(jax.jit, static_argnames=("k", "chunk"))
+def search_flat(index: FlatIndex, queries: jax.Array, *, k: int = 1,
+                block_index: BlockIndex | None = None,
+                initial_threshold: jax.Array | None = None,
+                chunk: int = 4096) -> SearchResult:
+    setup = frontier_lib.prepare(queries, k, index=block_index, w=index.w)
+    q, q_paa = setup.q, setup.q_paa
+    npad, n = index.raw.shape
+    qn = q.shape[0]
+    c = min(chunk, npad)
+    pad = (-npad) % c
+
+    lo, hi, raw, ids = index.lo, index.hi, index.raw, index.ids
+    if pad:
+        lo = jnp.concatenate([lo, jnp.full((index.w, pad), isax.SENTINEL)], 1)
+        hi = jnp.concatenate([hi, jnp.full((index.w, pad), isax.SENTINEL)], 1)
+        raw = jnp.concatenate(
+            [raw, jnp.full((pad, n), 1.0e4, jnp.float32)], 0)
+        ids = jnp.concatenate([ids, jnp.full((pad,), -1, jnp.int32)], 0)
+
+    lb = ops.lb_scan_planar(q_paa, lo, hi, n=n)               # (Q, Np+pad)
+
+    nchunks = raw.shape[0] // c
+    raw_c = raw.reshape(nchunks, c, n)
+    ids_c = ids.reshape(nchunks, c)
+    lb_c = lb.reshape(qn, nchunks, c)
+
+    def step(carry, inp):
+        front, refined = carry
+        raw_k, ids_k, lb_k = inp                              # (C,n),(C,),(Q,C)
+        thr = frontier_lib.bound(front, initial_threshold)
+        act = (lb_k < thr[:, None]) & (ids_k[None, :] >= 0)
+
+        def refine(cr):
+            front_j, refined_j = cr
+            d = ops.batch_l2(q, raw_k)                        # (Q, C)
+            d = jnp.where(act, d, INF)
+            front_n = front_j.insert(d, jnp.where(act, ids_k[None, :], -1))
+            return (front_n,
+                    refined_j + jnp.sum(act, axis=1, dtype=jnp.int32))
+
+        carry = jax.lax.cond(jnp.any(act), refine, lambda cr: cr,
+                             (front, refined))
+        return carry, None
+
+    (front, refined), _ = jax.lax.scan(
+        step, (setup.frontier, jnp.zeros((qn,), jnp.int32)),
+        (raw_c, ids_c, jnp.moveaxis(lb_c, 1, 0)))
+
+    stats = SearchStats(
+        blocks_visited=jnp.full((qn,), nchunks, jnp.int32),
+        series_refined=refined,
+        lb_series=jnp.full((qn,), index.n_real, jnp.int32),   # whole array
+        iters=jnp.asarray(nchunks, jnp.int32),
+    )
+    return SearchResult(dist=frontier_lib.result_dists(front),
+                        idx=front.ids, stats=stats)
+
+
+def search_paris(index: BlockIndex, queries: jax.Array, *, k: int = 1,
+                 chunk: int = 4096,
+                 initial_threshold: jax.Array | None = None) -> SearchResult:
+    return search_flat(flat_view(index), queries, k=k, block_index=index,
+                       chunk=chunk, initial_threshold=initial_threshold)
+
+
+def _query_envelope(q: jax.Array, r: int):
+    n = q.shape[-1]
+    pads = [(0, 0)] * (q.ndim - 1) + [(r, r)]
+    qu = jnp.pad(q, pads, constant_values=-jnp.inf)
+    ql = jnp.pad(q, pads, constant_values=jnp.inf)
+    iu = jnp.arange(n)[:, None] + jnp.arange(2 * r + 1)[None, :]
+    u = jnp.max(qu[..., iu], axis=-1)
+    l = jnp.min(ql[..., iu], axis=-1)
+    return u, l
+
+
+def _dtw_band(a: jax.Array, b: jax.Array, r: int) -> jax.Array:
+    a, b = jnp.broadcast_arrays(a, b)
+    n = a.shape[-1]
+    i_idx = jnp.arange(n)
+
+    def diag_cost(k):
+        j = k - i_idx
+        valid = (j >= 0) & (j < n) & (jnp.abs(i_idx - j) <= r)
+        jc = jnp.clip(j, 0, n - 1)
+        c = (a[..., i_idx] - jnp.take(b, jc, axis=-1)) ** 2
+        return jnp.where(valid, c, INF)
+
+    def shift_down(d):
+        return jnp.concatenate([jnp.full(d.shape[:-1] + (1,), INF),
+                                d[..., :-1]], axis=-1)
+
+    def body(carry, k):
+        prev, prev2 = carry
+        c = diag_cost(k)
+        best = jnp.minimum(jnp.minimum(prev, shift_down(prev)),
+                           shift_down(prev2))
+        cur = c + jnp.where(k == 0, 0.0, best)
+        cur = jnp.minimum(cur, INF)
+        return (cur, prev), None
+
+    init_shape = a.shape[:-1] + (n,)
+    prev = jnp.full(init_shape, INF)
+    prev2 = jnp.full(init_shape, INF)
+    (last, second), _ = jax.lax.scan(body, (prev, prev2),
+                                     jnp.arange(2 * n - 1))
+    return last[..., n - 1]
+
+
+def _envelope_block_lb(index: BlockIndex, u_paa, l_paa) -> jax.Array:
+    n = index.n
+    big = isax.SENTINEL
+    w, b = index.elo.shape
+    above = ops.lb_scan_planar(u_paa, index.elo,
+                               jnp.full((w, b), big, jnp.float32), n=n)
+    below = ops.lb_scan_planar(l_paa, jnp.full((w, b), -big, jnp.float32),
+                               index.ehi, n=n)
+    return above + below
+
+
+@functools.partial(jax.jit, static_argnames=("r", "k", "blocks_per_iter"))
+def search_dtw(index: BlockIndex, queries: jax.Array, *, r: int, k: int = 1,
+               blocks_per_iter: int = 2) -> SearchResult:
+    q = isax.znorm(queries).astype(jnp.float32)
+    qn = q.shape[0]
+    b, c, n = index.raw.shape
+    u, l = _query_envelope(q, r)
+    u_paa, l_paa = isax.paa(u, index.w), isax.paa(l, index.w)
+
+    block_lb = _envelope_block_lb(index, u_paa, l_paa)         # (Q, B)
+
+    b0 = jnp.argmin(block_lb, axis=1)
+    blocks0 = index.raw[b0]                                    # (Q, C, n)
+    d0 = _dtw_band(q[:, None, :], blocks0, r)                  # (Q, C)
+    front = frontier_lib.init(qn, k).insert(d0, index.ids[b0])
+
+    order = jnp.argsort(block_lb, axis=1)
+    kb = min(blocks_per_iter, b)
+
+    def next_lb(ptr):
+        nxt = jax.lax.dynamic_slice_in_dim(order, ptr, 1, axis=1)
+        return jnp.take_along_axis(block_lb, nxt, axis=1)[:, 0]
+
+    def cond(state):
+        ptr, f, _ = state
+        return jnp.logical_and(ptr < b, jnp.any(next_lb(ptr) < f.threshold()))
+
+    def body(state):
+        ptr, f, visited = state
+        thr = f.threshold()
+        idxs = jax.lax.dynamic_slice_in_dim(order, ptr, kb, axis=1)
+        lbs = jnp.take_along_axis(block_lb, idxs, axis=1)
+        active = lbs < thr[:, None]
+
+        def refine(cr):
+            f_i, visited_i = cr
+            blocks = index.raw[idxs]                           # (Q,K,C,n)
+            ids = index.ids[idxs]
+            above = jnp.maximum(blocks - u[:, None, None, :], 0.0)
+            below = jnp.maximum(l[:, None, None, :] - blocks, 0.0)
+            dd = above + below
+            lbk = jnp.sum(dd * dd, axis=-1)                    # (Q,K,C)
+            s_act = (lbk < thr[:, None, None]) & active[..., None] \
+                    & (ids >= 0)
+            d = _dtw_band(q[:, None, None, :], blocks, r)      # (Q,K,C)
+            d = jnp.where(s_act, d, INF)
+            f_n = f_i.insert(d.reshape(qn, -1),
+                             jnp.where(s_act, ids, -1).reshape(qn, -1))
+            return (f_n,
+                    visited_i + jnp.sum(active, axis=1, dtype=jnp.int32))
+
+        f_n, visited_n = jax.lax.cond(
+            jnp.any(active), refine, lambda cr: cr, (f, visited))
+        return ptr + kb, f_n, visited_n
+
+    ptr0 = jnp.zeros((), jnp.int32)
+    visited0 = jnp.zeros((qn,), jnp.int32)
+    _, front, visited = jax.lax.while_loop(
+        cond, body, (ptr0, front, visited0))
+
+    stats = SearchStats(blocks_visited=visited,
+                        series_refined=visited * c,
+                        lb_series=visited * c,
+                        iters=jnp.zeros((), jnp.int32))
+    return SearchResult(dist=frontier_lib.result_dists(front),
+                        idx=front.ids, stats=stats)

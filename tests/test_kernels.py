@@ -139,3 +139,74 @@ def test_ssm_scan_matches_mamba_layer_math():
     y_r = jnp.einsum("bsdn,bsn->bsd", hs, ct.astype(jnp.float32))
     np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_r),
                                rtol=1e-3, atol=1e-3)
+
+
+# ---------------------------------------------------------------------------
+# ops dispatch: the REPRO_KERNEL_MODE environment variable
+# ---------------------------------------------------------------------------
+
+def _mode_subprocess(mode):
+    """Fresh interpreter importing repro.kernels.ops under the env var."""
+    import os
+    import subprocess
+    import sys
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env.pop("REPRO_KERNEL_MODE", None)
+    if mode is not None:
+        env["REPRO_KERNEL_MODE"] = mode
+    code = "from repro.kernels import ops; print(ops.get_mode())"
+    return subprocess.run([sys.executable, "-c", code], capture_output=True,
+                          text=True, env=env, timeout=120)
+
+
+@pytest.mark.parametrize("mode", ["ref", "interpret", "pallas", "auto"])
+def test_kernel_mode_env_var_selects_mode(mode):
+    r = _mode_subprocess(mode)
+    assert r.returncode == 0, r.stderr
+    assert r.stdout.strip() == mode
+
+
+def test_kernel_mode_env_var_defaults_to_auto():
+    r = _mode_subprocess(None)
+    assert r.returncode == 0, r.stderr
+    assert r.stdout.strip() == "auto"
+
+
+def test_kernel_mode_env_var_rejects_junk_at_import():
+    r = _mode_subprocess("jit-harder")
+    assert r.returncode != 0, "junk mode must fail the import loudly"
+    assert "REPRO_KERNEL_MODE" in r.stderr and "jit-harder" in r.stderr
+    assert "auto" in r.stderr        # the error names the valid choices
+
+
+def test_mode_ref_and_interpret_agree_through_dispatch():
+    """Both dispatch paths of the ops layer on the same inputs: the jnp
+    oracle (ref) vs interpret-mode Pallas — the per-kernel sweeps above
+    call the kernels directly; this exercises ops.* dispatch itself."""
+    from repro.kernels import ops
+    x = series(96, 128)
+    qs = series(4, 128)
+    old = ops.get_mode()
+    try:
+        ops.set_mode("ref")
+        paa_r, sax_r = ops.summarize(x, w=16, card=64)
+        _, _, bounds = isax.summarize(x)
+        q_paa = isax.paa(isax.znorm(qs), 16)
+        lb_r = ops.lb_scan_planar(q_paa, bounds[..., 0].T, bounds[..., 1].T,
+                                  n=128)
+        d_r = ops.batch_l2(isax.znorm(qs), isax.znorm(x))
+        ops.set_mode("interpret")
+        paa_i, sax_i = ops.summarize(x, w=16, card=64)
+        lb_i = ops.lb_scan_planar(q_paa, bounds[..., 0].T, bounds[..., 1].T,
+                                  n=128)
+        d_i = ops.batch_l2(isax.znorm(qs), isax.znorm(x))
+    finally:
+        ops.set_mode(old)
+    assert np.array_equal(np.asarray(sax_r), np.asarray(sax_i))
+    np.testing.assert_allclose(np.asarray(paa_r), np.asarray(paa_i),
+                               rtol=1e-5, atol=1e-5)
+    np.testing.assert_allclose(np.asarray(lb_r), np.asarray(lb_i),
+                               rtol=1e-4, atol=1e-4)
+    np.testing.assert_allclose(np.asarray(d_r), np.asarray(d_i),
+                               rtol=1e-4, atol=1e-4)
