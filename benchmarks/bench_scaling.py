@@ -21,7 +21,7 @@ from benchmarks.common import BenchRunner, csv_ints, print_table, write_rows
 _PAYLOAD = r"""
 import json, time
 import jax, jax.numpy as jnp, numpy as np
-from repro.core import distributed, ucr
+from repro.core import distributed, engine, ucr
 from repro.data import make_dataset
 
 n_dev = __NDEV__
@@ -45,11 +45,39 @@ t_query = time.perf_counter() - t0
 
 oracle = ucr.search_scan(jnp.asarray(raw), qs)
 exact = bool(np.allclose(res.dist, oracle.dist, rtol=1e-3, atol=1e-3))
+
+# metric axis under sharding (ROADMAP: distributed DTW / cosine) — a
+# smaller dataset keeps the banded DP affordable on fake CPU devices;
+# exactness vs the scan oracles is pinned in tests/test_distributed.py
+raw2 = np.ascontiguousarray(raw[:8192, :128])
+qs2 = jnp.asarray(raw2[rng.choice(len(raw2), 8, replace=False)]
+                  + 0.05 * rng.standard_normal((8, 128)).astype(np.float32))
+sidx2 = distributed.build_sharded(jnp.asarray(raw2), mesh, capacity=512)
+
+def timed(fn):
+    r = fn(); jax.block_until_ready(r.dist)          # compile + warm
+    t0 = time.perf_counter()
+    r = fn(); jax.block_until_ready(r.dist)
+    return time.perf_counter() - t0, r
+
+t_dtw, res_dtw = timed(lambda: distributed.search_sharded(
+    sidx2, qs2, mesh, metric=engine.DTW(r=6)))
+vecs = engine.prep_vectors(jnp.asarray(raw2))
+sidx_v = distributed.build_sharded(vecs, mesh, capacity=512,
+                                   normalize=False)
+t_cos, res_cos = timed(lambda: distributed.search_sharded(
+    sidx_v, qs2, mesh, metric=engine.Cosine()))
+cos_oracle = ucr.search_scan(vecs, engine.prep_vectors(qs2),
+                             normalize=False)
+exact_cos = bool(np.array_equal(np.asarray(res_cos.idx),
+                                np.asarray(cos_oracle.idx)))
+
 print(json.dumps({
     "n_dev": n_dev, "build_s": t_build, "query_s": t_query,
     "exact": exact,
     "refined_total": int(np.sum(np.asarray(res.stats.series_refined))),
     "iters_max": int(np.asarray(res.stats.iters)),
+    "query_s_dtw": t_dtw, "query_s_cos": t_cos, "exact_cos": exact_cos,
 }))
 """
 
@@ -69,9 +97,10 @@ def run(device_counts=(1, 2, 4, 8)) -> list[dict]:
             raise RuntimeError(r.stderr[-2000:])
         rows.append(json.loads(r.stdout.strip().splitlines()[-1]))
         assert rows[-1]["exact"], f"sharded search inexact at {n} devices"
+        assert rows[-1]["exact_cos"], f"sharded cosine inexact at {n} devices"
     print_table("scaling (Fig. 4/5/8/9 axis)", rows,
-                ["n_dev", "build_s", "query_s", "exact", "refined_total",
-                 "iters_max"])
+                ["n_dev", "build_s", "query_s", "query_s_dtw", "query_s_cos",
+                 "exact", "refined_total", "iters_max"])
     write_rows("scaling", rows)
     return rows
 

@@ -2,10 +2,17 @@
 
     PYTHONPATH=src python -m benchmarks.run            # full set
     PYTHONPATH=src python -m benchmarks.run --quick    # reduced sizes
+
+Each family's rows land twice: in ``experiments/bench/<name>.json``
+(the drivers' own output) and as root-level ``BENCH_<name>.json`` in
+the current directory — the same artifact names CI uploads — so a local
+``--quick`` run leaves a comparable perf trajectory behind instead of
+nothing (pass ``--no-artifacts`` to skip the root-level copies).
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 
@@ -13,35 +20,43 @@ import time
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--quick", action="store_true")
+    ap.add_argument("--no-artifacts", action="store_true",
+                    help="skip writing root-level BENCH_*.json copies")
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_build, bench_capacity, bench_dtw,
                             bench_engine, bench_ooc, bench_query,
                             bench_scaling, bench_serve)
 
+    quick_kwargs = {
+        "build": dict(sizes=(20_000,), datasets=("synthetic",)),
+        "query": dict(sizes=(50_000,), datasets=("synthetic",)),
+        "engine": dict(n=10_000, capacity=256),
+        "ooc": dict(sizes=(20_000,), datasets=("synthetic",),
+                    capacity=256, ks=(1, 5)),
+        "serve": dict(n=20_000, n_queries=4, n_batches=4, capacity=256,
+                      cache_blocks=(8, 96)),
+        "dtw": dict(n=5_000),
+        "capacity": dict(n=50_000, capacities=(256, 1024)),
+        "scaling": dict(device_counts=(1, 4)),
+    }
+    families = [
+        ("build", bench_build.run), ("query", bench_query.run),
+        ("engine", bench_engine.run), ("ooc", bench_ooc.run),
+        ("serve", bench_serve.run), ("dtw", bench_dtw.run),
+        ("capacity", bench_capacity.run), ("scaling", bench_scaling.run),
+    ]
+
     t0 = time.time()
-    if args.quick:
-        bench_build.run(sizes=(20_000,), datasets=("synthetic",))
-        bench_query.run(sizes=(50_000,), datasets=("synthetic",))
-        bench_engine.run(n=10_000, capacity=256)
-        bench_ooc.run(sizes=(20_000,), datasets=("synthetic",),
-                      capacity=256, ks=(1, 5))
-        bench_serve.run(n=20_000, n_queries=4, n_batches=4, capacity=256,
-                        cache_blocks=(8, 96))
-        bench_dtw.run(n=5_000)
-        bench_capacity.run(n=50_000, capacities=(256, 1024))
-        bench_scaling.run(device_counts=(1, 4))
-    else:
-        bench_build.run()
-        bench_query.run()
-        bench_engine.run()
-        bench_ooc.run()
-        bench_serve.run()
-        bench_dtw.run()
-        bench_capacity.run()
-        bench_scaling.run()
+    for name, run in families:
+        rows = run(**(quick_kwargs[name] if args.quick else {}))
+        if not args.no_artifacts:
+            path = f"BENCH_{name}.json"
+            with open(path, "w") as f:
+                json.dump(rows, f, indent=1)
+            print(f"wrote {path}")
     print(f"\nall benchmarks done in {time.time() - t0:.0f}s; "
-          f"JSON in experiments/bench/")
+          f"JSON in experiments/bench/ and BENCH_*.json")
     return 0
 
 

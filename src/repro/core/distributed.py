@@ -131,10 +131,14 @@ def search_sharded(sharded_index: BlockIndex, queries: jax.Array, mesh: Mesh,
 
     def _search(local_index, q):
         # round 1: local approximate top-k -> global k-th-best all-reduce
-        _, f_a, _, _ = engine.prepare(m, local_index, q, k)
-        thr_g = jax.lax.pmin(f_a.threshold(), ax)
-        # round 2: exact local search seeded with the global threshold
-        res = engine.run(local_index, q, plan, initial_threshold=thr_g)
+        prep = engine.prepare(m, local_index, q, k)
+        thr_g = jax.lax.pmin(prep.front.threshold(), ax)
+        # round 2: resume from the round-1 prepared state, seeded with
+        # the global threshold — query prep, block ranking, and stage A
+        # are reused, not recomputed (previously this leaned on XLA CSE
+        # to dedup the second engine.prepare inside the shard_map trace)
+        res = engine.run(local_index, q, plan, initial_threshold=thr_g,
+                         prepared=prep)
         # merge: all-gather the (Q, K) shard frontiers -> global top-k
         dist_g, idx_g = _merge_shards(res, ax)
         stats = SearchStats(
@@ -163,15 +167,17 @@ def search_sharded_ooc(sessions: Sequence, queries: jax.Array, *,
     Each session wraps one shard's on-disk index (disjoint series,
     global ids — e.g. built per shard with ``core.build(..., ids=...)``
     and persisted).  Round 1 runs stage A on every shard (fetching only
-    best-envelope blocks, which stay warm in each shard's cache) and
-    min-reduces the k-th-best thresholds; round 2 runs every shard's
-    cached block-major walk seeded with that global bound, so each
-    shard prunes as tightly as the shared-memory BSF would allow;
-    finally the per-shard frontiers merge into the global top-k.
+    best-envelope blocks) and min-reduces the k-th-best thresholds;
+    round 2 RESUMES each shard from its round-1 prepared state
+    (``storage.PreparedRound``), seeded with the global bound: the
+    cached block-major walk skips query prep, block ranking, and every
+    stage-A block — no block is fetched or refined twice per protocol
+    run — while pruning as tightly as the shared-memory BSF would
+    allow; finally the per-shard frontiers merge into the global top-k.
 
     Returns an ``OocSearchResult`` whose stats/io are summed over
     shards; round 1's stage-A disk reads are billed into each shard's
-    round-2 IOStats (SearchSession carries them forward), so
+    round-2 IOStats (the prepared state carries them), so
     ``io.blocks_fetched`` is the protocol's FULL disk cost, directly
     comparable to running the shards blind.  -> global exact top-k,
     identical to a single out-of-core search over the union of the
@@ -186,12 +192,12 @@ def search_sharded_ooc(sessions: Sequence, queries: jax.Array, *,
         raise ValueError("search_sharded_ooc needs at least one session")
     kw = dict(k=k, lb_filter=lb_filter, normalize_queries=normalize_queries,
               metric=metric)
-    # round 1: per-shard stage-A thresholds -> host pmin
-    thr_g = jnp.asarray(np.minimum.reduce(
-        [s.approximate_threshold(queries, **kw) for s in sessions]))
-    # round 2: exact per-shard walks seeded with the global bound
-    results = [s.search(queries, initial_threshold=thr_g, **kw)
-               for s in sessions]
+    # round 1: per-shard stage-A prepared states -> host pmin of thresholds
+    preps = [s.approximate_threshold(queries, **kw) for s in sessions]
+    thr_g = jnp.asarray(np.minimum.reduce([p.threshold for p in preps]))
+    # round 2: per-shard walks resumed from round 1, seeded with the bound
+    results = [s.search(queries, initial_threshold=thr_g, prepared=p, **kw)
+               for s, p in zip(sessions, preps)]
     # merge: per-shard frontiers (sqrt domain, disjoint ids) -> global top-k
     front = Frontier(results[0].dist, results[0].idx)
     for r in results[1:]:

@@ -27,7 +27,9 @@ that skeleton, written once, with each axis pluggable:
 The public drivers (``core.search``, ``core.dtw``, ``core.vector``,
 ``core.paris``, ``storage.SearchSession``) are thin wrappers that
 construct plans; the distributed two-round protocol
-(``core.distributed``) wraps ANY plan.  Every ``Metric.distances``
+(``core.distributed``) wraps ANY plan, with round 1's work captured in
+a resumable ``PreparedSearch`` (``prepare`` / ``run_cached_stage_a``)
+that round 2 (``run`` / ``run_cached``) resumes instead of recomputing.  Every ``Metric.distances``
 call lives in this module: the two pruned refine loops
 (``panel_refine``, shared by both block-major backends, and the
 gathered refine inside ``_query_major``) are where the DESIGN.md §8
@@ -299,6 +301,69 @@ class DTW:
 
 
 # ---------------------------------------------------------------------------
+# prepared round-1 state
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class PreparedSearch:
+    """Round-1 state as a first-class resumable object (DESIGN.md §6).
+
+    Everything the paper's approximate phase produces — metric-prepared
+    queries, the block lower-bound matrix, the stage-A-seeded frontier,
+    and the work stats accrued so far — plus, on the cached backend, the
+    ids of the blocks stage A already fetched and refined.  Produced by
+    ``prepare`` (device) / ``run_cached_stage_a`` (cached); accepted by
+    ``run`` / ``run_cached`` so the two-round distributed protocol's
+    second round skips query prep, block ranking, and every
+    already-refined block instead of recomputing round 1.
+
+    The frontier is a strictly-tighter seed, not a different answer:
+    resuming from it is bit-identical to re-running round 1 under the
+    seeded bound (candidates the global bound would have masked all have
+    ``lb >= threshold`` and so can never displace a reported slot).
+
+    Registered as a pytree with ``refined`` static, so it threads
+    through jitted device code (``run`` donates it — round 2 reuses the
+    round-1 frontier buffers instead of holding both alive).
+    """
+    qs: QueryState
+    front: Frontier
+    block_lb: jax.Array            # (Q, B) metric block lower bounds
+    stats: SearchStats             # work already accrued (stage A)
+    refined: frozenset = frozenset()   # block ids stage A refined (cached)
+
+    @property
+    def k(self) -> int:
+        return self.front.k
+
+
+jax.tree_util.register_dataclass(
+    PreparedSearch,
+    data_fields=("qs", "front", "block_lb", "stats"),
+    meta_fields=("refined",))
+
+
+def _check_prepared(prepared: PreparedSearch, plan: QueryPlan,
+                    n_blocks: int, qn: int) -> None:
+    if prepared.k != plan.k:
+        raise ValueError(f"prepared state holds a k={prepared.k} frontier "
+                         f"but the plan asks k={plan.k}; round 2 must reuse "
+                         "the round-1 plan")
+    if prepared.block_lb.shape[-1] != n_blocks:
+        raise ValueError(
+            f"prepared block_lb ranks {prepared.block_lb.shape[-1]} blocks "
+            f"but this index has {n_blocks}; the prepared state belongs to "
+            "a different index")
+    if prepared.block_lb.shape[0] != qn:
+        raise ValueError(
+            f"prepared state was built for {prepared.block_lb.shape[0]} "
+            f"queries but {qn} were passed; round 2 must reuse the round-1 "
+            "query batch (only the shape is checkable here — binding the "
+            "CONTENT is the caller's job, as storage.SearchSession does "
+            "via its query fingerprint)")
+
+
+# ---------------------------------------------------------------------------
 # plans
 # ---------------------------------------------------------------------------
 
@@ -334,12 +399,17 @@ def _require_device_resident(index: BlockIndex) -> None:
 
 
 def prepare(metric, index: BlockIndex, queries: jax.Array, k: int
-            ) -> tuple[QueryState, Frontier, jax.Array, SearchStats]:
+            ) -> PreparedSearch:
     """Metric prep + block ranking + stage-A seeding (device backend).
 
     The paper's approximate phase, metric-generic: one block-LB kernel
     pass ranks every envelope, then each query's best block is refined
-    exactly and seeds the top-k frontier.
+    exactly and seeds the top-k frontier.  Returns a ``PreparedSearch``
+    the distributed protocol threads into ``run`` as round-2 state
+    (``refined`` stays empty: the device walk keeps revisiting stage-A
+    blocks — a resident panel costs no I/O, and the frontier insert
+    dedups by id — so skipping them would change last-ulp min-of-both
+    distances and break bit-stability with the non-protocol paths).
     """
     _require_device_resident(index)
     qs = metric.prep_queries(queries, w=index.w)
@@ -348,7 +418,8 @@ def prepare(metric, index: BlockIndex, queries: jax.Array, k: int
     b0 = jnp.argmin(block_lb, axis=1)                         # (Q,)
     d0 = metric.distances(qs, index.raw[b0])                  # (Q, C)
     front = frontier_lib.init(qn, k).insert(d0, index.ids[b0])
-    return qs, front, block_lb, frontier_lib.stats_init(qn)
+    return PreparedSearch(qs=qs, front=front, block_lb=block_lb,
+                          stats=frontier_lib.stats_init(qn))
 
 
 def panel_refine(metric, qs: QueryState, front: Frontier, stats: SearchStats,
@@ -552,21 +623,33 @@ def _block_major(metric, index: BlockIndex, qs: QueryState, front: Frontier,
     return front, stats
 
 
-@functools.partial(jax.jit, static_argnames=("plan",))
+@functools.partial(jax.jit, static_argnames=("plan",),
+                   donate_argnames=("prepared",))
 def run(index: BlockIndex, queries: jax.Array, plan: QueryPlan,
-        initial_threshold: jax.Array | None = None):
+        initial_threshold: jax.Array | None = None,
+        prepared: PreparedSearch | None = None):
     """Execute a plan against a device-resident index. -> SearchResult.
 
     ``initial_threshold`` tightens the pruning bound (squared distance)
     — the distributed protocol passes the globally-reduced k-th-best
     here (the paper's shared-BSF variable); it never appears in the
     result, which always holds this index's own top-k.
+
+    ``prepared`` resumes from a round-1 ``PreparedSearch`` (same metric,
+    index, queries, and k — ``prepare`` produces it) instead of paying
+    for query prep, block ranking, and stage A again; it is donated, so
+    the caller must treat it as consumed.
     """
     from repro.core.search import SearchResult   # thin wrapper layer
     if plan.schedule == "flat":
         raise ValueError("the flat schedule scans a FlatIndex — use "
                          "engine.run_flat (or paris.search_flat)")
-    qs, front, block_lb, stats0 = prepare(plan.metric, index, queries, plan.k)
+    if prepared is None:
+        prepared = prepare(plan.metric, index, queries, plan.k)
+    else:
+        _check_prepared(prepared, plan, index.n_blocks, queries.shape[0])
+    qs, front, block_lb, stats0 = (prepared.qs, prepared.front,
+                                   prepared.block_lb, prepared.stats)
     if plan.schedule == "query_major":
         front, stats = _query_major(
             plan.metric, index, qs, front, block_lb, stats0,
@@ -600,7 +683,8 @@ def run_flat(index: FlatIndex, queries: jax.Array, plan: QueryPlan,
     metric = plan.metric
     npad, n = index.raw.shape
     if block_index is not None:
-        qs, front, _, _ = prepare(metric, block_index, queries, plan.k)
+        prep = prepare(metric, block_index, queries, plan.k)
+        qs, front = prep.qs, prep.front
     else:
         qs = metric.prep_queries(queries, w=index.w)
         front = frontier_lib.init(qs.q.shape[0], plan.k)
@@ -673,7 +757,7 @@ def _cached_refine_step(metric, qs, front, stats, block, ids_b, lo, hi, lbs,
 
 
 def cached_setup(index: BlockIndex, queries: jax.Array, plan: QueryPlan
-                 ) -> tuple[QueryState, Frontier, jax.Array, SearchStats]:
+                 ) -> PreparedSearch:
     """Query prep + block ranking for an index whose raw lives off-device.
 
     Only summaries/envelopes are touched (they are device-resident on an
@@ -684,20 +768,22 @@ def cached_setup(index: BlockIndex, queries: jax.Array, plan: QueryPlan
     qs = metric.prep_queries(queries, w=index.w)
     qn = qs.q.shape[0]
     block_lb = metric.block_lb(qs, index.elo, index.ehi, n=index.n)
-    return (qs, frontier_lib.init(qn, plan.k), block_lb,
-            frontier_lib.stats_init(qn))
+    return PreparedSearch(qs=qs, front=frontier_lib.init(qn, plan.k),
+                          block_lb=block_lb,
+                          stats=frontier_lib.stats_init(qn))
 
 
-def _cached_stage_a(index, plan, qs, front, stats, block_lb, block_lb_h,
-                    fetch, speculate, initial_threshold):
+def _cached_stage_a(index, plan, prep: PreparedSearch, block_lb_h,
+                    fetch, speculate, initial_threshold) -> PreparedSearch:
     """Stage A on the cached backend: each query's best-envelope block
     seeds the frontier, pipelined one block ahead so reads overlap the
-    refines.  Returns the refined block ids alongside the new state."""
+    refines.  Returns the state with the refined block ids recorded, so
+    a resumed walk never fetches or refines them again."""
+    qs, front, stats = prep.qs, prep.front, prep.stats
     step = functools.partial(_cached_refine_step, plan.metric,
                              n=index.n, w=index.w)
     needs = plan.metric.filters and plan.metric.needs_bounds
     stage_a = [int(b) for b in np.unique(np.argmin(block_lb_h, axis=1))]
-    done: set[int] = set()
     if stage_a:
         speculate(stage_a[0])
     for i, b in enumerate(stage_a):
@@ -706,15 +792,17 @@ def _cached_stage_a(index, plan, qs, front, stats, block_lb, block_lb_h,
         lo = index.slo[b] if needs else None
         hi = index.shi[b] if needs else None
         front, stats = step(qs, front, stats, fetch(b), index.ids[b],
-                            lo, hi, block_lb[:, b], initial_threshold)
-        done.add(b)
-    return front, stats, done
+                            lo, hi, prep.block_lb[:, b], initial_threshold)
+    return dataclasses.replace(
+        prep, front=front, stats=stats,
+        refined=prep.refined | frozenset(stage_a))
 
 
 def run_cached(index: BlockIndex, queries: jax.Array, plan: QueryPlan, *,
                fetch: Callable[[int], jax.Array],
                speculate: Callable[[int], None] = lambda b: None,
-               initial_threshold: jax.Array | None = None
+               initial_threshold: jax.Array | None = None,
+               prepared: PreparedSearch | None = None
                ) -> tuple[Frontier, SearchStats]:
     """The §5 host-level walk: the block-major schedule driven through a
     fetch callback (``storage.BlockCache`` in production).
@@ -727,6 +815,11 @@ def run_cached(index: BlockIndex, queries: jax.Array, plan: QueryPlan, *,
     only tightens, so it can waste bytes but never wrongly refine.
     Returns the local frontier and stats; I/O accounting belongs to the
     callback owner (the session).
+
+    ``prepared`` resumes from a round-1 ``PreparedSearch`` (produced by
+    ``run_cached_stage_a`` for the same metric, index, queries, and k):
+    query prep, block ranking, and stage A are skipped, and the walk
+    never fetches or refines a block in ``prepared.refined`` again.
     """
     if plan.schedule != "block_major":
         raise ValueError("the cached backend walks the block-major "
@@ -736,16 +829,21 @@ def run_cached(index: BlockIndex, queries: jax.Array, plan: QueryPlan, *,
                          "backend (ROADMAP: anytime semantics for cached "
                          "plans); drop it from the plan or use the "
                          "device-resident backend")
-    qs, front, block_lb, stats = cached_setup(index, queries, plan)
-    block_lb_h = np.asarray(block_lb)
     n_blocks = index.n_blocks
+    if prepared is None:
+        prep = cached_setup(index, queries, plan)
+        prep = _cached_stage_a(index, plan, prep, np.asarray(prep.block_lb),
+                               fetch, speculate, initial_threshold)
+    else:
+        _check_prepared(prepared, plan, n_blocks, queries.shape[0])
+        prep = prepared
+    qs, front, block_lb, stats = (prep.qs, prep.front, prep.block_lb,
+                                  prep.stats)
+    done = prep.refined
+    block_lb_h = np.asarray(block_lb)
     step = functools.partial(_cached_refine_step, plan.metric,
                              n=index.n, w=index.w)
     needs = plan.metric.filters and plan.metric.needs_bounds
-
-    front, stats, done = _cached_stage_a(
-        index, plan, qs, front, stats, block_lb, block_lb_h,
-        fetch, speculate, initial_threshold)
 
     # -- block-major walk over the surviving schedule -----------------
     order, sched_lb, suffix = block_major_schedule(block_lb_h, xp=np)
@@ -788,13 +886,12 @@ def run_cached_stage_a(index: BlockIndex, queries: jax.Array,
                        plan: QueryPlan, *,
                        fetch: Callable[[int], jax.Array],
                        speculate: Callable[[int], None] = lambda b: None
-                       ) -> Frontier:
+                       ) -> PreparedSearch:
     """Stage A only, on the cached backend: the approximate top-k after
     refining each query's best-envelope block.  The distributed
-    out-of-core protocol min-reduces its ``threshold()`` across shards
-    (round 1) before every shard pays for the full walk."""
-    qs, front, block_lb, stats = cached_setup(index, queries, plan)
-    front, _, _ = _cached_stage_a(
-        index, plan, qs, front, stats, block_lb, np.asarray(block_lb),
-        fetch, speculate, None)
-    return front
+    out-of-core protocol min-reduces ``front.threshold()`` across shards
+    (round 1), then threads the returned ``PreparedSearch`` back into
+    ``run_cached`` so round 2 resumes instead of repeating stage A."""
+    prep = cached_setup(index, queries, plan)
+    return _cached_stage_a(index, plan, prep, np.asarray(prep.block_lb),
+                           fetch, speculate, None)

@@ -46,8 +46,12 @@ class SearchStats(NamedTuple):
 
 
 def stats_init(qn: int) -> SearchStats:
-    z = jnp.zeros((qn,), jnp.int32)
-    return SearchStats(blocks_visited=z, series_refined=z, lb_series=z,
+    # three separate zeros buffers, NOT one shared array: the counters
+    # ride inside engine.PreparedSearch, which engine.run donates —
+    # aliased leaves would be the same buffer donated twice
+    return SearchStats(blocks_visited=jnp.zeros((qn,), jnp.int32),
+                       series_refined=jnp.zeros((qn,), jnp.int32),
+                       lb_series=jnp.zeros((qn,), jnp.int32),
                        iters=jnp.zeros((), jnp.int32))
 
 

@@ -1,7 +1,7 @@
 """On-disk index subsystem (DESIGN.md §5): persisted index format,
 two-pass out-of-core build, streaming exact k-NN search, and the
 block-cache serving sessions."""
-from repro.storage.cache import BlockCache, SearchSession
+from repro.storage.cache import BlockCache, PreparedRound, SearchSession
 from repro.storage.format import (SeriesStore, load_index, open_index,
                                   read_meta, save_index)
 from repro.storage.ooc_build import SummaryBuilder, build_on_disk
@@ -11,5 +11,5 @@ __all__ = [
     "SeriesStore", "save_index", "load_index", "open_index", "read_meta",
     "build_on_disk", "SummaryBuilder",
     "ooc_search", "OocSearchResult", "IOStats",
-    "BlockCache", "SearchSession",
+    "BlockCache", "SearchSession", "PreparedRound",
 ]

@@ -36,7 +36,14 @@ count actual disk reads only (each block at most once per batch — a
 second same-batch read could only come from an evict-refetch cycle,
 which the >= 2 capacity floor plus the single outstanding prefetch rule
 out), while ``IOStats.cache_hits`` counts surviving blocks served from
-the cache with zero disk traffic.
+the cache with zero disk traffic.  A two-round protocol run is ONE
+billing unit: ``approximate_threshold`` returns a ``PreparedRound``
+owning round 1's touch-set and disk reads, and the round-2
+``search(..., prepared=...)`` that consumes it resumes that touch-set
+(first touch of a block decides hit vs miss once per protocol run) and
+bills the carried reads — so a block is never both fetched in round 1
+and re-counted as a warm hit in round 2, and an abandoned round 1 can
+never pollute a later, unrelated batch's bill.
 
 ``storage.ooc_search`` is the one-shot form: a throwaway session with a
 small cache, preserving the streaming memory profile of a single batch.
@@ -175,6 +182,47 @@ class BlockCache:
             self._lru.clear()
 
 
+class PreparedRound:
+    """Round-1 state plus its bill, scoped to one protocol run.
+
+    Returned by ``SearchSession.approximate_threshold`` and consumed by
+    exactly one ``SearchSession.search(..., prepared=...)`` on the SAME
+    session.  Holds the engine's resumable ``PreparedSearch`` (frontier,
+    block ranking, refined-block set, accrued stats) together with the
+    session-side accounting round 1 accrued: the disk reads to carry
+    into the consuming batch's ``IOStats`` and the protocol run's
+    touch-set (first touch of a block decides hit vs miss exactly once
+    per run).  If round 2 never runs, the object is simply dropped —
+    its reads are never billed to an unrelated later batch.
+
+    ``np.asarray(prepared)`` (and hence ``np.minimum.reduce`` over
+    shards) yields the (Q,) squared k-th-best threshold.
+    """
+
+    def __init__(self, session: "SearchSession", plan, qsig,
+                 state, carry_blocks: int, carry_bytes: int,
+                 touched: set, hits: int):
+        self.session = session
+        self.plan = plan
+        self.qsig = qsig
+        self.state = state                   # engine.PreparedSearch
+        self.carry_blocks = carry_blocks
+        self.carry_bytes = carry_bytes
+        self.touched = touched
+        self.hits = hits
+        self.consumed = False
+        self.threshold = np.asarray(state.front.threshold())   # (Q,)
+
+    def __array__(self, dtype=None, copy=None):
+        return np.asarray(self.threshold, dtype=dtype)
+
+
+def _query_signature(queries) -> tuple:
+    """Cheap content fingerprint binding a PreparedRound to its batch."""
+    q = np.asarray(queries)
+    return (q.shape, str(q.dtype), hash(q.tobytes()))
+
+
 class SearchSession:
     """Stateful out-of-core serving: one block cache across query batches.
 
@@ -199,11 +247,6 @@ class SearchSession:
         self.batches = 0
         self.cache_hits = 0
         self.blocks_fetched = 0
-        # disk reads performed by approximate_threshold (protocol round 1)
-        # that no batch has billed yet; folded into the next search()'s
-        # IOStats so every read appears in exactly one batch's bill
-        self._carry_blocks = 0
-        self._carry_bytes = 0
 
     @property
     def hit_rate(self) -> float:
@@ -229,33 +272,74 @@ class SearchSession:
     def approximate_threshold(self, queries: jax.Array, *, k: int = 1,
                               lb_filter: bool = True,
                               normalize_queries: bool = True,
-                              metric=None) -> np.ndarray:
-        """(Q,) squared k-th-best distance after stage A only.
+                              metric=None) -> PreparedRound:
+        """Stage A only -> a resumable ``PreparedRound`` (round 1).
 
         Round 1 of the distributed out-of-core protocol
         (``distributed.search_sharded_ooc``): each shard refines just
-        its queries' best-envelope blocks and the thresholds are
-        min-reduced across shards.  The fetched blocks stay in the
-        session cache, so round 2 re-touches them as warm hits; their
-        disk reads are carried into the next ``search()``'s IOStats so
-        the protocol's full I/O cost stays visible (and comparable to a
-        blind single-round search).
+        its queries' best-envelope blocks; ``PreparedRound.threshold``
+        (also ``np.asarray(prepared)``) is the (Q,) squared k-th-best
+        the protocol min-reduces across shards.  Pass the object to
+        ``search(..., prepared=...)`` and round 2 resumes it — no
+        re-prep, no re-ranking, no re-fetch or re-refine of stage-A
+        blocks — with round 1's disk reads billed into that batch's
+        ``IOStats`` and its touch-set continued, so the protocol's full
+        I/O cost lands in exactly one bill, comparable to a blind
+        single-round search.  Dropping the object abandons the round:
+        its reads are billed to no batch.
         """
         plan = self._plan(k, lb_filter, normalize_queries, metric)
-        reads0, bytes0 = self.cache.disk_blocks, self.cache.disk_bytes
-        front = engine.run_cached_stage_a(
-            self.index, queries, plan,
-            fetch=self.cache.get, speculate=self.cache.prefetch)
-        self.cache.drain()
-        self._carry_blocks += self.cache.disk_blocks - reads0
-        self._carry_bytes += self.cache.disk_bytes - bytes0
-        return np.asarray(front.threshold())
+        cache = self.cache
+        reads0, bytes0 = cache.disk_blocks, cache.disk_bytes
+        touched: set[int] = set()
+        hits = 0
+
+        def touch(b: int) -> None:
+            nonlocal hits
+            if b not in touched:
+                touched.add(b)
+                if b in cache:
+                    hits += 1
+
+        def fetch(b: int) -> jax.Array:
+            touch(b)
+            return cache.get(b)
+
+        def speculate(b: int) -> None:
+            touch(b)
+            cache.prefetch(b)
+
+        state = engine.run_cached_stage_a(
+            self.index, queries, plan, fetch=fetch, speculate=speculate)
+        cache.drain()
+        return PreparedRound(self, plan, _query_signature(queries), state,
+                             carry_blocks=cache.disk_blocks - reads0,
+                             carry_bytes=cache.disk_bytes - bytes0,
+                             touched=touched, hits=hits)
+
+    def _check_prepared(self, prepared: PreparedRound, plan, qsig) -> None:
+        if prepared.session is not self:
+            raise ValueError("prepared round belongs to a different "
+                             "SearchSession — round 2 must run on the "
+                             "session whose approximate_threshold made it")
+        if prepared.consumed:
+            raise ValueError("prepared round already consumed — each "
+                             "PreparedRound resumes exactly one search()")
+        if prepared.plan != plan:
+            raise ValueError(f"prepared round was built for plan "
+                             f"{prepared.plan} but search() asks {plan}; "
+                             "k/metric/lb_filter must match round 1")
+        if prepared.qsig != qsig:
+            raise ValueError("prepared round was built for a different "
+                             "query batch — its frontier and block "
+                             "ranking do not apply to these queries")
 
     def search(self, queries: jax.Array, *, k: int = 1,
                lb_filter: bool = True,
                normalize_queries: bool = True,
                metric=None,
-               initial_threshold: jax.Array | None = None
+               initial_threshold: jax.Array | None = None,
+               prepared: PreparedRound | None = None
                ) -> OocSearchResult:
         """Exact k-NN for one (Q, n) query batch through the cache.
 
@@ -268,17 +352,30 @@ class SearchSession:
         ``initial_threshold`` (squared) seeds the pruning bound — the
         distributed protocol passes the globally-reduced k-th best; it
         never appears in the result, which holds this shard's own top-k.
+        ``prepared`` resumes a round-1 ``PreparedRound`` from this
+        session's ``approximate_threshold`` (same queries and plan):
+        the walk skips stage A entirely and this batch's ``IOStats``
+        bills round 1's reads and continues its touch-set.
         """
         index, cache = self.index, self.cache
         host = index.host_raw
         plan = self._plan(k, lb_filter, normalize_queries, metric)
 
-        # per-batch accounting: the first touch of each block id decides
+        # per-run accounting: the first touch of each block id decides
         # hit vs miss; later touches (a get() after its own prefetch) are
-        # the same block and count nothing
+        # the same block and count nothing.  A resumed round 2 continues
+        # round 1's touch-set — one touch-set per protocol run, so a
+        # block round 1 fetched can never be re-counted as a warm hit.
+        if prepared is not None:
+            self._check_prepared(prepared, plan, _query_signature(queries))
+            prepared.consumed = True
+            seen, hits = prepared.touched, prepared.hits
+            carry_blocks, carry_bytes = (prepared.carry_blocks,
+                                         prepared.carry_bytes)
+        else:
+            seen, hits = set(), 0
+            carry_blocks = carry_bytes = 0
         reads0, bytes0 = cache.disk_blocks, cache.disk_bytes
-        seen: set[int] = set()
-        hits = 0
 
         def touch(b: int) -> None:
             nonlocal hits
@@ -297,16 +394,16 @@ class SearchSession:
 
         front, stats = engine.run_cached(
             index, queries, plan, fetch=fetch, speculate=speculate,
-            initial_threshold=initial_threshold)
+            initial_threshold=initial_threshold,
+            prepared=None if prepared is None else prepared.state)
 
         cache.drain()   # settle the last speculation into this batch's bill
-        fetched = cache.disk_blocks - reads0 + self._carry_blocks
-        io = IOStats(bytes_read=cache.disk_bytes - bytes0 + self._carry_bytes,
+        fetched = cache.disk_blocks - reads0 + carry_blocks
+        io = IOStats(bytes_read=cache.disk_bytes - bytes0 + carry_bytes,
                      bytes_scan=index.n_real * index.n * host.dtype.itemsize,
                      blocks_fetched=fetched,
                      blocks_total=index.n_blocks,
                      cache_hits=hits)
-        self._carry_blocks = self._carry_bytes = 0
         self.batches += 1
         self.cache_hits += hits
         self.blocks_fetched += fetched

@@ -31,7 +31,12 @@ let repeated traffic hit the cache.
 paper's pruning claim: an indexed query answers exactly while reading a
 small fraction of the raw bytes a scan would.  ``cache_hits`` keeps that
 claim measurable under caching, by separating blocks that survived
-pruning but cost no disk traffic.
+pruning but cost no disk traffic.  In the two-round distributed
+protocol (``distributed.search_sharded_ooc``), one protocol run is one
+billing unit: round 1 returns a ``storage.PreparedRound`` whose reads
+and touch-set the consuming round-2 ``search`` bills, so the stage-A
+blocks appear once as reads — never again as round-2 warm hits — and
+an abandoned round 1 is billed to no batch.
 """
 from __future__ import annotations
 

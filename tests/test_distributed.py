@@ -167,6 +167,114 @@ print("OK", losses)
 """)
 
 
+def test_sharded_search_bit_identical_to_noreuse_protocol():
+    """Round-1 reuse regression: threading the prepared state into
+    ``engine.run`` must answer bit-for-bit — dist, idx, AND stats —
+    what the PR-4 wrapper (round 2 recomputing ``engine.prepare``)
+    answers."""
+    run_subprocess("""
+import functools, jax, jax.numpy as jnp, numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.compat import shard_map
+from repro.core import distributed, engine
+from repro.core.search import SearchResult, SearchStats
+mesh = jax.make_mesh((8,), ("data",))
+rng = np.random.default_rng(17)
+raw = np.cumsum(rng.standard_normal((2048, 128)).astype(np.float32), axis=1)
+qs = jnp.asarray(np.cumsum(
+    rng.standard_normal((5, 128)).astype(np.float32), axis=1))
+sidx = distributed.build_sharded(jnp.asarray(raw), mesh, capacity=64)
+
+k = 5
+m = engine.ED()
+plan = engine.QueryPlan(metric=m, schedule="block_major", k=k)
+ax = ("data",)
+
+def _search_noreuse(local_index, q):
+    # the PR-4 protocol body: round 2 re-prepares instead of resuming
+    prep = engine.prepare(m, local_index, q, k)
+    thr_g = jax.lax.pmin(prep.front.threshold(), ax)
+    res = engine.run(local_index, q, plan, initial_threshold=thr_g)
+    dist_g, idx_g = distributed._merge_shards(res, ax)
+    stats = SearchStats(
+        blocks_visited=jax.lax.psum(res.stats.blocks_visited, ax),
+        series_refined=jax.lax.psum(res.stats.series_refined, ax),
+        lb_series=jax.lax.psum(res.stats.lb_series, ax),
+        iters=jax.lax.pmax(res.stats.iters, ax))
+    return SearchResult(dist=dist_g, idx=idx_g, stats=stats)
+
+specs = distributed.index_pspecs(mesh, like=sidx)
+out = SearchResult(dist=P(None), idx=P(None),
+                   stats=SearchStats(blocks_visited=P(None),
+                                     series_refined=P(None),
+                                     lb_series=P(None), iters=P()))
+old = shard_map(_search_noreuse, mesh=mesh, in_specs=(specs, P(None)),
+                out_specs=out, check_vma=False)(sidx, qs)
+new = distributed.search_sharded(sidx, qs, mesh, k=k)
+assert np.array_equal(np.asarray(new.idx), np.asarray(old.idx))
+assert np.array_equal(np.asarray(new.dist), np.asarray(old.dist))
+for g, w in zip(new.stats, old.stats):
+    assert np.array_equal(np.asarray(g), np.asarray(w))
+print("OK")
+""")
+
+
+def test_sharded_dtw_exact_vs_scan_oracle():
+    """ROADMAP cell: ``search_sharded(..., metric=DTW(r))`` — exact vs a
+    brute-force banded-DTW scan, under shard_map, k in {1, 5, 32}."""
+    run_subprocess("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import distributed, engine, isax
+from repro.core import frontier as frontier_lib
+mesh = jax.make_mesh((8,), ("data",))
+rng = np.random.default_rng(19)
+raw = np.cumsum(rng.standard_normal((1024, 64)).astype(np.float32), axis=1)
+qs = jnp.asarray(raw[rng.choice(1024, 4, replace=False)]
+                 + 0.1 * rng.standard_normal((4, 64)).astype(np.float32))
+sidx = distributed.build_sharded(jnp.asarray(raw), mesh, capacity=32)
+r = 4
+x = isax.znorm(jnp.asarray(raw))
+q = isax.znorm(qs)
+d = engine.dtw_band(q[:, None, :], x[None, :, :], r)       # (Q, N) squared
+ids = jnp.broadcast_to(jnp.arange(1024, dtype=jnp.int32)[None], d.shape)
+for k in (1, 5, 32):
+    want = frontier_lib.init(q.shape[0], k).insert(d, ids)
+    res = distributed.search_sharded(sidx, qs, mesh, k=k,
+                                     metric=engine.DTW(r=r))
+    assert np.array_equal(np.asarray(res.idx), np.asarray(want.ids)), k
+    assert np.allclose(np.asarray(res.dist),
+                       np.sqrt(np.asarray(want.dists)),
+                       rtol=1e-4, atol=1e-4), k
+print("OK")
+""")
+
+
+def test_sharded_cosine_exact_vs_scan_oracle():
+    """ROADMAP cell: ``search_sharded(..., metric=Cosine())`` over a
+    sharded vector index built with normalize=False — exact vs the
+    brute-force scan on prepped embeddings, k in {1, 5, 32}."""
+    run_subprocess("""
+import jax, jax.numpy as jnp, numpy as np
+from repro.core import distributed, engine, ucr
+mesh = jax.make_mesh((8,), ("data",))
+rng = np.random.default_rng(23)
+embs = jnp.asarray(rng.standard_normal((1024, 64)).astype(np.float32))
+qs = jnp.asarray(rng.standard_normal((4, 64)).astype(np.float32))
+prepped = engine.prep_vectors(embs)
+sidx = distributed.build_sharded(prepped, mesh, capacity=32,
+                                 normalize=False)
+for k in (1, 5, 32):
+    res = distributed.search_sharded(sidx, qs, mesh, k=k,
+                                     metric=engine.Cosine())
+    want = ucr.search_scan(prepped, engine.prep_vectors(qs), k=k,
+                           normalize=False)
+    assert np.array_equal(np.asarray(res.idx), np.asarray(want.idx)), k
+    assert np.allclose(np.asarray(res.dist), np.asarray(want.dist),
+                       rtol=1e-4, atol=1e-4), k
+print("OK")
+""")
+
+
 def test_anytime_deadline_under_shards():
     run_subprocess("""
 import jax, jax.numpy as jnp, numpy as np

@@ -1,0 +1,308 @@
+"""Two-round protocol round-1 reuse (DESIGN.md §6, ROADMAP "Reuse
+round-1 prepare in round 2").
+
+Round 2 resumes the round-1 ``PreparedSearch``/``PreparedRound`` instead
+of recomputing it, so per protocol run: no block is fetched or refined
+twice, answers stay bit-identical to the no-reuse protocol, the
+touch-set is unified (no spurious round-2 warm hits), and round-1 reads
+are billed to the consuming batch only — an abandoned round 1 cannot
+pollute a later batch's ``IOStats``.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+import repro.core as core
+from repro import storage
+from repro.core import distributed, engine
+from repro.core import frontier as frontier_lib
+from repro.core.ucr import search_scan
+from repro.data import random_walk
+
+KS = (1, 5, 32)
+N, LEN, CAP = 2048, 128, 64
+
+
+@pytest.fixture(scope="module")
+def data():
+    raw = random_walk(N, LEN, seed=31)
+    rng = np.random.default_rng(7)
+    qs = jnp.asarray(raw[rng.choice(N, 5, replace=False)]
+                     + 0.05 * rng.standard_normal((5, LEN))
+                     .astype(np.float32))
+    return raw, qs
+
+
+@pytest.fixture(scope="module")
+def shard_paths(data, tmp_path_factory):
+    raw, _ = data
+    base = tmp_path_factory.mktemp("protocol")
+    half = N // 2
+    paths = []
+    for s in range(2):
+        ids = jnp.arange(s * half, (s + 1) * half, dtype=jnp.int32)
+        sidx = core.build(jnp.asarray(raw[s * half:(s + 1) * half]),
+                          capacity=CAP, ids=ids)
+        path = base / f"shard{s}.dsix"
+        storage.save_index(sidx, path)
+        paths.append(path)
+    return paths
+
+
+def _sessions(paths, cache_blocks=8):
+    return [storage.SearchSession(storage.open_index(p),
+                                  cache_blocks=cache_blocks)
+            for p in paths]
+
+
+def _noreuse_protocol(sessions, qs, k):
+    """The PR-4 protocol shape: threshold only, round 2 re-runs stage A."""
+    thr_g = jnp.asarray(np.minimum.reduce(
+        [np.asarray(s.approximate_threshold(qs, k=k)) for s in sessions]))
+    results = [s.search(qs, k=k, initial_threshold=thr_g) for s in sessions]
+    front = frontier_lib.Frontier(results[0].dist, results[0].idx)
+    for r in results[1:]:
+        front = frontier_lib.merge(front, frontier_lib.Frontier(r.dist,
+                                                                r.idx))
+    return front, results
+
+
+class _Spy:
+    """Count per-session cache touches and host-level refine dispatches."""
+
+    def __init__(self, monkeypatch, sessions):
+        self.gets: dict[int, list[int]] = {i: [] for i in
+                                           range(len(sessions))}
+        self.refines = 0
+        for i, s in enumerate(sessions):
+            orig = s.cache.get
+            monkeypatch.setattr(
+                s.cache, "get",
+                lambda b, _o=orig, _log=self.gets[i]: (_log.append(int(b)),
+                                                       _o(b))[1])
+        orig_step = engine._cached_refine_step
+
+        def counting_step(*a, **kw):
+            self.refines += 1
+            return orig_step(*a, **kw)
+
+        monkeypatch.setattr(engine, "_cached_refine_step", counting_step)
+
+
+# ---------------------------------------------------------------------------
+# bit-stability: reuse is a strictly-tighter seed, not a different answer
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("k", KS)
+def test_ooc_protocol_bit_identical_to_noreuse(data, shard_paths, k):
+    """``search_sharded_ooc`` (round-1 reuse) must answer bit-for-bit
+    what the PR-4-shaped protocol (threshold only, stage A re-run in
+    round 2) answers — and both must match the scan oracle's ids."""
+    raw, qs = data
+    reuse = _sessions(shard_paths)
+    noreuse = _sessions(shard_paths)
+    try:
+        got = distributed.search_sharded_ooc(reuse, qs, k=k)
+        front, _ = _noreuse_protocol(noreuse, qs, k)
+    finally:
+        for s in reuse + noreuse:
+            s.close()
+    assert np.array_equal(np.asarray(got.idx), np.asarray(front.ids))
+    assert np.array_equal(np.asarray(got.dist), np.asarray(front.dists))
+    want = search_scan(jnp.asarray(raw), qs, k=k)
+    assert np.array_equal(np.asarray(got.idx), np.asarray(want.idx))
+
+
+# ---------------------------------------------------------------------------
+# no double work: each block fetched and refined at most once per run
+# ---------------------------------------------------------------------------
+
+def test_no_block_refined_twice_per_protocol_run(data, shard_paths,
+                                                 monkeypatch):
+    """Per protocol run and per shard, every block id reaches the cache
+    (and hence a ``panel_refine`` dispatch) at most once — round 2 never
+    re-touches a stage-A block — and the host-level refine-step count is
+    exactly the number of distinct blocks touched, i.e. the stats of a
+    single-pass walk."""
+    _, qs = data
+    sessions = _sessions(shard_paths)
+    spy = _Spy(monkeypatch, sessions)
+    try:
+        res = distributed.search_sharded_ooc(sessions, qs, k=5)
+    finally:
+        for s in sessions:
+            s.close()
+    total = 0
+    for i, gets in spy.gets.items():
+        counts = np.bincount(gets)
+        assert counts.max() <= 1, \
+            f"shard {i}: block(s) fetched twice in one protocol run: " \
+            f"{np.nonzero(counts > 1)[0].tolist()}"
+        total += len(gets)
+    assert spy.refines == total
+    # a refined block is billed exactly once: as a read or a warm hit
+    assert res.io.blocks_fetched + res.io.cache_hits == total
+
+
+def test_round2_never_rereads_stage_a_blocks(data, shard_paths,
+                                             monkeypatch):
+    """Zero round-2 re-reads of stage-A blocks: the blocks recorded in
+    the round-1 prepared state never reach the cache again during the
+    consuming search."""
+    _, qs = data
+    sessions = _sessions(shard_paths)
+    try:
+        preps = [s.approximate_threshold(qs, k=5) for s in sessions]
+        thr_g = jnp.asarray(np.minimum.reduce([p.threshold for p in preps]))
+        spy = _Spy(monkeypatch, sessions)        # instrument round 2 only
+        for s, p in zip(sessions, preps):
+            s.search(qs, k=5, initial_threshold=thr_g, prepared=p)
+        for i, (s, p) in enumerate(zip(sessions, preps)):
+            stage_a = set(p.state.refined)
+            assert stage_a, "stage A refined no blocks?"
+            again = stage_a & set(spy.gets[i])
+            assert not again, \
+                f"shard {i}: round 2 re-read stage-A block(s) {again}"
+    finally:
+        for s in sessions:
+            s.close()
+
+
+def test_protocol_strictly_fewer_refines_than_noreuse(data, shard_paths,
+                                                      monkeypatch):
+    """The reuse win, counted: the no-reuse protocol dispatches one
+    extra refine per stage-A block (it refines them again in round 2 as
+    warm cache hits); reuse drops exactly those."""
+    _, qs = data
+    reuse = _sessions(shard_paths)
+    spy_new = _Spy(monkeypatch, reuse)
+    try:
+        distributed.search_sharded_ooc(reuse, qs, k=5)
+    finally:
+        for s in reuse:
+            s.close()
+    monkeypatch.undo()
+    noreuse = _sessions(shard_paths)
+    spy_old = _Spy(monkeypatch, noreuse)
+    try:
+        _noreuse_protocol(noreuse, qs, k=5)
+    finally:
+        for s in noreuse:
+            s.close()
+    assert spy_new.refines < spy_old.refines
+    # old pays every stage-A block twice; reuse exactly removes those
+    doubles = sum(np.sum(np.bincount(g) > 1) for g in spy_old.gets.values())
+    assert spy_new.refines == spy_old.refines - doubles
+
+
+# ---------------------------------------------------------------------------
+# accounting: one touch-set and one bill per protocol run
+# ---------------------------------------------------------------------------
+
+def test_protocol_and_blind_run_report_same_accounting(shard_paths, data):
+    """hit_rate skew regression: a single-shard protocol run is
+    semantically identical to a blind ``search`` (its own threshold is
+    the global one), so the session counters — hits, fetches, hit_rate —
+    and the work stats must agree exactly.  Pre-fix, the protocol
+    counted every stage-A block once more as a round-2 warm hit and
+    re-billed its stage-A work in the stats."""
+    _, qs = data
+    with _sessions(shard_paths[:1])[0] as proto, \
+            _sessions(shard_paths[:1])[0] as blind:
+        for _ in range(2):                       # cold batch, then warm
+            prep = proto.approximate_threshold(qs, k=5)
+            r_p = proto.search(qs, k=5,
+                               initial_threshold=jnp.asarray(prep.threshold),
+                               prepared=prep)
+            r_b = blind.search(qs, k=5)
+            assert np.array_equal(np.asarray(r_p.idx), np.asarray(r_b.idx))
+            assert r_p.io.blocks_fetched == r_b.io.blocks_fetched
+            assert r_p.io.cache_hits == r_b.io.cache_hits
+            assert r_p.io.bytes_read == r_b.io.bytes_read
+            for g, w in zip(r_p.stats, r_b.stats):
+                assert np.array_equal(np.asarray(g), np.asarray(w))
+        assert proto.hit_rate == blind.hit_rate
+        assert proto.cache_hits == blind.cache_hits
+        assert proto.blocks_fetched == blind.blocks_fetched
+
+
+def test_abandoned_round1_does_not_pollute_next_batch(shard_paths, data):
+    """Carry-forward leakage regression: reads from a round 1 whose
+    round 2 never runs are scoped to the dropped PreparedRound, not
+    billed to the next unrelated batch."""
+    raw, qs = data
+    rng = np.random.default_rng(41)
+    other = jnp.asarray(raw[rng.choice(N, 4, replace=False)]
+                        + 0.05 * rng.standard_normal((4, LEN))
+                        .astype(np.float32))
+    with _sessions(shard_paths[:1])[0] as sess, \
+            _sessions(shard_paths[:1])[0] as ref:
+        abandoned = sess.approximate_threshold(qs, k=5)
+        assert abandoned.carry_blocks > 0        # round 1 did read disk
+        res = sess.search(other, k=5)            # unrelated batch
+        want = ref.search(other, k=5)            # no round 1 before it
+        assert np.array_equal(np.asarray(res.idx), np.asarray(want.idx))
+        # the abandoned reads appear in NO batch's bill...
+        assert res.io.blocks_fetched + res.io.cache_hits \
+            <= want.io.blocks_fetched
+        assert res.io.bytes_read <= want.io.bytes_read
+        # ...but the disk truly paid them (cache-level cumulative)
+        assert sess.cache.disk_blocks \
+            == res.io.blocks_fetched + abandoned.carry_blocks
+
+
+def test_consumed_bill_includes_round1_reads(shard_paths, data):
+    """The consuming batch's IOStats is the protocol's FULL disk cost:
+    round-1 reads + round-2 reads, each block once."""
+    _, qs = data
+    with _sessions(shard_paths[:1])[0] as sess:
+        prep = sess.approximate_threshold(qs, k=5)
+        r1_reads = prep.carry_blocks
+        assert r1_reads > 0
+        res = sess.search(qs, k=5, prepared=prep)
+        assert res.io.blocks_fetched == sess.cache.disk_blocks
+        assert res.io.blocks_fetched >= r1_reads
+        assert res.io.bytes_read \
+            == res.io.blocks_fetched * sess.index.host_raw.block_nbytes
+
+
+# ---------------------------------------------------------------------------
+# prepared-state validation
+# ---------------------------------------------------------------------------
+
+def test_prepared_round_misuse_is_loud(shard_paths, data):
+    raw, qs = data
+    with _sessions(shard_paths[:1])[0] as sess, \
+            _sessions(shard_paths[1:])[0] as other_sess:
+        prep = sess.approximate_threshold(qs, k=5)
+        with pytest.raises(ValueError, match="different SearchSession"):
+            other_sess.search(qs, k=5, prepared=prep)
+        with pytest.raises(ValueError, match="k/metric"):
+            sess.search(qs, k=3, prepared=prep)
+        other_qs = jnp.asarray(np.asarray(qs) + 1.0)
+        with pytest.raises(ValueError, match="different query batch"):
+            sess.search(other_qs, k=5, prepared=prep)
+        sess.search(qs, k=5, prepared=prep)      # the one valid consume
+        with pytest.raises(ValueError, match="already consumed"):
+            sess.search(qs, k=5, prepared=prep)
+
+
+def test_engine_prepared_validation(shard_paths, data):
+    _, qs = data
+    opened = storage.open_index(shard_paths[0])
+    with storage.SearchSession(opened, cache_blocks=8) as sess:
+        prep = sess.approximate_threshold(qs, k=5)
+        with pytest.raises(ValueError, match="k="):
+            engine.run_cached(opened, qs, engine.QueryPlan(k=3),
+                              fetch=sess.cache.get, prepared=prep.state)
+
+
+def test_device_run_rejects_mismatched_prepared(data):
+    raw, qs = data
+    idx = core.build(jnp.asarray(raw), capacity=CAP)
+    prep = engine.prepare(engine.ED(), idx, qs, 5)
+    with pytest.raises(ValueError, match="k="):
+        engine.run(idx, qs, engine.QueryPlan(k=3), None, prep)
+    with pytest.raises(ValueError, match="queries"):
+        engine.run(idx, qs[:2], engine.QueryPlan(k=5), None, prep)
