@@ -1,0 +1,201 @@
+"""Fused refine kernels (DESIGN.md §8): per-site fused-vs-unfused wall
+time and HBM-traffic estimates, with exactness asserted at every site.
+
+Four sites, mirroring where core/engine.py swapped the kernels in:
+
+  * ``panel_refine`` (ED, block-major): unfused LB panel -> mask ->
+    distance panel -> (K+C)-wide frontier insert, vs the fused
+    ``ops.fused_panel_topk`` + ``insert_topk`` (2k-wide merge);
+  * the flat-chunk select (``run_flat`` / stage-A seeding): full-panel
+    ``insert_batch`` vs ``ops.block_topk`` + ``insert_topk``;
+  * the banded-DTW panel: the lax.scan wavefront (the oracle, what XLA
+    compiles on CPU) vs the Pallas wavefront kernel in interpret mode —
+    a correctness assert, bit-for-bit (compiled-Pallas speed needs a
+    TPU; interpret timings measure the emulator, so they are reported
+    but not a speed claim);
+  * the DTW x flat driver cell (``dtw.search_dtw_flat`` vs the
+    query-major ``search_dtw``), closing the bench matrix.
+
+The select-fusion win is mode-independent: whatever computes the
+distances, the frontier merge drops from sorting K+C candidates per
+block to 2k, and the (Q, C) panels stop round-tripping through HBM —
+the ``hbm_bytes_*`` columns estimate that traffic (f32 panels, f32+i32
+candidate pairs)."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+import repro.core as core
+from benchmarks.common import BenchRunner, print_table, timeit, write_rows
+from repro.core import dtw as D
+from repro.core import engine, isax
+from repro.core import frontier as frontier_lib
+from repro.core.frontier import INF
+from repro.data import make_dataset
+from repro.kernels import ops
+
+
+def _panel_inputs(n_series, length, n_queries, w=16, seed=7):
+    raw = jnp.asarray(make_dataset("synthetic", n_series, length))
+    rng = np.random.default_rng(seed)
+    qs = jnp.asarray(np.asarray(raw[rng.choice(n_series, n_queries,
+                                               replace=False)])
+                     + 0.05 * rng.standard_normal(
+                         (n_queries, length)).astype(np.float32))
+    xn, qn = isax.znorm(raw), isax.znorm(qs)
+    _, _, bounds = isax.summarize(xn, w=w)
+    return (qn, isax.paa(qn, w), xn, bounds[..., 0].T, bounds[..., 1].T,
+            jnp.arange(n_series, dtype=jnp.int32))
+
+
+def _bench_panel_refine(n_series, length, n_queries, k):
+    q, q_paa, x, lo, hi, ids = _panel_inputs(n_series, length, n_queries)
+    qn, c = q.shape[0], x.shape[0]
+    thr = jnp.full((qn,), 0.25 * length, jnp.float32)  # realistic pruning
+    f0 = frontier_lib.init(qn, k)
+
+    @jax.jit
+    def unfused(f):
+        w = q_paa.shape[-1]
+        qe = q_paa[:, :, None]
+        dd = jnp.maximum(jnp.maximum(lo[None] - qe, qe - hi[None]), 0.0)
+        lb = (length / w) * jnp.sum(dd * dd, axis=1)        # (Q, C) panel
+        live = (lb < thr[:, None]) & (ids >= 0)[None, :]
+        d = jnp.where(live, ops.batch_l2(q, x), INF)        # (Q, C) panel
+        return f.insert(d, jnp.where(live, ids[None, :], -1))
+
+    @jax.jit
+    def fused(f):
+        sd, si, _ = ops.fused_panel_topk(q, q_paa, x, lo, hi, ids, thr,
+                                         k=k, n=length)
+        return f.insert_topk(sd, si)
+
+    t_u, f_u = timeit(unfused, f0)
+    t_f, f_f = timeit(fused, f0)
+    assert np.array_equal(np.asarray(f_u.dists), np.asarray(f_f.dists))
+    assert np.array_equal(np.asarray(f_u.ids), np.asarray(f_f.ids))
+    return {
+        "site": "panel_refine_ed", "Q": qn, "C": c, "k": k,
+        "mode": ops.get_mode(),
+        "unfused_ms": t_u * 1e3, "fused_ms": t_f * 1e3,
+        "speedup": t_u / t_f,
+        "sort_width_unfused": k + c, "sort_width_fused": 2 * k,
+        "hbm_bytes_unfused": 2 * qn * c * 4 + qn * (k + c) * 8,
+        "hbm_bytes_fused": qn * k * 8 + qn * 4 + qn * 2 * k * 8,
+        "exact": True,
+    }
+
+
+def _bench_flat_select(n_series, length, n_queries, k):
+    q, _, x, _, _, ids = _panel_inputs(n_series, length, n_queries, seed=8)
+    qn, c = q.shape[0], x.shape[0]
+    d = ops.batch_l2(q, x)
+    idm = jnp.broadcast_to(ids[None, :], (qn, c))
+    f0 = frontier_lib.init(qn, k)
+
+    full = jax.jit(lambda f: f.insert(d, idm))
+    sel = jax.jit(lambda f: f.insert_topk(*ops.block_topk(d, idm, k)))
+    t_u, f_u = timeit(full, f0)
+    t_f, f_f = timeit(sel, f0)
+    assert np.array_equal(np.asarray(f_u.dists), np.asarray(f_f.dists))
+    assert np.array_equal(np.asarray(f_u.ids), np.asarray(f_f.ids))
+    return {
+        "site": "flat_chunk_select", "Q": qn, "C": c, "k": k,
+        "mode": ops.get_mode(),
+        "unfused_ms": t_u * 1e3, "fused_ms": t_f * 1e3,
+        "speedup": t_u / t_f,
+        "sort_width_unfused": k + c, "sort_width_fused": 2 * k,
+        "hbm_bytes_unfused": qn * (k + c) * 8,
+        "hbm_bytes_fused": qn * 2 * k * 8,
+        "exact": True,
+    }
+
+
+def _bench_dtw_panel(n_series, length, n_queries, r):
+    from repro.kernels.dtw_band import dtw_band_panel
+    from repro.kernels import ref
+    q, _, x, _, _, _ = _panel_inputs(n_series, length, n_queries, seed=9)
+    scan = jax.jit(lambda: ref.dtw_band_ref(q[:, None, :], x[None], r))
+    kern = functools.partial(dtw_band_panel, q, x, r=r, interpret=True)
+    t_scan, d_scan = timeit(scan)
+    t_kern, d_kern = timeit(kern, warmup=1, iters=1)
+    assert np.array_equal(np.asarray(d_scan), np.asarray(d_kern)), \
+        "DTW wavefront kernel must be bit-identical to the scan"
+    return {
+        "site": "dtw_band_panel", "Q": q.shape[0], "C": x.shape[0],
+        "k": "-", "mode": "interpret-vs-ref",
+        "unfused_ms": t_scan * 1e3, "fused_ms": t_kern * 1e3,
+        "speedup": t_scan / t_kern,
+        "sort_width_unfused": "-", "sort_width_fused": "-",
+        "hbm_bytes_unfused": 3 * q.shape[0] * x.shape[0] * length * 4,
+        "hbm_bytes_fused": q.shape[0] * x.shape[0] * 4,
+        "exact": True,
+    }
+
+
+def _bench_dtw_flat_cell(n_series, length, n_queries, k, r):
+    raw = jnp.asarray(make_dataset("synthetic", n_series, length))
+    rng = np.random.default_rng(11)
+    qs = jnp.asarray(np.asarray(raw[rng.choice(n_series, n_queries,
+                                               replace=False)])
+                     + 0.05 * rng.standard_normal(
+                         (n_queries, length)).astype(np.float32))
+    idx = core.build(raw, capacity=min(256, n_series))
+    fidx = core.build_flat(raw)
+    t_qm, r_qm = timeit(D.search_dtw, idx, qs, r=r, k=k, iters=2)
+    t_fl, r_fl = timeit(D.search_dtw_flat, fidx, qs, r=r, k=k,
+                        block_index=idx, iters=2)
+    assert np.array_equal(np.asarray(r_qm.idx), np.asarray(r_fl.idx)), \
+        "DTW x flat must return the query-major cell's exact ids"
+    np.testing.assert_allclose(np.asarray(r_qm.dist), np.asarray(r_fl.dist),
+                               rtol=1e-5, atol=1e-5)
+    return {
+        "site": "dtw_x_flat_driver", "Q": n_queries, "C": n_series, "k": k,
+        "mode": ops.get_mode(),
+        "unfused_ms": t_qm * 1e3, "fused_ms": t_fl * 1e3,
+        "speedup": t_qm / t_fl,
+        "sort_width_unfused": "-", "sort_width_fused": 2 * k,
+        "hbm_bytes_unfused": "-", "hbm_bytes_fused": "-",
+        "exact": True,
+    }
+
+
+def run(n_series: int = 8192, length: int = 128, n_queries: int = 16,
+        k: int = 10, r: int = 6, dtw_series: int = 512,
+        dtw_flat_series: int = 2048) -> list[dict]:
+    rows = [
+        _bench_panel_refine(n_series, length, n_queries, k),
+        _bench_flat_select(n_series, length, n_queries, k),
+        _bench_dtw_panel(dtw_series, 64, min(4, n_queries), r),
+        _bench_dtw_flat_cell(dtw_flat_series, 64, min(4, n_queries), k, r),
+    ]
+    print_table("fused refine kernels (DESIGN.md SS8)", rows,
+                ["site", "Q", "C", "k", "mode", "unfused_ms", "fused_ms",
+                 "speedup", "sort_width_unfused", "sort_width_fused",
+                 "hbm_bytes_unfused", "hbm_bytes_fused", "exact"])
+    write_rows("kernels", rows)
+    return rows
+
+
+def main(argv=None) -> int:
+    return (BenchRunner(__doc__)
+            .arg("--size", type=int, default=8192)
+            .arg("--length", type=int, default=128)
+            .arg("--queries", type=int, default=16)
+            .arg("--k", type=int, default=10)
+            .arg("--band", type=int, default=6)
+            .arg("--dtw-size", type=int, default=512)
+            .arg("--dtw-flat-size", type=int, default=2048)
+            .main(lambda a: run(n_series=a.size, length=a.length,
+                                n_queries=a.queries, k=a.k, r=a.band,
+                                dtw_series=a.dtw_size,
+                                dtw_flat_series=a.dtw_flat_size), argv))
+
+
+if __name__ == "__main__":
+    import sys
+    sys.exit(main())

@@ -25,8 +25,8 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     from benchmarks import (bench_build, bench_capacity, bench_dtw,
-                            bench_engine, bench_ooc, bench_query,
-                            bench_scaling, bench_serve)
+                            bench_engine, bench_kernels, bench_ooc,
+                            bench_query, bench_scaling, bench_serve)
 
     quick_kwargs = {
         "build": dict(sizes=(20_000,), datasets=("synthetic",)),
@@ -37,6 +37,8 @@ def main(argv=None) -> int:
         "serve": dict(n=20_000, n_queries=4, n_batches=4, capacity=256,
                       cache_blocks=(8, 96)),
         "dtw": dict(n=5_000),
+        "kernels": dict(n_series=2048, n_queries=8, dtw_series=128,
+                        dtw_flat_series=512),
         "capacity": dict(n=50_000, capacities=(256, 1024)),
         "scaling": dict(device_counts=(1, 4)),
     }
@@ -44,6 +46,7 @@ def main(argv=None) -> int:
         ("build", bench_build.run), ("query", bench_query.run),
         ("engine", bench_engine.run), ("ooc", bench_ooc.run),
         ("serve", bench_serve.run), ("dtw", bench_dtw.run),
+        ("kernels", bench_kernels.run),
         ("capacity", bench_capacity.run), ("scaling", bench_scaling.run),
     ]
 

@@ -12,8 +12,10 @@ adapter — this module keeps the stable public faces:
     MINDIST keeps the no-false-dismissal guarantee, so the SAME
     BlockIndex answers DTW queries;
   * `search_dtw`, a `DTW(r)` query plan on the paper-faithful
-    query-major schedule.  Out-of-core DTW is the same metric on the
-    cached backend: ``storage.SearchSession.search(qs, metric=DTW(r))``.
+    query-major schedule, and `search_dtw_flat`, the same metric on the
+    ParIS flat scan (DTW x flat cell of the matrix).  Out-of-core DTW is
+    the same metric on the cached backend:
+    ``storage.SearchSession.search(qs, metric=DTW(r))``.
 """
 from __future__ import annotations
 
@@ -22,7 +24,7 @@ import jax
 from repro.core import engine
 from repro.core.engine import (DTW, QueryPlan, dtw_band, lb_keogh,  # noqa: F401
                                query_envelope)
-from repro.core.index import BlockIndex
+from repro.core.index import BlockIndex, FlatIndex
 from repro.core.search import INF, SearchResult  # noqa: F401
 
 
@@ -53,3 +55,18 @@ def search_dtw(index: BlockIndex, queries: jax.Array, *, r: int, k: int = 1,
     plan = QueryPlan(metric=DTW(r=r), schedule="query_major", k=k,
                      blocks_per_iter=blocks_per_iter)
     return engine.run(index, queries, plan)
+
+
+def search_dtw_flat(index: FlatIndex, queries: jax.Array, *, r: int,
+                    k: int = 1, block_index: BlockIndex | None = None,
+                    chunk: int = 4096) -> SearchResult:
+    """Exact DTW k-NN on the ParIS flat schedule (DTW x flat).
+
+    One interval-to-region MINDIST pass over the whole per-series SAX
+    array, then chunked banded-DP refinement under the tightening k-th
+    best bound.  ``block_index`` (optional, from the same build) enables
+    stage-A seeding; the exactness argument is the ED one verbatim,
+    since the planar bound lower-bounds LB_Keogh_PAA and hence DTW.
+    """
+    plan = QueryPlan(metric=DTW(r=r), schedule="flat", k=k, chunk=chunk)
+    return engine.run_flat(index, queries, plan, block_index)

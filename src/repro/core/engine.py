@@ -56,7 +56,7 @@ from repro.core import frontier as frontier_lib
 from repro.core import isax
 from repro.core.frontier import Frontier, INF, SearchStats, query_block_l2
 from repro.core.index import BlockIndex, FlatIndex, RAW_PAD
-from repro.kernels import ops
+from repro.kernels import ops, ref
 
 _bound = frontier_lib.bound
 
@@ -133,43 +133,12 @@ def interval_planar_lb(u_paa: jax.Array, l_paa: jax.Array, lo: jax.Array,
 def dtw_band(a: jax.Array, b: jax.Array, r: int) -> jax.Array:
     """Exact squared-DTW with band r. a (..., n) vs b (..., n), broadcast.
 
-    Anti-diagonal DP: diag k holds cells (i, j) with i+j == k; each
-    diagonal depends only on the previous two, so the whole diagonal
-    updates in one vector op. Cells outside the band are +INF.
+    The anti-diagonal DP now lives in ``kernels/ref.py`` (it is the
+    oracle for the Pallas wavefront kernel); this stays the generic
+    arbitrary-rank entry point.  Panel-shaped refine callers go through
+    ``ops.dtw_panel``, which dispatches to the kernel by mode.
     """
-    a, b = jnp.broadcast_arrays(a, b)
-    n = a.shape[-1]
-    i_idx = jnp.arange(n)
-
-    def diag_cost(k):
-        # cell (i, k-i) for i in [0, n)
-        j = k - i_idx
-        valid = (j >= 0) & (j < n) & (jnp.abs(i_idx - j) <= r)
-        jc = jnp.clip(j, 0, n - 1)
-        c = (a[..., i_idx] - jnp.take(b, jc, axis=-1)) ** 2
-        return jnp.where(valid, c, INF)
-
-    # dp diagonals indexed by i (row); shifting aligns (i-1, j), (i, j-1),
-    # (i-1, j-1)
-    def shift_down(d):  # d[i] -> d[i-1]
-        return jnp.concatenate([jnp.full(d.shape[:-1] + (1,), INF),
-                                d[..., :-1]], axis=-1)
-
-    def body(carry, k):
-        prev, prev2 = carry   # diag k-1, diag k-2 (indexed by i)
-        c = diag_cost(k)
-        best = jnp.minimum(jnp.minimum(prev, shift_down(prev)),
-                           shift_down(prev2))
-        cur = c + jnp.where(k == 0, 0.0, best)
-        cur = jnp.minimum(cur, INF)   # keep +INF cells from overflowing
-        return (cur, prev), None
-
-    init_shape = a.shape[:-1] + (n,)
-    prev = jnp.full(init_shape, INF)
-    prev2 = jnp.full(init_shape, INF)
-    (last, second), _ = jax.lax.scan(body, (prev, prev2),
-                                     jnp.arange(2 * n - 1))
-    return last[..., n - 1]   # cell (n-1, n-1) lives on diag 2n-2 at i=n-1
+    return ref.dtw_band_ref(a, b, r)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -220,6 +189,24 @@ class ED:
         if block.ndim == 2:            # shared (C, n) panel: one MXU pass
             return ops.batch_l2(qs.q, block)
         return query_block_l2(qs.q, block)   # per-query gather (Q, ..., C, n)
+
+    def panel_topk(self, qs: QueryState, block: jax.Array, ids_b: jax.Array,
+                   lo, hi, active: jax.Array, thr: jax.Array, k: int, *,
+                   n: int, w: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """LB-filter + distance + (dist, id)-lex top-k over one (C, n)
+        panel -> (sel_d (Q, k), sel_id (Q, k), n_live (Q,)).
+
+        With the MINDIST filter on, the whole pipeline is ONE fused
+        kernel (``ops.fused_panel_topk``); the per-query ``active`` mask
+        folds into the threshold as -inf (``lb < -inf`` is never true)."""
+        if self.lb_filter:
+            return ops.fused_panel_topk(
+                qs.q, qs.aux[0], block, lo, hi, ids_b,
+                jnp.where(active, thr, -jnp.inf), k=k, n=n)
+        live = active[:, None] & (ids_b >= 0)[None, :]
+        d = jnp.where(live, self.distances(qs, block), INF)
+        sd, si = ops.block_topk(d, jnp.where(live, ids_b[None, :], -1), k)
+        return sd, si, jnp.sum(live, axis=1, dtype=jnp.int32)
 
     def finalize_stats(self, stats: SearchStats, capacity: int
                        ) -> SearchStats:
@@ -282,8 +269,22 @@ class DTW:
 
     def distances(self, qs: QueryState, block: jax.Array) -> jax.Array:
         if block.ndim <= 3:            # (C, n) panel or (Q, C, n) stage A
-            return dtw_band(qs.q[:, None, :], block, self.r)
-        return dtw_band(qs.q[:, None, None, :], block, self.r)  # (Q,K,C,n)
+            return ops.dtw_panel(qs.q, block, r=self.r)
+        qn, kb, c, n = block.shape                              # (Q,K,C,n)
+        return ops.dtw_panel(qs.q, block.reshape(qn, kb * c, n),
+                             r=self.r).reshape(qn, kb, c)
+
+    def panel_topk(self, qs: QueryState, block: jax.Array, ids_b: jax.Array,
+                   lo, hi, active: jax.Array, thr: jax.Array, k: int, *,
+                   n: int, w: int) -> tuple[jax.Array, jax.Array, jax.Array]:
+        """LB_Keogh filter + banded-DP panel + top-k select.  The filter
+        reads the raw block (no stored bounds), so the LB stays a
+        separate pass; the select is still the block_topk kernel."""
+        s_lb = self.series_lb(qs, block, lo, hi, n=n, w=w)      # (Q, C)
+        live = (s_lb < thr[:, None]) & active[:, None] & (ids_b >= 0)[None, :]
+        d = jnp.where(live, self.distances(qs, block), INF)
+        sd, si = ops.block_topk(d, jnp.where(live, ids_b[None, :], -1), k)
+        return sd, si, jnp.sum(live, axis=1, dtype=jnp.int32)
 
     def finalize_stats(self, stats: SearchStats, capacity: int
                        ) -> SearchStats:
@@ -416,8 +417,12 @@ def prepare(metric, index: BlockIndex, queries: jax.Array, k: int
     qn = qs.q.shape[0]
     block_lb = metric.block_lb(qs, index.elo, index.ehi, n=index.n)
     b0 = jnp.argmin(block_lb, axis=1)                         # (Q,)
+    ids0 = index.ids[b0]                                      # (Q, C)
     d0 = metric.distances(qs, index.raw[b0])                  # (Q, C)
-    front = frontier_lib.init(qn, k).insert(d0, index.ids[b0])
+    # pad lanes (id < 0) hold RAW_PAD series with FINITE huge distances —
+    # mask to INF before the select (block_topk's masking contract)
+    sd, si = ops.block_topk(jnp.where(ids0 >= 0, d0, INF), ids0, k)
+    front = frontier_lib.init(qn, k).insert_topk(sd, si)
     return PreparedSearch(qs=qs, front=front, block_lb=block_lb,
                           stats=frontier_lib.stats_init(qn))
 
@@ -430,27 +435,22 @@ def panel_refine(metric, qs: QueryState, front: Frontier, stats: SearchStats,
     """Refine one (C, n) raw block panel against every query at once.
 
     The per-block unit of work shared by the block-major schedule on
-    both backends (device while_loop and the cached host walk): optional
-    per-series lower-bound filtering, one (Q, C) distance panel, one
-    frontier insert, and the work-stat updates.  ``active`` (Q,) masks
-    queries whose block lower bound beat ``thr``; ``lo``/``hi`` are the
-    block's (w, C) per-series bounds (None when the metric filters off
-    the raw values, or not at all).
+    both backends (device while_loop and the cached host walk): the
+    metric's ``panel_topk`` pipeline — per-series lower-bound filtering,
+    distances, and the (dist, id)-lex top-k select, fused into one
+    kernel where the metric allows — then an ``insert_topk`` merge
+    (2k-wide, not K + C) and the work-stat updates.  ``active`` (Q,)
+    masks queries whose block lower bound beat ``thr``; ``lo``/``hi``
+    are the block's (w, C) per-series bounds (None when the metric
+    filters off the raw values, or not at all).
     """
-    qn, c = qs.q.shape[0], block.shape[0]
-    if metric.filters:
-        s_lb = metric.series_lb(qs, block, lo, hi, n=n, w=w)   # (Q, C)
-        s_act = (s_lb < thr[:, None]) & active[:, None]
-    else:
-        s_act = jnp.broadcast_to(active[:, None], (qn, c))
-    d = metric.distances(qs, block)                            # (Q, C)
-    live = s_act & (ids_b >= 0)[None, :]
-    d = jnp.where(live, d, INF)
-    front = front.insert(d, jnp.where(live, ids_b[None, :], -1))
+    c = block.shape[0]
+    sd, si, nlive = metric.panel_topk(qs, block, ids_b, lo, hi, active,
+                                      thr, front.k, n=n, w=w)
+    front = front.insert_topk(sd, si)
     stats = SearchStats(
         blocks_visited=stats.blocks_visited + active.astype(jnp.int32),
-        series_refined=stats.series_refined
-        + jnp.sum(live, axis=1, dtype=jnp.int32),
+        series_refined=stats.series_refined + nlive,
         lb_series=stats.lb_series
         + (active.astype(jnp.int32) * c if metric.filters else 0),
         iters=stats.iters,
@@ -519,9 +519,12 @@ def _query_major(metric, index: BlockIndex, qs: QueryState, front: Frontier,
                 s_act = jnp.broadcast_to(active[..., None], ids.shape)
             d = metric.distances(qs, blocks)                        # (Q,K,C)
             live = s_act & (ids >= 0)
-            d = jnp.where(live, d, INF)
-            f_n = f_i.insert(d.reshape(qn, -1),
-                             jnp.where(live, ids, -1).reshape(qn, -1))
+            # blocks partition the series and idxs rows are distinct, so
+            # ids are unique per row: block_topk's subset-exactness holds
+            sd, si = ops.block_topk(
+                jnp.where(live, d, INF).reshape(qn, -1),
+                jnp.where(live, ids, -1).reshape(qn, -1), f_i.k)
+            f_n = f_i.insert_topk(sd, si)
             st_n = SearchStats(
                 blocks_visited=st_i.blocks_visited
                 + jnp.sum(active, axis=1, dtype=jnp.int32),
@@ -718,9 +721,10 @@ def run_flat(index: FlatIndex, queries: jax.Array, plan: QueryPlan,
 
         def refine(cr):
             front_j, refined_j = cr
-            d = metric.distances(qs, raw_k)                   # (Q, C)
-            d = jnp.where(act, d, INF)
-            front_n = front_j.insert(d, jnp.where(act, ids_k[None, :], -1))
+            d = jnp.where(act, metric.distances(qs, raw_k), INF)  # (Q, C)
+            sd, si = ops.block_topk(d, jnp.where(act, ids_k[None, :], -1),
+                                    front_j.k)
+            front_n = front_j.insert_topk(sd, si)
             return (front_n,
                     refined_j + jnp.sum(act, axis=1, dtype=jnp.int32))
 
@@ -895,3 +899,10 @@ def run_cached_stage_a(index: BlockIndex, queries: jax.Array,
     prep = cached_setup(index, queries, plan)
     return _cached_stage_a(index, plan, prep, np.asarray(prep.block_lb),
                            fetch, speculate, None)
+
+
+# the dispatch mode is read at trace time inside these jitted entry
+# points — ops.set_mode / ops.kernel_mode clears them on mode changes
+ops.register_dispatch_cache(run)
+ops.register_dispatch_cache(run_flat)
+ops.register_dispatch_cache(_cached_refine_step)

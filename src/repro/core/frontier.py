@@ -71,6 +71,9 @@ class Frontier(NamedTuple):
     def insert(self, d: jax.Array, ids: jax.Array) -> "Frontier":
         return insert_batch(self, d, ids)
 
+    def insert_topk(self, d: jax.Array, ids: jax.Array) -> "Frontier":
+        return insert_topk(self, d, ids)
+
     def merge(self, other: "Frontier") -> "Frontier":
         return merge(self, other)
 
@@ -124,6 +127,30 @@ def insert_batch(f: Frontier, d: jax.Array, ids: jax.Array, *,
     all_i = jnp.concatenate([f.ids, ids], axis=-1)
     nd, ni = _topk_by_dist_id(all_d, all_i, f.k)
     return Frontier(dists=nd, ids=jnp.where(nd < INF, ni, -1))
+
+
+def insert_topk(f: Frontier, d: jax.Array, ids: jax.Array) -> Frontier:
+    """Fold PRE-SELECTED candidates (Q, k'), k' <= K, into the frontier.
+
+    The fast path behind ``ops.block_topk`` / ``ops.fused_panel_topk``:
+    the kernel already reduced the (Q, C) panel to its (dist, id)-lex
+    top-k, so the merge sorts K + k' <= 2K elements instead of K + C.
+
+    Exactness: inserting only the (dist, id)-lex top-k of a batch (ids
+    distinct within the batch) is bit-identical to inserting the whole
+    batch.  Any unselected candidate has >= k candidates strictly
+    (dist, id)-before it in the SAME batch, each of which lands in the
+    result or loses only to something even better — so the unselected
+    candidate could never reach the table; and its duplicate-min side
+    effect on a held id is dominated the same way (the held entry it
+    would lower is itself lex-before it).  Hence every block-major site
+    keeps PR-4/PR-5 golden parity by construction.
+    """
+    if d.shape[-1] > f.k:
+        raise ValueError(
+            f"insert_topk expects pre-selected candidates: got "
+            f"{d.shape[-1]} > k={f.k}; use insert_batch for full panels")
+    return insert_batch(f, d, ids)
 
 
 def merge(fa: Frontier, fb: Frontier) -> Frontier:

@@ -68,3 +68,7 @@ def search_scan(raw: jax.Array, queries: jax.Array, *, k: int = 1,
     )
     return SearchResult(dist=frontier_lib.result_dists(front),
                         idx=front.ids, stats=stats)
+
+
+# batch_l2 dispatch mode is read at trace time — clear on mode changes
+ops.register_dispatch_cache(search_scan)

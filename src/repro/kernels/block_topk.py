@@ -1,0 +1,115 @@
+"""Pallas TPU kernel: block-local (dist, id)-lexicographic top-k select.
+
+The refine hot path used to hand the frontier a full (Q, C) masked
+distance panel, paying an O((K + C) log(K + C)) lexsort per insert and a
+(Q, C) HBM round-trip for candidates that mostly lose.  This kernel
+reduces the panel to (Q, k) (dist, id) pairs on-chip, so
+``Frontier.insert_topk`` sorts 2k elements instead of K + C and only
+(Q, k) ever reaches HBM.
+
+Selection is iterative k-extraction (k is static, so the loop unrolls):
+each step takes the row minimum distance, breaks ties toward the
+smallest id (ids < 0 sort last, as INT32_MAX keys), and retires the
+selected lane.  That is EXACTLY the (dist, id)-lexicographic order of
+``frontier._topk_by_dist_id`` — selection is integer-exact, so any
+tiling produces the identical result, and feeding the frontier the
+selected k instead of all C provably cannot change the final top-k
+(see ``Frontier.insert_topk``).  Tiles along C accumulate through the
+revisited (Q, k) output block: per tile, select top-k, then re-select
+over the 2k concatenation with the running best.
+
+Contract (the engine's masking discipline): within a row, ids >= 0 are
+distinct and every lane with id < 0 carries d == +INF — pad lanes are
+interchangeable and the kernel may collapse duplicates among them.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Python scalars, not jnp values: the kernels close over these, and
+# pallas_call rejects captured traced constants
+INF = float(jnp.finfo(jnp.float32).max)
+_PAD_ID_KEY = int(jnp.iinfo(jnp.int32).max)   # sort key for id < 0
+
+
+def select_topk(d: jax.Array, key: jax.Array, k: int
+                ) -> tuple[jax.Array, jax.Array]:
+    """Unrolled k-extraction over the last axis. d (R, M) f32, key (R, M)
+    int32 (id, or INT32_MAX for empty lanes) -> ((R, k), (R, k)) ascending
+    by (d, key); emitted ids are the keys, with INT32_MAX mapped to -1."""
+    sel_d, sel_i = [], []
+    for _ in range(k):
+        m = jnp.min(d, axis=-1, keepdims=True)                      # (R, 1)
+        kk = jnp.min(jnp.where(d == m, key, _PAD_ID_KEY), axis=-1,
+                     keepdims=True)                                 # (R, 1)
+        sel_d.append(m)
+        sel_i.append(jnp.where(kk == _PAD_ID_KEY, -1, kk))
+        kill = (d == m) & (key == kk)
+        d = jnp.where(kill, INF, d)
+        key = jnp.where(kill, _PAD_ID_KEY, key)
+    return jnp.concatenate(sel_d, axis=-1), jnp.concatenate(sel_i, axis=-1)
+
+
+def _kernel(d_ref, i_ref, out_d_ref, out_i_ref, *, k: int):
+    j = pl.program_id(1)
+
+    @pl.when(j == 0)
+    def _init():
+        out_d_ref[...] = jnp.full(out_d_ref.shape, INF, jnp.float32)
+        out_i_ref[...] = jnp.full(out_i_ref.shape, -1, jnp.int32)
+
+    d = d_ref[...]                                              # (TQ, TC)
+    ids = i_ref[...]
+    td, ti = select_topk(d, jnp.where(ids >= 0, ids, _PAD_ID_KEY), k)
+    # merge the tile's top-k into the running top-k (2k-wide re-select)
+    rd = jnp.concatenate([out_d_ref[...], td], axis=-1)         # (TQ, 2k)
+    ri = jnp.concatenate([out_i_ref[...], ti], axis=-1)
+    md, mi = select_topk(rd, jnp.where(ri >= 0, ri, _PAD_ID_KEY), k)
+    out_d_ref[...] = md
+    out_i_ref[...] = mi
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("k", "tile_q", "tile_c", "interpret"))
+def block_topk(d: jax.Array, ids: jax.Array, *, k: int, tile_q: int = 8,
+               tile_c: int = 1024, interpret: bool = False
+               ) -> tuple[jax.Array, jax.Array]:
+    """d (Q, C) f32 masked panel, ids (Q, C) int32 -> ((Q, k), (Q, k))."""
+    qn, c = d.shape
+    tq = min(tile_q, max(1, qn))
+    tc = min(tile_c, max(128, c))
+
+    qpad = (-qn) % tq
+    if qpad:
+        d = jnp.concatenate([d, jnp.full((qpad, c), INF, jnp.float32)], 0)
+        ids = jnp.concatenate([ids, jnp.full((qpad, c), -1, jnp.int32)], 0)
+    cpad = (-c) % tc
+    if cpad:
+        d = jnp.concatenate(
+            [d, jnp.full((d.shape[0], cpad), INF, jnp.float32)], 1)
+        ids = jnp.concatenate(
+            [ids, jnp.full((ids.shape[0], cpad), -1, jnp.int32)], 1)
+
+    grid = (d.shape[0] // tq, d.shape[1] // tc)
+    out_d, out_i = pl.pallas_call(
+        functools.partial(_kernel, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tq, tc), lambda i, j: (i, j)),
+            pl.BlockSpec((tq, tc), lambda i, j: (i, j)),
+        ],
+        out_specs=[
+            pl.BlockSpec((tq, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((tq, k), lambda i, j: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((d.shape[0], k), jnp.float32),
+            jax.ShapeDtypeStruct((d.shape[0], k), jnp.int32),
+        ],
+        interpret=interpret,
+    )(d, ids)
+    return out_d[:qn], out_i[:qn]

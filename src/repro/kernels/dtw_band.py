@@ -1,0 +1,105 @@
+"""Pallas TPU kernel: banded-DTW anti-diagonal wavefront over a panel.
+
+``engine.dtw_band`` computes exact squared DTW with a Sakoe-Chiba band as
+a ``lax.scan`` over anti-diagonals — VPU-shaped math, but XLA-compiled
+with (Q, M, n) broadcast intermediates.  This kernel runs the same
+wavefront on-chip: one grid cell handles one query against a (TM,) tile
+of candidate series, keeping the two rolling diagonals (n, TM) in
+registers/VMEM and writing only the (1, TM) corner costs to HBM.
+
+Layout: candidates arrive as a planar diagonal-extraction buffer
+``P[..., (n-1) + p, m] = x[m, n-1-p]`` (series axis transposed, reversed,
+and zero-padded by n-1 on both ends), so diagonal k's entries
+``b[m, k-i]`` for i in [0, n) are the CONTIGUOUS slice
+``P[..., 2n-2-k : 3n-2-k, m]`` — a dynamic slice, no in-kernel gather.
+The query arrives pre-transposed as (n, Q) so its column block is (n, 1).
+
+Bit-compatibility: every op here (subtract, square, where, minimum, add)
+is elementwise — no reductions, no dot — and the op ORDER mirrors
+``ref.dtw_band_ref`` exactly, so kernel and oracle agree bit-for-bit
+regardless of tiling (locked by np.array_equal in tests/test_kernels.py).
+
+Supports both engine forms: a shared (C, n) panel (every query scans the
+same block) and a gathered (Q, M, n) panel (query-major refine).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Python scalar, not a jnp value: the kernel closes over it, and
+# pallas_call rejects captured traced constants
+INF = float(jnp.finfo(jnp.float32).max)
+
+
+def _kernel(qt_ref, p_ref, out_ref, *, n: int, r: int):
+    a = qt_ref[...]                                 # (n, 1) query column
+    tm = p_ref.shape[-1]
+    i = jax.lax.broadcasted_iota(jnp.int32, (n, tm), 0)
+    inf_row = jnp.full((1, tm), INF, jnp.float32)
+
+    def shift_down(d):                              # d[i] -> d[i-1]
+        return jnp.concatenate([inf_row, d[:-1, :]], axis=0)
+
+    def body(kk, carry):
+        prev, prev2 = carry                         # diag k-1, k-2 (by i)
+        bk = p_ref[0, pl.ds(2 * n - 2 - kk, n), :]  # b[k-i], i in [0, n)
+        jj = kk - i
+        valid = (jj >= 0) & (jj < n) & (jnp.abs(i - jj) <= r)
+        c = jnp.where(valid, (a - bk) ** 2, INF)
+        best = jnp.minimum(jnp.minimum(prev, shift_down(prev)),
+                           shift_down(prev2))
+        cur = c + jnp.where(kk == 0, 0.0, best)
+        cur = jnp.minimum(cur, INF)                 # keep +INF from overflow
+        return cur, prev
+
+    init = jnp.full((n, tm), INF, jnp.float32)
+    last, _ = jax.lax.fori_loop(0, 2 * n - 1, body, (init, init))
+    out_ref[...] = last[n - 1:n, :]                 # cell (n-1, n-1)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("r", "tile_m", "interpret"))
+def dtw_band_panel(q: jax.Array, x: jax.Array, *, r: int, tile_m: int = 256,
+                   interpret: bool = False) -> jax.Array:
+    """Banded squared-DTW panel. q (Q, n) f32; x either (C, n) — shared
+    panel, every query vs every series -> (Q, C) — or (Q, M, n) — gathered
+    panel, query i vs its own M series -> (Q, M)."""
+    qn, n = q.shape
+    shared = x.ndim == 2
+    m = x.shape[-2]
+    tm = min(tile_m, max(128, m))
+    mpad = (-m) % tm
+    if mpad:
+        pad_shape = x.shape[:-2] + (mpad, n)
+        x = jnp.concatenate([x, jnp.zeros(pad_shape, x.dtype)], axis=-2)
+    mp = x.shape[-2]
+
+    # planar diagonal buffer: P[..., (n-1)+p, m] = x[..., m, n-1-p]
+    xt = jnp.swapaxes(x, -1, -2).astype(jnp.float32)    # (..., n, Mp)
+    rev = xt[..., ::-1, :]
+    zpad = jnp.zeros(rev.shape[:-2] + (n - 1, mp), jnp.float32)
+    p_buf = jnp.concatenate([zpad, rev, zpad], axis=-2)  # (..., 3n-2, Mp)
+    if shared:
+        p_buf = p_buf[None]                              # (1, 3n-2, Mp)
+        p_map = lambda qi, j: (0, 0, j)
+    else:
+        p_map = lambda qi, j: (qi, 0, j)
+
+    qt = q.astype(jnp.float32).T                         # (n, Q)
+    grid = (qn, mp // tm)
+    out = pl.pallas_call(
+        functools.partial(_kernel, n=n, r=r),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((n, 1), lambda qi, j: (0, qi)),
+            pl.BlockSpec((1, 3 * n - 2, tm), p_map),
+        ],
+        out_specs=pl.BlockSpec((1, tm), lambda qi, j: (qi, j)),
+        out_shape=jax.ShapeDtypeStruct((qn, mp), jnp.float32),
+        interpret=interpret,
+    )(qt, p_buf)
+    return out[:, :m]

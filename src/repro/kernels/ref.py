@@ -11,6 +11,9 @@ import jax.numpy as jnp
 
 from repro.core import isax
 
+INF = jnp.float32(jnp.finfo(jnp.float32).max)
+_PAD_ID_KEY = jnp.int32(jnp.iinfo(jnp.int32).max)   # sort key for id < 0
+
 
 def paa_sax_ref(x: jax.Array, w: int, card: int) -> tuple[jax.Array, jax.Array]:
     """(N, n) f32 -> PAA (N, w) f32, symbols (N, w) int32. Input already z-normed."""
@@ -46,6 +49,109 @@ def batch_l2_exact_ref(q: jax.Array, x: jax.Array) -> jax.Array:
     """Direct-subtraction oracle (most accurate; O(Q*N*n) memory)."""
     d = q[:, None, :] - x[None, :, :]
     return jnp.sum(d * d, axis=-1)
+
+
+def topk_by_dist_id(d: jax.Array, ids: jax.Array, k: int
+                    ) -> tuple[jax.Array, jax.Array]:
+    """Ascending (distance, id)-lexicographic top-k along the last axis.
+
+    Mirrors ``core.frontier._topk_by_dist_id`` (duplicated here because
+    ``frontier`` imports ``ops`` imports this module): ids < 0 sort last
+    among equal distances and come back normalized to -1.  When k exceeds
+    the candidate count the result is padded with (INF, -1) rows.
+    """
+    m = d.shape[-1]
+    if k > m:
+        pad = k - m
+        d = jnp.concatenate(
+            [d, jnp.full(d.shape[:-1] + (pad,), INF, d.dtype)], axis=-1)
+        ids = jnp.concatenate(
+            [ids, jnp.full(ids.shape[:-1] + (pad,), -1, ids.dtype)], axis=-1)
+    key = jnp.where(ids >= 0, ids, _PAD_ID_KEY)
+    order = jnp.lexsort((key, d), axis=-1)[..., :k]
+    sd = jnp.take_along_axis(d, order, axis=-1)
+    si = jnp.take_along_axis(ids, order, axis=-1)
+    return sd, jnp.where(si >= 0, si, -1)
+
+
+def block_topk_ref(d: jax.Array, ids: jax.Array, k: int
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Oracle for kernels/block_topk.py. d (Q, C) f32, ids (Q, C) int32.
+
+    Contract (the engine's masking discipline): within a row ids >= 0 are
+    distinct, and every lane with id < 0 carries d == INF — pad lanes are
+    interchangeable, so the kernel may collapse duplicates among them.
+    """
+    return topk_by_dist_id(d, ids, k)
+
+
+def fused_panel_topk_ref(q: jax.Array, q_paa: jax.Array, block: jax.Array,
+                         lo: jax.Array, hi: jax.Array, ids: jax.Array,
+                         thr: jax.Array, *, k: int, n: int
+                         ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Oracle for kernels/fused_refine.py: the unfused composition the
+    engine's ED ``panel_refine`` ran before fusion.
+
+    q (Q, n), q_paa (Q, w), block (C, n), lo/hi (w, C) planar bounds,
+    ids (C,) int32, thr (Q,) effective pruning bound (callers fold the
+    per-query active mask in as -inf).  Returns the (dist, id)-lex top-k
+    of the live lanes — dead lanes are (INF, -1) — plus the per-query
+    live-lane count (the ``series_refined`` stat).
+    """
+    w = q_paa.shape[-1]
+    qe = q_paa[:, :, None]                                    # (Q, w, 1)
+    dd = jnp.maximum(jnp.maximum(lo[None] - qe, qe - hi[None]), 0.0)
+    lb = (n / w) * jnp.sum(dd * dd, axis=1)                   # (Q, C)
+    live = (lb < thr[:, None]) & (ids >= 0)[None, :]
+    d = jnp.where(live, batch_l2_ref(q, block), INF)
+    idm = jnp.where(live, ids[None, :], -1)
+    sd, si = topk_by_dist_id(d, idm, k)
+    return sd, si, jnp.sum(live, axis=1, dtype=jnp.int32)
+
+
+def dtw_band_ref(a: jax.Array, b: jax.Array, r: int) -> jax.Array:
+    """Exact squared-DTW with band r. a (..., n) vs b (..., n), broadcast.
+
+    Anti-diagonal DP: diag k holds cells (i, j) with i+j == k; each
+    diagonal depends only on the previous two, so the whole diagonal
+    updates in one vector op.  Cells outside the band are +INF.  The
+    Pallas wavefront kernel (kernels/dtw_band.py) mirrors these ops
+    EXACTLY — both are pure elementwise arithmetic with no reductions,
+    so the two agree bit-for-bit (locked in tests/test_kernels.py).
+    """
+    a, b = jnp.broadcast_arrays(a, b)
+    n = a.shape[-1]
+    i_idx = jnp.arange(n)
+
+    def diag_cost(k):
+        # cell (i, k-i) for i in [0, n)
+        j = k - i_idx
+        valid = (j >= 0) & (j < n) & (jnp.abs(i_idx - j) <= r)
+        jc = jnp.clip(j, 0, n - 1)
+        c = (a[..., i_idx] - jnp.take(b, jc, axis=-1)) ** 2
+        return jnp.where(valid, c, INF)
+
+    # dp diagonals indexed by i (row); shifting aligns (i-1, j), (i, j-1),
+    # (i-1, j-1)
+    def shift_down(d):  # d[i] -> d[i-1]
+        return jnp.concatenate([jnp.full(d.shape[:-1] + (1,), INF),
+                                d[..., :-1]], axis=-1)
+
+    def body(carry, k):
+        prev, prev2 = carry   # diag k-1, diag k-2 (indexed by i)
+        c = diag_cost(k)
+        best = jnp.minimum(jnp.minimum(prev, shift_down(prev)),
+                           shift_down(prev2))
+        cur = c + jnp.where(k == 0, 0.0, best)
+        cur = jnp.minimum(cur, INF)   # keep +INF cells from overflowing
+        return (cur, prev), None
+
+    init_shape = a.shape[:-1] + (n,)
+    prev = jnp.full(init_shape, INF)
+    prev2 = jnp.full(init_shape, INF)
+    (last, second), _ = jax.lax.scan(body, (prev, prev2),
+                                     jnp.arange(2 * n - 1))
+    return last[..., n - 1]   # cell (n-1, n-1) lives on diag 2n-2 at i=n-1
 
 
 def ssm_scan_ref(xc, dt, bm, cm, a_log):

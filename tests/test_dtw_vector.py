@@ -78,6 +78,27 @@ def test_search_dtw_topk_vs_bruteforce():
     assert np.array_equal(np.asarray(got.idx), np.asarray(want))
 
 
+@pytest.mark.parametrize("seeded", [False, True])
+def test_search_dtw_flat_exact_vs_bruteforce(seeded):
+    """DTW x flat (the last open matrix cell): the ParIS scan under the
+    DTW metric returns the exact k-NN, with and without stage-A seeding
+    from the block view."""
+    import jax
+    raw = jnp.asarray(random_walk(256, 64, seed=9))
+    qs = jnp.asarray(random_walk(4, 64, seed=10) * 0.9)
+    fidx = core.build_flat(raw)
+    bidx = core.build(raw, capacity=32) if seeded else None
+    k = 5
+    got = D.search_dtw_flat(fidx, qs, r=6, k=k, block_index=bidx, chunk=64)
+    bf = np.asarray(D.dtw_band(isax.znorm(qs)[:, None, :],
+                               isax.znorm(raw)[None], 6))
+    _, want = jax.lax.top_k(-jnp.asarray(bf), k)
+    assert np.array_equal(np.asarray(got.idx), np.asarray(want))
+    np.testing.assert_allclose(np.asarray(got.dist),
+                               np.sort(np.sqrt(bf), axis=1)[:, :k],
+                               rtol=1e-4, atol=1e-4)
+
+
 def test_vector_index_cosine_nn():
     """§V application: exact cosine NN over unit-normalized embeddings."""
     embs = RNG.standard_normal((2048, 64)).astype(np.float32)

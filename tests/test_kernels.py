@@ -210,3 +210,378 @@ def test_mode_ref_and_interpret_agree_through_dispatch():
                                rtol=1e-4, atol=1e-4)
     np.testing.assert_allclose(np.asarray(d_r), np.asarray(d_i),
                                rtol=1e-4, atol=1e-4)
+
+
+# ---------------------------------------------------------------------------
+# block-local top-k select (kernels/block_topk.py)
+# ---------------------------------------------------------------------------
+
+INF = float(jnp.finfo(jnp.float32).max)
+
+
+def masked_panel(q, c, frac_dead=0.3, quantize=None):
+    """A (d, ids) panel under the engine's masking contract: distinct
+    ids >= 0 on live lanes, (INF, -1) on dead ones."""
+    d = np.abs(RNG.standard_normal((q, c))).astype(np.float32)
+    if quantize:
+        d = np.round(d * quantize).astype(np.float32) / quantize  # ties
+    ids = np.tile(np.arange(c, dtype=np.int32), (q, 1))
+    dead = RNG.random((q, c)) < frac_dead
+    d[dead] = INF
+    ids[dead] = -1
+    return jnp.asarray(d), jnp.asarray(ids)
+
+
+def frontier_oracle(d, ids, k):
+    """topk via core.frontier's own lexsort (the tie-break contract)."""
+    from repro.core import frontier as frontier_lib
+    sd, si = frontier_lib._topk_by_dist_id(d, ids, k)
+    return sd, jnp.where(sd < INF, si, -1)
+
+
+@pytest.mark.parametrize("q,c", [(1, 128), (3, 37), (8, 256), (16, 1000)])
+@pytest.mark.parametrize("k", [1, 5, 32])
+def test_block_topk_sweep(q, c, k):
+    from repro.kernels.block_topk import block_topk
+    if k > c:
+        pytest.skip("k > C is the ref-fallback path (tested separately)")
+    d, ids = masked_panel(q, c)
+    gd, gi = block_topk(d, ids, k=k, interpret=True)
+    wd, wi = ref.block_topk_ref(d, ids, k)
+    assert np.array_equal(np.asarray(gd), np.asarray(wd))
+    assert np.array_equal(np.asarray(gi), np.asarray(wi))
+    fd, fi = frontier_oracle(d, ids, k)
+    assert np.array_equal(np.asarray(gd), np.asarray(fd))
+    assert np.array_equal(np.asarray(gi), np.asarray(fi))
+
+
+@pytest.mark.parametrize("tile_q,tile_c", [(1, 128), (4, 128), (8, 256),
+                                           (16, 1024)])
+def test_block_topk_tilings(tile_q, tile_c):
+    from repro.kernels.block_topk import block_topk
+    d, ids = masked_panel(7, 300)
+    gd, gi = block_topk(d, ids, k=5, tile_q=tile_q, tile_c=tile_c,
+                        interpret=True)
+    wd, wi = ref.block_topk_ref(d, ids, 5)
+    assert np.array_equal(np.asarray(gd), np.asarray(wd))
+    assert np.array_equal(np.asarray(gi), np.asarray(wi))
+
+
+def test_block_topk_tie_break_toward_smaller_id():
+    """Quantized distances force exact ties: (dist, id)-lex order must
+    match the frontier's lexsort bit-for-bit."""
+    from repro.kernels.block_topk import block_topk
+    d, ids = masked_panel(5, 400, quantize=4)     # ~4 distinct values
+    for k in (1, 8):
+        gd, gi = block_topk(d, ids, k=k, interpret=True)
+        fd, fi = frontier_oracle(d, ids, k)
+        assert np.array_equal(np.asarray(gd), np.asarray(fd))
+        assert np.array_equal(np.asarray(gi), np.asarray(fi))
+
+
+def test_block_topk_all_dead_rows():
+    from repro.kernels.block_topk import block_topk
+    d, ids = masked_panel(4, 200, frac_dead=1.0)
+    gd, gi = block_topk(d, ids, k=6, interpret=True)
+    assert np.all(np.asarray(gd) == INF)
+    assert np.all(np.asarray(gi) == -1)
+
+
+def test_block_topk_k_exceeds_candidates():
+    """ops dispatch falls back to the padded oracle when k > C."""
+    from repro.kernels import ops
+    d, ids = masked_panel(3, 8, frac_dead=0.0)
+    with ops.kernel_mode("interpret"):
+        gd, gi = ops.block_topk(d, ids, 32)
+    wd, wi = ref.block_topk_ref(d, ids, 32)
+    assert gd.shape == (3, 32)
+    assert np.array_equal(np.asarray(gd), np.asarray(wd))
+    assert np.array_equal(np.asarray(gi), np.asarray(wi))
+    assert np.all(np.asarray(gd[:, 8:]) == INF)
+    assert np.all(np.asarray(gi[:, 8:]) == -1)
+
+
+# ---------------------------------------------------------------------------
+# fused LB + distance + select (kernels/fused_refine.py)
+# ---------------------------------------------------------------------------
+
+def _fused_inputs(q, c, n, w=16, thr_val=50.0, inactive=()):
+    x = series(c, n)
+    qs = series(q, n)
+    xn, qn = isax.znorm(x), isax.znorm(qs)
+    _, _, bounds = isax.summarize(xn, w=w)
+    q_paa = isax.paa(qn, w)
+    thr = np.full((q,), thr_val, np.float32)
+    for i in inactive:
+        thr[i] = -np.inf                  # the folded ``active`` mask
+    return (qn, q_paa, xn, bounds[..., 0].T, bounds[..., 1].T,
+            jnp.arange(c, dtype=jnp.int32), jnp.asarray(thr))
+
+
+@pytest.mark.parametrize("q,c,n", [(1, 130, 64), (5, 150, 128), (8, 256, 128),
+                                   (3, 300, 96)])
+@pytest.mark.parametrize("k", [1, 5])
+def test_fused_refine_sweep(q, c, n, k):
+    """Seeded float data: ids and live counts integer-exact, distances
+    match the unfused oracle to float tolerance for any tiling."""
+    from repro.kernels.fused_refine import fused_panel_topk
+    args = _fused_inputs(q, c, n, inactive=(0,) if q > 2 else ())
+    gd, gi, gn = fused_panel_topk(*args, k=k, n=n, interpret=True)
+    wd, wi, wn = ref.fused_panel_topk_ref(*args, k=k, n=n)
+    assert np.array_equal(np.asarray(gi), np.asarray(wi))
+    assert np.array_equal(np.asarray(gn), np.asarray(wn))
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(wd),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_refine_bitwise_at_engine_tiling():
+    """At the default (batch_l2-mirroring) tile sizes the distance tiles
+    are the same dot on the same values — selected distances agree
+    bit-for-bit with the oracle."""
+    from repro.kernels.fused_refine import fused_panel_topk
+    args = _fused_inputs(5, 150, 128)
+    gd, gi, gn = fused_panel_topk(*args, k=5, n=128, interpret=True)
+    wd, wi, wn = ref.fused_panel_topk_ref(*args, k=5, n=128)
+    assert np.array_equal(np.asarray(gd), np.asarray(wd))
+    assert np.array_equal(np.asarray(gi), np.asarray(wi))
+    assert np.array_equal(np.asarray(gn), np.asarray(wn))
+
+
+@pytest.mark.parametrize("tile_q,tile_c", [(8, 128), (128, 256), (4, 512)])
+def test_fused_refine_tilings(tile_q, tile_c):
+    from repro.kernels.fused_refine import fused_panel_topk
+    args = _fused_inputs(6, 330, 64)
+    gd, gi, gn = fused_panel_topk(*args, k=3, n=64, tile_q=tile_q,
+                                  tile_c=tile_c, interpret=True)
+    wd, wi, wn = ref.fused_panel_topk_ref(*args, k=3, n=64)
+    assert np.array_equal(np.asarray(gi), np.asarray(wi))
+    assert np.array_equal(np.asarray(gn), np.asarray(wn))
+    np.testing.assert_allclose(np.asarray(gd), np.asarray(wd),
+                               rtol=1e-5, atol=1e-5)
+
+
+def test_fused_refine_all_pruned_and_inactive():
+    """thr = 0 prunes every lane (lb >= 0 always); -inf rows are inactive
+    queries.  Everything comes back (INF, -1) with zero live lanes —
+    exactly what the engine's unfused path inserted."""
+    from repro.kernels.fused_refine import fused_panel_topk
+    args = list(_fused_inputs(4, 140, 64, thr_val=0.0, inactive=(2,)))
+    gd, gi, gn = fused_panel_topk(*args, k=4, n=64, interpret=True)
+    assert np.all(np.asarray(gd) == INF)
+    assert np.all(np.asarray(gi) == -1)
+    assert np.all(np.asarray(gn) == 0)
+
+
+def test_fused_refine_padding_lanes_ignored():
+    """ids < 0 lanes (block padding) never surface, even with huge thr."""
+    from repro.kernels.fused_refine import fused_panel_topk
+    args = list(_fused_inputs(3, 100, 64, thr_val=INF))
+    ids = np.asarray(args[5]).copy()
+    ids[60:] = -1                                 # pad tail of the block
+    args[5] = jnp.asarray(ids)
+    gd, gi, gn = fused_panel_topk(*args, k=8, n=64, interpret=True)
+    wd, wi, wn = ref.fused_panel_topk_ref(*args, k=8, n=64)
+    assert np.array_equal(np.asarray(gi), np.asarray(wi))
+    assert np.array_equal(np.asarray(gn), np.asarray(wn))
+    assert np.all(np.asarray(gi) < 60)
+    assert np.all(np.asarray(gn) == 60)
+
+
+# ---------------------------------------------------------------------------
+# banded-DTW wavefront (kernels/dtw_band.py)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("q,c,n", [(1, 130, 32), (4, 150, 64), (6, 256, 64)])
+@pytest.mark.parametrize("r", [2, 7])
+def test_dtw_band_panel_shared_bitwise(q, c, n, r):
+    """Purely elementwise wavefront: kernel == lax.scan oracle
+    BIT-FOR-BIT, shared-panel form."""
+    from repro.kernels.dtw_band import dtw_band_panel
+    x = isax.znorm(series(c, n))
+    qs = isax.znorm(series(q, n))
+    got = dtw_band_panel(qs, x, r=r, interpret=True)
+    want = ref.dtw_band_ref(qs[:, None, :], x[None], r)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("m", [40, 128, 300])
+def test_dtw_band_panel_gathered_bitwise(m):
+    from repro.kernels.dtw_band import dtw_band_panel
+    xg = isax.znorm(series(3 * m, 48)).reshape(3, m, 48)
+    qs = isax.znorm(series(3, 48))
+    got = dtw_band_panel(qs, xg, r=5, interpret=True)
+    want = ref.dtw_band_ref(qs[:, None, :], xg, 5)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+@pytest.mark.parametrize("tile_m", [128, 256, 512])
+def test_dtw_band_panel_tilings(tile_m):
+    from repro.kernels.dtw_band import dtw_band_panel
+    x = isax.znorm(series(333, 32))
+    qs = isax.znorm(series(2, 32))
+    got = dtw_band_panel(qs, x, r=4, tile_m=tile_m, interpret=True)
+    want = ref.dtw_band_ref(qs[:, None, :], x[None], 4)
+    assert np.array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_dtw_band_panel_zero_to_self():
+    from repro.kernels.dtw_band import dtw_band_panel
+    x = isax.znorm(series(16, 64))
+    d = dtw_band_panel(x[:4], x, r=5, interpret=True)
+    for i in range(4):
+        assert float(d[i, i]) < 1e-6
+        assert int(jnp.argmin(d[i])) == i
+
+
+# ---------------------------------------------------------------------------
+# kernel_mode: scoped dispatch with jit-cache invalidation
+# ---------------------------------------------------------------------------
+
+def test_kernel_mode_sets_and_restores():
+    from repro.kernels import ops
+    old = ops.get_mode()
+    with ops.kernel_mode("ref"):
+        assert ops.get_mode() == "ref"
+        with ops.kernel_mode("interpret"):
+            assert ops.get_mode() == "interpret"
+        assert ops.get_mode() == "ref"
+    assert ops.get_mode() == old
+
+
+def test_kernel_mode_restores_on_exception():
+    from repro.kernels import ops
+    old = ops.get_mode()
+    with pytest.raises(RuntimeError):
+        with ops.kernel_mode("ref"):
+            raise RuntimeError("boom")
+    assert ops.get_mode() == old
+
+
+def test_kernel_mode_clears_registered_jit_caches(monkeypatch):
+    """The regression the context manager exists for: a jitted caller
+    traced under one mode must NOT keep serving the stale kernel after
+    the mode changes — set_mode without a cache clear would silently
+    compare a kernel against itself in every mode-sweep test."""
+    from repro.kernels import ops
+    calls = []
+    real = ops._batch_l2_kernel
+
+    def spy(q, x, **kw):
+        calls.append(kw)
+        return real(q, x, **kw)
+
+    monkeypatch.setattr(ops, "_batch_l2_kernel", spy)
+
+    @jax.jit
+    def f(q, x):
+        return ops.batch_l2(q, x)
+
+    ops.register_dispatch_cache(f)
+    try:
+        q, x = series(2, 64), series(16, 64)
+        with ops.kernel_mode("ref"):
+            f(q, x)
+            assert not calls          # oracle path traced in
+            with ops.kernel_mode("interpret"):
+                f(q, x)               # stale cache would skip the kernel
+            assert len(calls) == 1 and calls[0]["interpret"] is True
+            f(q, x)                   # back under ref: retraced again
+            assert len(calls) == 1
+    finally:
+        ops._DISPATCH_CACHES.remove(f)
+
+
+# ---------------------------------------------------------------------------
+# engine cell matrix: ref vs interpret through the full drivers
+# ---------------------------------------------------------------------------
+
+def _cell_fixtures():
+    import repro.core as core
+    from repro.core import vector
+    from repro.data import random_walk
+    raw = jnp.asarray(random_walk(192, 64, seed=21))
+    rng = np.random.default_rng(22)
+    qs = jnp.asarray(np.asarray(raw[:4])
+                     + 0.05 * rng.standard_normal((4, 64)).astype(np.float32))
+    idx = core.build(raw, capacity=32)
+    fidx = core.build_flat(raw)
+    embs = jnp.asarray(rng.standard_normal((256, 64)).astype(np.float32))
+    vidx = vector.build_vector_index(embs, capacity=32)
+    vq = embs[:4] + 0.01
+    return dict(raw=raw, qs=qs, idx=idx, fidx=fidx, vidx=vidx, vq=vq)
+
+
+_CELLS = {
+    "ed_query_major": lambda c, core, D, vector:
+        core.search(c["idx"], c["qs"], k=5),
+    "ed_block_major": lambda c, core, D, vector:
+        core.search_block_major(c["idx"], c["qs"], k=5),
+    "ed_paris_flat": lambda c, core, D, vector:
+        core.search_paris(c["idx"], c["qs"], k=5, chunk=64),
+    "ed_ucr_scan": lambda c, core, D, vector:
+        core.search_scan(c["raw"], c["qs"], k=5, chunk=64),
+    "dtw_query_major": lambda c, core, D, vector:
+        D.search_dtw(c["idx"], c["qs"], r=4, k=5),
+    "dtw_flat": lambda c, core, D, vector:
+        D.search_dtw_flat(c["fidx"], c["qs"], r=4, k=5, chunk=64),
+    "cosine_query_major": lambda c, core, D, vector:
+        vector.search_vectors(c["vidx"], c["vq"], k=5),
+}
+
+
+@pytest.fixture(scope="module")
+def cells():
+    return _cell_fixtures()
+
+
+@pytest.mark.parametrize("cell", sorted(_CELLS))
+def test_engine_cells_ref_vs_interpret(cells, cell):
+    """The same public driver under both dispatch modes: identical
+    neighbour ids and work stats, distances to float tolerance."""
+    from repro.core import dtw as D
+    from repro.core import vector
+    import repro.core as core
+    from repro.kernels import ops
+    run = _CELLS[cell]
+    with ops.kernel_mode("ref"):
+        want = run(cells, core, D, vector)
+    with ops.kernel_mode("interpret"):
+        got = run(cells, core, D, vector)
+    assert np.array_equal(np.asarray(got.idx), np.asarray(want.idx))
+    np.testing.assert_allclose(np.asarray(got.dist), np.asarray(want.dist),
+                               rtol=1e-5, atol=1e-5)
+    for g, w in zip(got.stats, want.stats):
+        assert np.array_equal(np.asarray(g), np.asarray(w)), cell
+
+
+def test_refine_insert_width_is_k_not_capacity(monkeypatch):
+    """The tentpole's frontier claim, proven on the live drivers: every
+    insert during a search carries exactly k pre-selected candidates —
+    the merge sorts K + k = 2k elements — never the C-wide panel."""
+    import repro.core as core
+    from repro.core import frontier as frontier_lib
+    from repro.data import random_walk
+    from repro.kernels import ops
+    widths = []
+    real = frontier_lib.insert_batch
+
+    def spy(f, d, ids, **kw):
+        widths.append(d.shape[-1])
+        return real(f, d, ids, **kw)
+
+    monkeypatch.setattr(frontier_lib, "insert_batch", spy)
+    ops.clear_dispatch_caches()     # force retrace so the spy is seen
+    try:
+        raw = jnp.asarray(random_walk(128, 64, seed=30))
+        idx = core.build(raw, capacity=32)
+        k = 4
+        for drv in (core.search_block_major, core.search):
+            widths.clear()
+            drv(idx, raw[:3], k=k)
+            assert widths, "no inserts traced"
+            assert max(widths) == k, (drv.__name__, widths)
+        widths.clear()
+        core.search_paris(idx, raw[:3], k=k, chunk=64)
+        assert widths and max(widths) == k
+    finally:
+        ops.clear_dispatch_caches()  # drop spy-traced entries
