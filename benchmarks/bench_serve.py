@@ -1,4 +1,5 @@
-"""Serving benchmark: the block-cache SearchSession, cold vs warm.
+"""Serving benchmark: the block-cache SearchSession, cold vs warm —
+plus latency-under-concurrency for the multi-tenant coalescer.
 
 The paper's serving claim is two-sided — seconds from disk (ParIS+),
 milliseconds from memory (MESSI).  A serving process with repeated
@@ -7,14 +8,22 @@ device-resident raw blocks across query batches, so the surviving
 working set migrates on device and warm batches approach the in-memory
 latency without ever holding more than `cache_blocks` raw blocks.
 
-This driver measures that migration: a fixed sequence of query batches
-is answered twice through one session per cache size — the first pass
-cold (disk reads), the second warm (cache hits) — reporting per-batch
-p50/p99 latency, the warm-pass hit-rate, and disk bytes per pass.
-Sweeping `--cache-blocks` gives hit-rate (and latency) vs cache size.
+Two sections, one BENCH_serve.json:
+
+  * cold-vs-warm (``mode == "session"``): a fixed sequence of query
+    batches answered twice through one session per cache size —
+    per-batch p50/p99 latency, warm-pass hit-rate, disk bytes per pass;
+    sweeping `--cache-blocks` gives hit-rate (and latency) vs size.
+  * concurrency (``mode in {"isolated", "coalesced"}``): N tenants
+    submit together and are answered either by N serial isolated
+    sessions or by one coalesced ``submit``/``drain`` — per-tenant
+    completion-latency p50/p99, fairness (max/mean completion), and
+    disk blocks (sum vs union).  Exactness between the two modes is
+    asserted bitwise before anything is reported.
 
     PYTHONPATH=src python -m benchmarks.bench_serve \\
-        --size 50000 --cache-blocks 8,32,128 --out BENCH_serve.json
+        --size 50000 --cache-blocks 8,32,128 --tenants 2,4,8 \\
+        --out BENCH_serve.json
 """
 from __future__ import annotations
 
@@ -45,9 +54,77 @@ def _serve_pass(session, batches, k: int):
             session.blocks_fetched - f0, session.cache_hits - h0)
 
 
+def _concurrency_section(opened, batches, k: int, cache_blocks: int,
+                         tenants) -> list[dict]:
+    """N tenants, isolated-serial vs coalesced: completion latency,
+    fairness, and disk blocks.  Asserts bitwise exactness first."""
+    rows = []
+    for nt in tenants:
+        nt = min(nt, len(batches))
+        load = batches[:nt]
+
+        # compile warmup for the merged (sum-of-tenants, n) panel shape
+        # on a throwaway session — same-plan tickets coalesce into one
+        # device panel, a shape the per-tenant passes never traced; the
+        # measured drain below is steady-state serving, cold on disk only
+        with storage.SearchSession(opened, cache_blocks=2) as wu:
+            for qs in load:
+                wu.submit(qs, k=k)
+            jax.block_until_ready(wu.drain()[0].result().dist)
+
+        # isolated: each tenant a fresh session, answered back to back
+        # (the no-subsystem baseline); tenant i's completion latency
+        # includes the queueing behind tenants 0..i-1
+        iso_res, iso_done, iso_fetched = [], [], 0
+        t0 = time.perf_counter()
+        for qs in load:
+            with storage.SearchSession(opened,
+                                       cache_blocks=cache_blocks) as s:
+                r = s.search(qs, k=k)
+                jax.block_until_ready(r.dist)
+                iso_res.append(r)
+                iso_done.append((time.perf_counter() - t0) * 1e3)
+                iso_fetched += s.blocks_fetched
+
+        # coalesced: every tenant admitted, then ONE drain answers all —
+        # completion latency is the shared drain (plus queue position 0)
+        with storage.SearchSession(opened,
+                                   cache_blocks=cache_blocks) as sess:
+            tickets = [sess.submit(qs, k=k) for qs in load]
+            t0 = time.perf_counter()
+            sess.drain()
+            co_res = [t.result() for t in tickets]
+            jax.block_until_ready(co_res[-1].dist)
+            drain_ms = (time.perf_counter() - t0) * 1e3
+            co_fetched = sess.blocks_fetched
+        co_done = [drain_ms] * nt
+
+        for a, b in zip(iso_res, co_res):              # exactness first
+            assert np.array_equal(np.asarray(a.idx),
+                                  np.asarray(b.idx)), "exactness!"
+            assert np.array_equal(np.asarray(a.dist), np.asarray(b.dist))
+
+        for mode, done, fetched in (("isolated", iso_done, iso_fetched),
+                                    ("coalesced", co_done, co_fetched)):
+            done = np.asarray(done)
+            rows.append({
+                "mode": mode, "tenants": nt, "k": k,
+                "queries_per_tenant": int(load[0].shape[0]),
+                "cache_blocks": cache_blocks,
+                "p50_ms": float(np.percentile(done, 50)),
+                "p99_ms": float(np.percentile(done, 99)),
+                "makespan_ms": float(done.max()),
+                # 1.0 = perfectly fair (everyone finishes together);
+                # serial isolation degrades toward ~2x at large N
+                "fairness": float(done.max() / max(done.mean(), 1e-9)),
+                "blocks_fetched": int(fetched),
+            })
+    return rows
+
+
 def run(n: int = 50_000, length: int = 256, n_queries: int = 8,
         n_batches: int = 6, capacity: int = 1024,
-        cache_blocks=(8, 32, 128), k: int = 5,
+        cache_blocks=(8, 32, 128), k: int = 5, tenants=(2, 4),
         workdir: str | None = None) -> list[dict]:
     tmp = workdir or tempfile.mkdtemp(prefix="bench_serve_")
     raw = make_dataset("synthetic", n, length)
@@ -79,6 +156,7 @@ def run(n: int = 50_000, length: int = 256, n_queries: int = 8,
                                   np.asarray(b.idx)), "exactness!"
             assert np.array_equal(np.asarray(a.dist), np.asarray(b.dist))
         rows.append({
+            "mode": "session",
             "n_series": n, "k": k, "n_batches": n_batches,
             "queries_per_batch": n_queries,
             "cache_blocks": cb, "blocks_total": opened.n_blocks,
@@ -94,12 +172,20 @@ def run(n: int = 50_000, length: int = 256, n_queries: int = 8,
             "cold_mb_read": cold_fetch * opened.host_raw.block_nbytes / 2**20,
             "warm_mb_read": warm_fetch * opened.host_raw.block_nbytes / 2**20,
         })
+    conc_cb = max(2, min(max(cache_blocks), opened.n_blocks))
+    conc_rows = _concurrency_section(opened, batches, k, conc_cb, tenants)
+
     os.remove(series_path)
     os.remove(index_path)
     print_table("serving sessions: cold vs warm through the block cache",
                 rows, ["n_series", "k", "cache_blocks", "blocks_total",
                        "cold_p50_ms", "warm_p50_ms", "warm_speedup",
                        "warm_hit_rate", "cold_mb_read", "warm_mb_read"])
+    print_table("concurrency: N isolated sessions vs one coalesced drain",
+                conc_rows, ["mode", "tenants", "cache_blocks", "p50_ms",
+                            "p99_ms", "makespan_ms", "fairness",
+                            "blocks_fetched"])
+    rows += conc_rows
     write_rows("serve", rows)
     return rows
 
@@ -113,10 +199,12 @@ def main(argv=None) -> int:
             .arg("--capacity", type=int, default=1024)
             .arg("--cache-blocks", type=csv_ints, default=(8, 32, 128))
             .arg("--k", type=int, default=5)
+            .arg("--tenants", type=csv_ints, default=(2, 4))
             .main(lambda a: run(n=a.size, length=a.length,
                                 n_queries=a.queries, n_batches=a.batches,
                                 capacity=a.capacity,
-                                cache_blocks=a.cache_blocks, k=a.k), argv))
+                                cache_blocks=a.cache_blocks, k=a.k,
+                                tenants=a.tenants), argv))
 
 
 if __name__ == "__main__":

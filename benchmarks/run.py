@@ -35,7 +35,7 @@ def main(argv=None) -> int:
         "ooc": dict(sizes=(20_000,), datasets=("synthetic",),
                     capacity=256, ks=(1, 5)),
         "serve": dict(n=20_000, n_queries=4, n_batches=4, capacity=256,
-                      cache_blocks=(8, 96)),
+                      cache_blocks=(8, 96), tenants=(2, 4)),
         "dtw": dict(n=5_000),
         "kernels": dict(n_series=2048, n_queries=8, dtw_series=128,
                         dtw_flat_series=512),

@@ -41,7 +41,8 @@ def envelope_block_lb(index: BlockIndex, u_paa: jax.Array, l_paa: jax.Array
 
 
 def search_dtw(index: BlockIndex, queries: jax.Array, *, r: int, k: int = 1,
-               blocks_per_iter: int = 2) -> SearchResult:
+               blocks_per_iter: int = 2,
+               deadline_blocks: int | None = None) -> SearchResult:
     """Exact DTW k-NN using the unchanged Euclidean BlockIndex.
 
     Carries the same top-k Frontier as the Euclidean paths; pruning is
@@ -51,15 +52,21 @@ def search_dtw(index: BlockIndex, queries: jax.Array, *, r: int, k: int = 1,
     LB_Keogh bounds AND a full panel of banded-DP distances (the DP is
     computed for all candidates, then masked), so
     ``series_refined == lb_series == blocks_visited * capacity``.
+    ``deadline_blocks`` caps refined blocks per query (anytime answers /
+    straggler mitigation, same semantics as ``search.search``; None =
+    exact) — DTW's banded DP is the costliest refine in the matrix, so
+    the deadline matters most here.
     """
     plan = QueryPlan(metric=DTW(r=r), schedule="query_major", k=k,
-                     blocks_per_iter=blocks_per_iter)
+                     blocks_per_iter=blocks_per_iter,
+                     deadline_blocks=deadline_blocks)
     return engine.run(index, queries, plan)
 
 
 def search_dtw_flat(index: FlatIndex, queries: jax.Array, *, r: int,
                     k: int = 1, block_index: BlockIndex | None = None,
-                    chunk: int = 4096) -> SearchResult:
+                    chunk: int = 4096,
+                    deadline_blocks: int | None = None) -> SearchResult:
     """Exact DTW k-NN on the ParIS flat schedule (DTW x flat).
 
     One interval-to-region MINDIST pass over the whole per-series SAX
@@ -67,6 +74,9 @@ def search_dtw_flat(index: FlatIndex, queries: jax.Array, *, r: int,
     best bound.  ``block_index`` (optional, from the same build) enables
     stage-A seeding; the exactness argument is the ED one verbatim,
     since the planar bound lower-bounds LB_Keogh_PAA and hence DTW.
+    ``deadline_blocks`` caps refined CHUNKS (the flat schedule's block
+    analogue; None = exact).
     """
-    plan = QueryPlan(metric=DTW(r=r), schedule="flat", k=k, chunk=chunk)
+    plan = QueryPlan(metric=DTW(r=r), schedule="flat", k=k, chunk=chunk,
+                     deadline_blocks=deadline_blocks)
     return engine.run_flat(index, queries, plan, block_index)

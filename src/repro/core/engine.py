@@ -388,6 +388,14 @@ class QueryPlan:
         if self.schedule not in SCHEDULES:
             raise ValueError(f"schedule must be one of {SCHEDULES}, "
                              f"got {self.schedule!r}")
+        if self.deadline_blocks is not None and self.deadline_blocks < 1:
+            # fail at plan construction, not deep inside a walk: every
+            # backend clamps the deadline against n_blocks, and a <= 0
+            # deadline would silently clamp to an empty walk — an
+            # approximate answer the caller never asked for
+            raise ValueError(
+                f"deadline_blocks must be >= 1 (or None for an exact "
+                f"search), got {self.deadline_blocks}")
 
 
 def _require_device_resident(index: BlockIndex) -> None:
@@ -681,6 +689,12 @@ def run_flat(index: FlatIndex, queries: jax.Array, plan: QueryPlan,
     chunk is then refined in full, which seeds it).  Metric-generic: the
     per-series planar bound is the same ``Metric.block_lb`` formula
     evaluated on per-series (not per-block) region bounds.
+
+    ``plan.deadline_blocks`` (anytime, in CHUNK units — the flat
+    schedule's block analogue) caps the number of chunks refined: the LB
+    pass still covers every series, but once the cap is hit later
+    chunks' candidates are skipped, exactly like a deadline-cut
+    block-major walk defers its unvisited blocks.
     """
     from repro.core.search import SearchResult
     metric = plan.metric
@@ -713,11 +727,17 @@ def run_flat(index: FlatIndex, queries: jax.Array, plan: QueryPlan,
     ids_c = ids.reshape(nchunks, c)
     lb_c = lb.reshape(qn, nchunks, c)
 
+    deadline = plan.deadline_blocks      # static: None leaves the exact
+                                         # scan's traced graph unchanged
+
     def step(carry, inp):
-        front, refined = carry
+        front, refined, nref = carry
         raw_k, ids_k, lb_k = inp                              # (C,n),(C,),(Q,C)
         thr = _bound(front, initial_threshold)
         act = (lb_k < thr[:, None]) & (ids_k[None, :] >= 0)
+        do = jnp.any(act)
+        if deadline is not None:
+            do = jnp.logical_and(do, nref < deadline)
 
         def refine(cr):
             front_j, refined_j = cr
@@ -728,12 +748,12 @@ def run_flat(index: FlatIndex, queries: jax.Array, plan: QueryPlan,
             return (front_n,
                     refined_j + jnp.sum(act, axis=1, dtype=jnp.int32))
 
-        carry = jax.lax.cond(jnp.any(act), refine, lambda cr: cr,
-                             (front, refined))
-        return carry, None
+        front, refined = jax.lax.cond(do, refine, lambda cr: cr,
+                                      (front, refined))
+        return (front, refined, nref + do.astype(jnp.int32)), None
 
-    (front, refined), _ = jax.lax.scan(
-        step, (front, jnp.zeros((qn,), jnp.int32)),
+    (front, refined, _), _ = jax.lax.scan(
+        step, (front, jnp.zeros((qn,), jnp.int32), jnp.zeros((), jnp.int32)),
         (raw_c, ids_c, jnp.moveaxis(lb_c, 1, 0)))
 
     stats = SearchStats(
@@ -807,7 +827,7 @@ def run_cached(index: BlockIndex, queries: jax.Array, plan: QueryPlan, *,
                speculate: Callable[[int], None] = lambda b: None,
                initial_threshold: jax.Array | None = None,
                prepared: PreparedSearch | None = None
-               ) -> tuple[Frontier, SearchStats]:
+               ) -> tuple[Frontier, SearchStats, PreparedSearch]:
     """The §5 host-level walk: the block-major schedule driven through a
     fetch callback (``storage.BlockCache`` in production).
 
@@ -817,22 +837,31 @@ def run_cached(index: BlockIndex, queries: jax.Array, plan: QueryPlan, *,
     disk read is needed), ``speculate(b)`` starts a background read.
     The one-block-ahead speculation is threshold-speculative: the bound
     only tightens, so it can waste bytes but never wrongly refine.
-    Returns the local frontier and stats; I/O accounting belongs to the
-    callback owner (the session).
+    Returns ``(frontier, stats, state)``: the local frontier, the
+    finalized work stats, and the walk's end state as a resumable
+    ``PreparedSearch`` (pre-finalize stats; ``refined`` holds every
+    block this run — and the run it resumed — actually refined).  I/O
+    accounting belongs to the callback owner (the session).
 
-    ``prepared`` resumes from a round-1 ``PreparedSearch`` (produced by
-    ``run_cached_stage_a`` for the same metric, index, queries, and k):
-    query prep, block ranking, and stage A are skipped, and the walk
-    never fetches or refines a block in ``prepared.refined`` again.
+    ``plan.deadline_blocks`` caps the blocks the walk refines AFTER
+    stage A (the paper's approximate phase always completes, so an
+    anytime answer is never worse than MESSI's approximate one); when
+    the cap fires the returned frontier is the anytime answer and the
+    returned state is its exact-resume continuation —
+    ``serve.certify`` derives the certified error bound from it, and
+    feeding it back through ``prepared`` upgrades to the exact answer
+    bit-identically (same schedule order, same thresholds at every
+    refine) while refining only the deferred blocks.
+
+    ``prepared`` resumes from a ``PreparedSearch`` (produced by
+    ``run_cached_stage_a`` — or a deadline-cut ``run_cached`` — for the
+    same metric, index, queries, and k): query prep, block ranking, and
+    stage A are skipped, and the walk never fetches or refines a block
+    in ``prepared.refined`` again.
     """
     if plan.schedule != "block_major":
         raise ValueError("the cached backend walks the block-major "
                          f"schedule; got {plan.schedule!r}")
-    if plan.deadline_blocks is not None:
-        raise ValueError("deadline_blocks is not implemented on the cached "
-                         "backend (ROADMAP: anytime semantics for cached "
-                         "plans); drop it from the plan or use the "
-                         "device-resident backend")
     n_blocks = index.n_blocks
     if prepared is None:
         prep = cached_setup(index, queries, plan)
@@ -848,6 +877,7 @@ def run_cached(index: BlockIndex, queries: jax.Array, plan: QueryPlan, *,
     step = functools.partial(_cached_refine_step, plan.metric,
                              n=index.n, w=index.w)
     needs = plan.metric.filters and plan.metric.needs_bounds
+    budget = plan.deadline_blocks        # refines left; None = unbounded
 
     # -- block-major walk over the surviving schedule -----------------
     order, sched_lb, suffix = block_major_schedule(block_lb_h, xp=np)
@@ -857,11 +887,14 @@ def run_cached(index: BlockIndex, queries: jax.Array, plan: QueryPlan, *,
         return int(order[ptr]) not in done \
             and bool(np.any(sched_lb[:, ptr] < thr_h))
 
+    walked: list[int] = []               # blocks THIS walk refined
     thr_h = np.asarray(_bound(front, initial_threshold))              # sync
     ptr = 0
     while ptr < n_blocks:
         if np.all(suffix[:, ptr] >= thr_h):
             break                       # nothing later helps any query
+        if budget is not None and len(walked) >= budget:
+            break                       # deadline: answer is anytime now
         if not pending(ptr):
             ptr += 1
             continue                    # pruned (or stage-A-refined)
@@ -871,19 +904,23 @@ def run_cached(index: BlockIndex, queries: jax.Array, plan: QueryPlan, *,
         front, stats = step(qs, front, stats, fetch(b_id), index.ids[b_id],
                             lo, hi, block_lb[:, b_id],
                             initial_threshold)                        # async
+        walked.append(b_id)
         nxt = ptr + 1                   # next survivor under current thr
         while nxt < n_blocks and not pending(nxt):
             nxt += 1
         if nxt < n_blocks and not np.all(suffix[:, nxt] >= thr_h):
             # threshold-speculative: read overlaps the refine above; if
             # the slot is pruned before its turn the block just stays
-            # in the cache under its id for a later query/batch
+            # in the cache under its id for a later query/batch (a
+            # deadline-cut walk leaves it warm for its own continuation)
             speculate(int(order[nxt]))
         thr_h = np.asarray(_bound(front, initial_threshold))  # one sync/block
         # blocks in (ptr, nxt) were pruned under a bound that only
         # tightened since — safe to jump straight to the prefetch target
         ptr = nxt
-    return front, plan.metric.finalize_stats(stats, index.capacity)
+    state = dataclasses.replace(prep, front=front, stats=stats,
+                                refined=done | frozenset(walked))
+    return front, plan.metric.finalize_stats(stats, index.capacity), state
 
 
 def run_cached_stage_a(index: BlockIndex, queries: jax.Array,

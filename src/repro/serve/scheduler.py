@@ -1,0 +1,164 @@
+"""The coalesced query-major priority walk (DESIGN.md §9).
+
+``engine.run_cached`` walks block-major: one static schedule (ascending
+min-over-queries envelope LB) shared by the whole batch.  Serving mixed
+traffic wants the paper-faithful *query-major* order instead — each
+query works through ITS OWN LB-ascending block list — without paying N
+cold walks for N concurrent tenants.  This walk does both:
+
+  * **priority**: at every step the fetched block is the most urgent
+    query's next-best unrefined block — the global argmin, over all
+    tenants' (query, block) pairs still able to improve a result, of
+    the envelope lower bound.  Selecting that argmin IS per-query
+    priority order: the winning query advances through its own ranking,
+    and urgency decides the interleave (a dynamic generalization of the
+    block-major schedule, which fixes the order up front and ignores
+    thresholds).
+  * **coalescing**: the fetched block refines EVERY tenant that could
+    still need it, in one pass per tenant, and is marked refined for
+    all of them — tenants whose queries no longer reach it (their
+    bounds only tighten) skip it forever.  N tenants therefore fetch
+    the union of their surviving block sets, not the sum.
+
+Exactness is the engine's argument verbatim: a (query, block) pair is
+only skipped once ``lb >= threshold``, and thresholds only tighten, so
+no true k-NN member is ever dismissed — the final frontier is
+bit-identical to each tenant running alone (the same candidates meet
+the same ``panel_refine`` pipeline; only fetch order and count differ).
+
+``budget`` bounds the walk's refines for anytime serving: when it
+fires, each incomplete tenant's state is a deadline-cut walk state —
+``serve.certify`` bounds its error, ``prepared=`` resumes it to exact.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable
+
+import jax
+import numpy as np
+
+from repro.core import engine
+from repro.core.index import BlockIndex
+
+
+@dataclasses.dataclass
+class TenantRun:
+    """One admitted query batch's in-walk state.
+
+    ``plan`` is the tenant's deadline-free plan (metric and k may differ
+    across tenants sharing a walk); ``state`` is the evolving
+    ``engine.PreparedSearch`` — stage-A-seeded on entry, the tenant's
+    final (or anytime-resumable) state on exit.  ``complete`` is set
+    once no unrefined block can improve any of the tenant's queries.
+    """
+    plan: engine.QueryPlan
+    queries: jax.Array
+    state: engine.PreparedSearch
+    complete: bool = False
+
+
+def prepare_tenant(index: BlockIndex, queries: jax.Array,
+                   plan: engine.QueryPlan, *,
+                   fetch: Callable[[int], jax.Array],
+                   speculate: Callable[[int], None] = lambda b: None
+                   ) -> TenantRun:
+    """Admission: metric prep + block ranking + stage-A seeding.
+
+    Stage A goes through the SHARED fetch callback, so tenants whose
+    best-envelope blocks coincide already coalesce here — the second
+    tenant's stage A is a cache hit, not a disk read.
+    """
+    state = engine.run_cached_stage_a(index, queries, plan,
+                                      fetch=fetch, speculate=speculate)
+    return TenantRun(plan=plan, queries=queries, state=state)
+
+
+def coalesced_walk(index: BlockIndex, tenants: list[TenantRun], *,
+                   fetch: Callable[[int], jax.Array],
+                   speculate: Callable[[int], None] = lambda b: None,
+                   budget: int | None = None) -> int:
+    """Run the shared priority walk to completion (or ``budget`` refines).
+
+    Mutates each tenant's ``state``/``complete`` in place; returns the
+    number of blocks fetched+refined by the walk (excluding stage A).
+    One device sync per tenant per refined block (the threshold
+    read-back), same cadence as ``run_cached``; the next target's read
+    is speculated before the sync so disk stays overlapped with compute.
+    """
+    if not tenants:
+        return 0
+    n_blocks = index.n_blocks
+    # host-side walk state, per tenant: LB matrix, refined mask, thresholds
+    lbs = [np.asarray(t.state.block_lb) for t in tenants]
+    thrs = [np.asarray(t.state.front.threshold()) for t in tenants]
+    refined = []
+    for t in tenants:
+        mask = np.zeros(n_blocks, dtype=bool)
+        if t.state.refined:
+            mask[np.fromiter(t.state.refined, dtype=np.int64)] = True
+        refined.append(mask)
+    walked = [set() for _ in tenants]     # beyond-stage-A refines, per tenant
+
+    def urgency(i: int) -> np.ndarray:
+        """(B,) tenant i's most urgent pending lb per block (inf = none)."""
+        live = np.where(lbs[i] < thrs[i][:, None], lbs[i], np.inf)
+        u = live.min(axis=0)
+        u[refined[i]] = np.inf
+        return u
+
+    def pick() -> tuple[int, float]:
+        glob = np.full(n_blocks, np.inf)
+        for i in range(len(tenants)):
+            if not tenants[i].complete:
+                u = urgency(i)
+                if np.isinf(u).all():
+                    tenants[i].complete = True
+                else:
+                    glob = np.minimum(glob, u)
+        b = int(np.argmin(glob))
+        return b, float(glob[b])
+
+    steps = 0
+    while True:
+        b_id, best = pick()
+        if not np.isfinite(best):
+            break                          # every tenant proved complete
+        if budget is not None and steps >= budget:
+            break                          # deadline: states are anytime now
+        block = fetch(b_id)
+        lo = index.slo[b_id]
+        hi = index.shi[b_id]
+        for i, t in enumerate(tenants):
+            if refined[i][b_id]:
+                continue                   # stage A (or an earlier step)
+            refined[i][b_id] = True        # needed or not, never revisit:
+            if not (lbs[i][:, b_id] < thrs[i]).any():
+                continue                   # bounds only tighten from here
+            metric = t.plan.metric
+            needs = metric.filters and metric.needs_bounds
+            front, stats = engine._cached_refine_step(
+                metric, t.state.qs, t.state.front, t.state.stats,
+                block, index.ids[b_id],
+                lo if needs else None, hi if needs else None,
+                t.state.block_lb[:, b_id], None,
+                n=index.n, w=index.w)      # async dispatch
+            t.state = dataclasses.replace(t.state, front=front, stats=stats)
+            walked[i].add(b_id)
+        steps += 1
+        # speculate the next target under the PRE-sync thresholds (the
+        # bound only tightens: a wasted read stays cached under its id),
+        # then pay the one sync per tenant this block cost
+        nxt, nbest = pick()
+        if np.isfinite(nbest):
+            speculate(nxt)
+        for i, t in enumerate(tenants):
+            if not t.complete:
+                thrs[i] = np.asarray(t.state.front.threshold())
+
+    for i, t in enumerate(tenants):
+        t.state = dataclasses.replace(
+            t.state, refined=t.state.refined | frozenset(walked[i]))
+        if not t.complete:                 # re-check under final thresholds
+            t.complete = bool(np.isinf(urgency(i)).all())
+    return steps

@@ -50,11 +50,13 @@ small cache, preserving the streaming memory profile of a single batch.
 """
 from __future__ import annotations
 
+import dataclasses
 import threading
 from collections import OrderedDict
 from concurrent.futures import Future, ThreadPoolExecutor
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
 from repro.core import engine
@@ -87,6 +89,7 @@ class BlockCache:
                 f"capacity_blocks must be >= 2, got {capacity_blocks}")
         self.host = host
         self.capacity_blocks = capacity_blocks
+        self._closed = False
         self._lru: OrderedDict[int, jax.Array] = OrderedDict()
         self._inflight: dict[int, Future] = {}
         self._lock = threading.Lock()
@@ -176,6 +179,10 @@ class BlockCache:
             self._lru.clear()
 
     def close(self) -> None:
+        """Stop the reader and drop every cached block (idempotent)."""
+        if self._closed:
+            return
+        self._closed = True
         self.drain()
         self._reader.shutdown(wait=True)
         with self._lock:
@@ -223,6 +230,48 @@ def _query_signature(queries) -> tuple:
     return (q.shape, str(q.dtype), hash(q.tobytes()))
 
 
+class _TouchTracker:
+    """One accounting unit's fetch/speculate callbacks over a cache.
+
+    The first touch of each block id decides hit vs miss exactly once
+    per unit — later touches of the same block (a ``get`` after its own
+    prefetch, or another tenant of a coalesced drain needing the same
+    block) count nothing.  A resumed round 2 constructs the tracker
+    from round 1's carried touch-set, continuing the same unit.
+    """
+
+    def __init__(self, cache: BlockCache, touched: set | None = None,
+                 hits: int = 0):
+        self.cache = cache
+        self.touched = set() if touched is None else touched
+        self.hits = hits
+        # snapshot the disk counters so the unit's deltas are its own
+        self._reads0 = cache.disk_blocks
+        self._bytes0 = cache.disk_bytes
+
+    def _touch(self, b: int) -> None:
+        if b not in self.touched:
+            self.touched.add(b)
+            if b in self.cache:
+                self.hits += 1
+
+    def fetch(self, b: int) -> jax.Array:
+        self._touch(b)
+        return self.cache.get(b)
+
+    def speculate(self, b: int) -> None:
+        self._touch(b)
+        self.cache.prefetch(b)
+
+    @property
+    def disk_blocks(self) -> int:
+        return self.cache.disk_blocks - self._reads0
+
+    @property
+    def disk_bytes(self) -> int:
+        return self.cache.disk_bytes - self._bytes0
+
+
 class SearchSession:
     """Stateful out-of-core serving: one block cache across query batches.
 
@@ -247,6 +296,9 @@ class SearchSession:
         self.batches = 0
         self.cache_hits = 0
         self.blocks_fetched = 0
+        self._closed = False
+        self._coalescer = None         # built lazily on first submit()
+        self._coalescer_lock = threading.Lock()
 
     @property
     def hit_rate(self) -> float:
@@ -254,6 +306,13 @@ class SearchSession:
         return self.cache_hits / max(self.cache_hits + self.blocks_fetched, 1)
 
     def close(self) -> None:
+        """Release the cache's reader thread and device blocks (idempotent).
+
+        Submitted-but-undrained tickets are NOT answered — drain first.
+        """
+        if self._closed:
+            return
+        self._closed = True
         self.cache.close()
 
     def __enter__(self) -> "SearchSession":
@@ -261,6 +320,25 @@ class SearchSession:
 
     def __exit__(self, exc_type, exc, tb) -> None:
         self.close()
+
+    def _bill(self, tracker: _TouchTracker, *, carry_blocks: int = 0,
+              carry_bytes: int = 0, batches: int = 1) -> IOStats:
+        """Close out one accounting unit: its ``IOStats``, rolled into
+        the session totals.  ``carry_*`` are disk reads billed into this
+        unit from a resumed round 1; ``batches`` is how many logical
+        query batches the unit answered (a coalesced drain bills once
+        for N)."""
+        fetched = tracker.disk_blocks + carry_blocks
+        io = IOStats(bytes_read=tracker.disk_bytes + carry_bytes,
+                     bytes_scan=(self.index.n_real * self.index.n
+                                 * self.index.host_raw.dtype.itemsize),
+                     blocks_fetched=fetched,
+                     blocks_total=self.index.n_blocks,
+                     cache_hits=tracker.hits)
+        self.batches += batches
+        self.cache_hits += tracker.hits
+        self.blocks_fetched += fetched
+        return io
 
     def _plan(self, k: int, lb_filter: bool, normalize_queries: bool,
               metric) -> engine.QueryPlan:
@@ -289,33 +367,15 @@ class SearchSession:
         its reads are billed to no batch.
         """
         plan = self._plan(k, lb_filter, normalize_queries, metric)
-        cache = self.cache
-        reads0, bytes0 = cache.disk_blocks, cache.disk_bytes
-        touched: set[int] = set()
-        hits = 0
-
-        def touch(b: int) -> None:
-            nonlocal hits
-            if b not in touched:
-                touched.add(b)
-                if b in cache:
-                    hits += 1
-
-        def fetch(b: int) -> jax.Array:
-            touch(b)
-            return cache.get(b)
-
-        def speculate(b: int) -> None:
-            touch(b)
-            cache.prefetch(b)
-
+        tracker = _TouchTracker(self.cache)
         state = engine.run_cached_stage_a(
-            self.index, queries, plan, fetch=fetch, speculate=speculate)
-        cache.drain()
+            self.index, queries, plan,
+            fetch=tracker.fetch, speculate=tracker.speculate)
+        self.cache.drain()
         return PreparedRound(self, plan, _query_signature(queries), state,
-                             carry_blocks=cache.disk_blocks - reads0,
-                             carry_bytes=cache.disk_bytes - bytes0,
-                             touched=touched, hits=hits)
+                             carry_blocks=tracker.disk_blocks,
+                             carry_bytes=tracker.disk_bytes,
+                             touched=tracker.touched, hits=tracker.hits)
 
     def _check_prepared(self, prepared: PreparedRound, plan, qsig) -> None:
         if prepared.session is not self:
@@ -339,8 +399,8 @@ class SearchSession:
                normalize_queries: bool = True,
                metric=None,
                initial_threshold: jax.Array | None = None,
-               prepared: PreparedRound | None = None
-               ) -> OocSearchResult:
+               prepared: PreparedRound | None = None,
+               deadline_blocks: int | None = None):
         """Exact k-NN for one (Q, n) query batch through the cache.
 
         The walk is ``engine.run_cached`` — the §5 block-major schedule
@@ -353,59 +413,99 @@ class SearchSession:
         distributed protocol passes the globally-reduced k-th best; it
         never appears in the result, which holds this shard's own top-k.
         ``prepared`` resumes a round-1 ``PreparedRound`` from this
-        session's ``approximate_threshold`` (same queries and plan):
-        the walk skips stage A entirely and this batch's ``IOStats``
-        bills round 1's reads and continues its touch-set.
-        """
-        index, cache = self.index, self.cache
-        host = index.host_raw
-        plan = self._plan(k, lb_filter, normalize_queries, metric)
+        session's ``approximate_threshold`` (same queries and plan) or
+        an anytime answer's continuation: the walk skips stage A and
+        every already-refined block, and this batch's ``IOStats`` bills
+        the round's carried reads and continues its touch-set.
 
-        # per-run accounting: the first touch of each block id decides
-        # hit vs miss; later touches (a get() after its own prefetch) are
-        # the same block and count nothing.  A resumed round 2 continues
-        # round 1's touch-set — one touch-set per protocol run, so a
-        # block round 1 fetched can never be re-counted as a warm hit.
+        ``deadline_blocks`` caps post-stage-A refines and switches the
+        return type to a certified ``serve.AnytimeResult`` (the current
+        top-k, a two-sided bound on the true k-th distance, and a
+        ``refine_to_exact()`` continuation); ``None`` (default) returns
+        the exact ``OocSearchResult``.  A deadline cannot be combined
+        with ``initial_threshold`` or ``prepared`` — the anytime
+        contract is a fresh batch's.
+        """
+        index = self.index
+        plan = self._plan(k, lb_filter, normalize_queries, metric)
+        if deadline_blocks is not None:
+            if deadline_blocks < 1:
+                raise ValueError(f"deadline_blocks must be >= 1 (or None "
+                                 f"for an exact search), "
+                                 f"got {deadline_blocks}")
+            if initial_threshold is not None or prepared is not None:
+                raise ValueError("deadline_blocks cannot be combined with "
+                                 "initial_threshold or prepared — an "
+                                 "anytime answer starts a fresh batch")
+
+        # per-run accounting: one touch-set per protocol run (see
+        # _TouchTracker), so a block round 1 fetched can never be
+        # re-counted as a warm hit by the round 2 that resumes it.
         if prepared is not None:
             self._check_prepared(prepared, plan, _query_signature(queries))
             prepared.consumed = True
-            seen, hits = prepared.touched, prepared.hits
+            tracker = _TouchTracker(self.cache, prepared.touched,
+                                    prepared.hits)
             carry_blocks, carry_bytes = (prepared.carry_blocks,
                                          prepared.carry_bytes)
         else:
-            seen, hits = set(), 0
+            tracker = _TouchTracker(self.cache)
             carry_blocks = carry_bytes = 0
-        reads0, bytes0 = cache.disk_blocks, cache.disk_bytes
 
-        def touch(b: int) -> None:
-            nonlocal hits
-            if b not in seen:
-                seen.add(b)
-                if b in cache:
-                    hits += 1
-
-        def fetch(b: int) -> jax.Array:
-            touch(b)
-            return cache.get(b)
-
-        def speculate(b: int) -> None:
-            touch(b)
-            cache.prefetch(b)
-
-        front, stats = engine.run_cached(
-            index, queries, plan, fetch=fetch, speculate=speculate,
+        run_plan = (plan if deadline_blocks is None else
+                    dataclasses.replace(plan,
+                                        deadline_blocks=deadline_blocks))
+        front, stats, state = engine.run_cached(
+            index, queries, run_plan,
+            fetch=tracker.fetch, speculate=tracker.speculate,
             initial_threshold=initial_threshold,
             prepared=None if prepared is None else prepared.state)
 
-        cache.drain()   # settle the last speculation into this batch's bill
-        fetched = cache.disk_blocks - reads0 + carry_blocks
-        io = IOStats(bytes_read=cache.disk_bytes - bytes0 + carry_bytes,
-                     bytes_scan=index.n_real * index.n * host.dtype.itemsize,
-                     blocks_fetched=fetched,
-                     blocks_total=index.n_blocks,
-                     cache_hits=hits)
-        self.batches += 1
-        self.cache_hits += hits
-        self.blocks_fetched += fetched
-        return OocSearchResult(dist=frontier_lib.result_dists(front),
-                               idx=front.ids, stats=stats, io=io)
+        self.cache.drain()  # settle the last speculation into this bill
+        io = self._bill(tracker, carry_blocks=carry_blocks,
+                        carry_bytes=carry_bytes)
+        dist = frontier_lib.result_dists(front)
+        if deadline_blocks is None:
+            return OocSearchResult(dist=dist, idx=front.ids,
+                                   stats=stats, io=io)
+        from repro.serve.anytime import AnytimeResult, certify
+        resume = PreparedRound(self, plan, _query_signature(queries), state,
+                               carry_blocks=0, carry_bytes=0,
+                               touched=set(), hits=0)
+        return AnytimeResult(dist=dist, idx=front.ids, stats=stats, io=io,
+                             certificate=certify(state), resume=resume,
+                             queries=jnp.asarray(queries))
+
+    # -- concurrent serving (serve.AdmissionCoalescer) -------------------
+
+    def submit(self, queries: jax.Array, *, k: int = 1,
+               lb_filter: bool = True, normalize_queries: bool = True,
+               metric=None):
+        """Admit a query batch for coalesced serving -> ``serve.Ticket``.
+
+        Thread-safe and non-blocking: concurrent callers each get a
+        ticket immediately; the next ``drain()`` (or the first caller
+        to block on ``Ticket.result()``) answers every pending ticket
+        in ONE coalesced priority walk — each block read from disk at
+        most once for all of them.  Results are bit-identical to
+        ``search`` on each batch alone.
+        """
+        if self._coalescer is None:
+            with self._coalescer_lock:
+                if self._coalescer is None:
+                    from repro.serve.coalescer import AdmissionCoalescer
+                    self._coalescer = AdmissionCoalescer(self)
+        return self._coalescer.submit(
+            queries, self._plan(k, lb_filter, normalize_queries, metric))
+
+    def drain(self, *, deadline_blocks: int | None = None) -> list:
+        """Answer every pending ``submit`` in one coalesced walk.
+
+        Returns the resolved tickets (empty list if nothing pending).
+        With ``deadline_blocks``, the shared walk stops after that many
+        refines past stage A and unfinished tickets resolve to certified
+        ``serve.AnytimeResult``s instead of exact results.
+        """
+        if self._coalescer is None:
+            return []
+        return self._coalescer.drain(deadline_blocks=deadline_blocks)

@@ -12,6 +12,7 @@ the engine newly unlocks check exactness against their oracle paths:
 """
 import os
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
@@ -282,9 +283,35 @@ def test_run_refuses_out_of_core_index(opened, data):
         engine.run(opened, qs, engine.QueryPlan())
 
 
-def test_run_cached_rejects_deadline(opened, data):
+def test_plan_rejects_nonpositive_deadline():
+    for bad in (0, -3):
+        with pytest.raises(ValueError, match="deadline_blocks"):
+            engine.QueryPlan(deadline_blocks=bad)
+
+
+def test_run_cached_deadline_cuts_then_resumes_exact(opened, data):
+    """A deadline-cut walk returns a resumable state whose continuation
+    lands bit-identically on the exact answer (frontier AND cumulative
+    stats), refining only the deferred blocks."""
     _, qs = data
-    with pytest.raises(ValueError, match="deadline_blocks"):
-        engine.run_cached(opened, qs,
-                          engine.QueryPlan(deadline_blocks=4),
-                          fetch=lambda b: None)
+
+    def fetch(b):
+        return jax.device_put(opened.host_raw.fetch(b))
+
+    plan = engine.QueryPlan(schedule="block_major", k=5)
+    cut_plan = engine.QueryPlan(schedule="block_major", k=5,
+                                deadline_blocks=2)
+    front, _, state = engine.run_cached(opened, qs, cut_plan, fetch=fetch)
+    ref_front, ref_stats, ref_state = engine.run_cached(opened, qs, plan,
+                                                        fetch=fetch)
+    assert state.refined < ref_state.refined     # strictly fewer blocks
+    got_front, got_stats, _ = engine.run_cached(opened, qs, plan,
+                                                fetch=fetch, prepared=state)
+    assert np.array_equal(np.asarray(got_front.dists),
+                          np.asarray(ref_front.dists))
+    assert np.array_equal(np.asarray(got_front.ids),
+                          np.asarray(ref_front.ids))
+    assert np.array_equal(np.asarray(got_stats.blocks_visited),
+                          np.asarray(ref_stats.blocks_visited))
+    assert np.array_equal(np.asarray(got_stats.series_refined),
+                          np.asarray(ref_stats.series_refined))

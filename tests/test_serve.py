@@ -1,0 +1,302 @@
+"""Multi-tenant serving (DESIGN.md §9): coalesced submit/drain answers
+bit-identically to isolated sessions while fetching fewer blocks; anytime
+answers carry a valid two-sided certificate that tightens monotonically
+with the deadline; ``refine_to_exact`` upgrades bit-identically without
+repeating refined blocks."""
+import threading
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+import repro.core as core
+from _hyp import given, settings, st
+from repro import serve, storage
+from repro.core import engine
+from repro.core.ucr import search_scan
+from repro.data import random_walk
+
+N, LEN, CAP = 4000, 128, 128
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    raw = random_walk(N, LEN, seed=31)
+    rng = np.random.default_rng(17)
+    picks = rng.choice(N, 12, replace=False)
+    qs = jnp.asarray(raw[picks] + 0.05 * rng.standard_normal((12, LEN))
+                     .astype(np.float32))
+    return raw, qs
+
+
+@pytest.fixture(scope="module")
+def opened(dataset, tmp_path_factory):
+    raw, _ = dataset
+    idx = core.build(jnp.asarray(raw), capacity=CAP)
+    path = tmp_path_factory.mktemp("serve") / "rw.dsix"
+    storage.save_index(idx, path)
+    return storage.open_index(path)
+
+
+def _bitwise(got, want):
+    assert np.array_equal(np.asarray(got.idx), np.asarray(want.idx))
+    assert np.array_equal(np.asarray(got.dist), np.asarray(want.dist))
+
+
+def _isolated(opened, batches):
+    """Each batch through its own fresh session; returns results and the
+    total disk blocks fetched across all sessions."""
+    results, fetched = [], 0
+    for qs, kwargs in batches:
+        with storage.SearchSession(opened, cache_blocks=64) as sess:
+            results.append(sess.search(qs, **kwargs))
+            fetched += sess.blocks_fetched
+    return results, fetched
+
+
+# ---------------------------------------------------------------------------
+# coalesced serving: exactness and coalescing
+# ---------------------------------------------------------------------------
+
+def test_coalesced_drain_bit_identical_to_isolated(dataset, opened):
+    """The acceptance property: concurrent tenants (heterogeneous k)
+    answered by one coalesced walk match isolated serial sessions
+    bitwise, while the shared cache fetches strictly fewer blocks than
+    the N sessions do in total."""
+    _, qs = dataset
+    batches = [(qs[0:4], dict(k=5)), (qs[4:8], dict(k=1)),
+               (qs[8:12], dict(k=3))]
+    want, isolated_fetches = _isolated(opened, batches)
+
+    with storage.SearchSession(opened, cache_blocks=64) as sess:
+        tickets = [sess.submit(q, **kw) for q, kw in batches]
+        resolved = sess.drain()
+        assert set(resolved) == set(tickets)
+        for t, w in zip(tickets, want):
+            _bitwise(t.result(), w)
+        assert sess.blocks_fetched < isolated_fetches
+        assert sess.batches == len(batches)
+
+
+def test_coalesced_drain_matches_oracle(dataset, opened):
+    raw, qs = dataset
+    with storage.SearchSession(opened, cache_blocks=64) as sess:
+        t = sess.submit(qs, k=5)
+        sess.drain()
+        got = t.result()
+    want = search_scan(jnp.asarray(raw), qs, k=5)
+    assert np.array_equal(np.asarray(got.idx), np.asarray(want.idx))
+
+
+def test_coalesced_mixed_metrics(dataset, opened):
+    """ED and DTW tenants share one walk: per-tenant plans keep their
+    own metric; answers match each metric's isolated run bitwise."""
+    _, qs = dataset
+    batches = [(qs[0:3], dict(k=3)),
+               (qs[3:6], dict(k=3, metric=engine.DTW(r=4)))]
+    want, isolated_fetches = _isolated(opened, batches)
+    with storage.SearchSession(opened, cache_blocks=64) as sess:
+        tickets = [sess.submit(q, **kw) for q, kw in batches]
+        sess.drain()
+        for t, w in zip(tickets, want):
+            _bitwise(t.result(), w)
+        assert sess.blocks_fetched < isolated_fetches
+
+
+def test_threaded_submitters_one_drain(dataset, opened):
+    """Tenant threads submit concurrently and block on their own ticket;
+    the first to ask drains for everyone.  Answers equal each thread's
+    isolated result."""
+    _, qs = dataset
+    batches = [(qs[i:i + 3], dict(k=2)) for i in range(0, 12, 3)]
+    want, _ = _isolated(opened, batches)
+    got = [None] * len(batches)
+    errs = []
+
+    with storage.SearchSession(opened, cache_blocks=64) as sess:
+        barrier = threading.Barrier(len(batches))
+
+        def tenant(i, q, kw):
+            try:
+                t = sess.submit(q, **kw)
+                barrier.wait()        # everyone admitted before anyone drains
+                got[i] = t.result()
+            except BaseException as e:   # pragma: no cover - surfaced below
+                errs.append(e)
+
+        threads = [threading.Thread(target=tenant, args=(i, q, kw))
+                   for i, (q, kw) in enumerate(batches)]
+        for th in threads:
+            th.start()
+        for th in threads:
+            th.join()
+    assert not errs
+    for g, w in zip(got, want):
+        _bitwise(g, w)
+
+
+def test_drain_empty_and_ticket_reuse(dataset, opened):
+    _, qs = dataset
+    with storage.SearchSession(opened, cache_blocks=64) as sess:
+        assert sess.drain() == []
+        t = sess.submit(qs[:2], k=1)
+        sess.drain()
+        r1 = t.result()
+        assert t.result() is r1          # resolved tickets answer again
+        assert sess.drain() == []        # nothing pending anymore
+
+
+def test_submit_rejects_per_ticket_deadline(dataset, opened):
+    _, qs = dataset
+    with storage.SearchSession(opened, cache_blocks=64) as sess:
+        coal = serve.AdmissionCoalescer(sess)
+        plan = engine.QueryPlan(metric=engine.ED(), schedule="block_major",
+                                k=1, deadline_blocks=3)
+        with pytest.raises(ValueError, match="drain"):
+            coal.submit(qs[:1], plan)
+
+
+# ---------------------------------------------------------------------------
+# anytime answers and certificates
+# ---------------------------------------------------------------------------
+
+def test_anytime_certificate_brackets_truth(dataset, opened):
+    """For EVERY query and every deadline, the certified interval must
+    bracket the true k-th distance (the subsystem's core guarantee)."""
+    _, qs = dataset
+    with storage.SearchSession(opened, cache_blocks=64) as ref:
+        true_kth = np.asarray(ref.search(qs, k=5).dist)[:, -1]
+    for deadline in (1, 2, 4, 8, 16):
+        with storage.SearchSession(opened, cache_blocks=64) as sess:
+            a = sess.search(qs, k=5, deadline_blocks=deadline)
+        c = a.certificate
+        assert (c.upper >= true_kth - 1e-5 * np.abs(true_kth)).all()
+        assert (c.lower <= true_kth + 1e-5 * np.abs(true_kth)).all()
+        assert (c.lower <= c.upper).all()
+        assert (c.gap >= 0).all()
+        # exact flag is self-consistent: zero gap wherever certified
+        assert np.allclose(c.gap[c.exact], 0.0)
+
+
+def test_anytime_tightens_monotonically(dataset, opened):
+    """More deadline -> never-worse certificate: upper non-increasing,
+    lower non-decreasing, per query (the deadline prefix property)."""
+    _, qs = dataset
+    prev = None
+    for deadline in (1, 2, 4, 8, 16, 32):
+        with storage.SearchSession(opened, cache_blocks=64) as sess:
+            c = sess.search(qs, k=5, deadline_blocks=deadline).certificate
+        if prev is not None:
+            assert (c.upper <= prev.upper + 1e-6).all()
+            assert (c.lower >= prev.lower - 1e-6).all()
+            assert (c.blocks_deferred <= prev.blocks_deferred).all()
+        prev = c
+
+
+def test_refine_to_exact_bit_identical_and_cheaper(dataset, opened):
+    """Anytime + continuation == cold exact search (dist, idx, stats),
+    with the continuation refining strictly fewer blocks than cold."""
+    _, qs = dataset
+    with storage.SearchSession(opened, cache_blocks=64) as ref:
+        want = ref.search(qs, k=5)
+        cold_fetches = ref.blocks_fetched
+    with storage.SearchSession(opened, cache_blocks=64) as sess:
+        a = sess.search(qs, k=5, deadline_blocks=3)
+        deferred_before = int(a.certificate.blocks_deferred.max())
+        got = a.refine_to_exact()
+    _bitwise(got, want)
+    for g, w in zip(got.stats, want.stats):
+        assert np.array_equal(np.asarray(g), np.asarray(w))
+    # the continuation never re-reads what the anytime phase cached
+    assert got.io.blocks_fetched < cold_fetches
+    assert deferred_before > 0           # the deadline actually cut
+
+
+def test_refine_to_exact_consumes_once(dataset, opened):
+    _, qs = dataset
+    with storage.SearchSession(opened, cache_blocks=64) as sess:
+        a = sess.search(qs[:3], k=2, deadline_blocks=1)
+        a.refine_to_exact()
+        with pytest.raises(ValueError, match="consumed"):
+            a.refine_to_exact()
+
+
+def test_budgeted_drain_mixes_exact_and_anytime(dataset, opened):
+    """A deadline-cut drain resolves finished tenants exact and cut
+    tenants anytime; each anytime ticket's continuation still lands on
+    its isolated exact answer bitwise."""
+    _, qs = dataset
+    batches = [(qs[0:4], dict(k=5)), (qs[4:8], dict(k=3))]
+    want, _ = _isolated(opened, batches)
+    with storage.SearchSession(opened, cache_blocks=64) as sess:
+        tickets = [sess.submit(q, **kw) for q, kw in batches]
+        sess.drain(deadline_blocks=2)
+        for t, (q, kw), w in zip(tickets, batches, want):
+            r = t.result()
+            if isinstance(r, serve.AnytimeResult):
+                c = r.certificate
+                true_kth = np.asarray(w.dist)[:, -1]
+                assert (c.upper >= true_kth - 1e-5 * np.abs(true_kth)).all()
+                assert (c.lower <= true_kth + 1e-5 * np.abs(true_kth)).all()
+                _bitwise(r.refine_to_exact(), w)
+            else:
+                _bitwise(r, w)
+
+
+def test_session_deadline_validation(dataset, opened):
+    _, qs = dataset
+    with storage.SearchSession(opened, cache_blocks=64) as sess:
+        with pytest.raises(ValueError, match="deadline_blocks"):
+            sess.search(qs[:2], k=1, deadline_blocks=0)
+        with pytest.raises(ValueError, match="fresh batch"):
+            prep = sess.approximate_threshold(qs[:2], k=1)
+            sess.search(qs[:2], k=1, prepared=prep, deadline_blocks=2)
+
+
+def test_dtw_wrappers_reject_nonpositive_deadline(dataset):
+    from repro.core import dtw as D
+    raw, qs = dataset
+    idx = core.build(jnp.asarray(raw[:512]), capacity=64)
+    with pytest.raises(ValueError, match="deadline_blocks"):
+        D.search_dtw(idx, qs[:2], r=4, k=1, deadline_blocks=0)
+
+
+# ---------------------------------------------------------------------------
+# session lifecycle
+# ---------------------------------------------------------------------------
+
+def test_close_is_idempotent(dataset, opened):
+    _, qs = dataset
+    sess = storage.SearchSession(opened, cache_blocks=8)
+    sess.search(qs[:2], k=1)
+    sess.close()
+    sess.close()                          # second close is a no-op
+    with storage.SearchSession(opened, cache_blocks=8) as cm:
+        cm.search(qs[:2], k=1)
+        cm.close()                        # explicit close inside the block
+    # __exit__ after the explicit close must not raise
+
+
+# ---------------------------------------------------------------------------
+# property test (skips when hypothesis is not installed)
+# ---------------------------------------------------------------------------
+
+@given(deadline=st.integers(min_value=1, max_value=24),
+       k=st.integers(min_value=1, max_value=8))
+@settings(max_examples=12, deadline=None)
+def test_certificate_brackets_truth_property(dataset, opened, deadline, k):
+    """Certified bound property, over random (deadline, k): the true
+    k-th distance always lies in [lower, upper], and upper at full
+    budget equals the exact k-th."""
+    _, qs = dataset
+    with storage.SearchSession(opened, cache_blocks=64) as ref:
+        true_kth = np.asarray(ref.search(qs, k=k).dist)[:, -1]
+    with storage.SearchSession(opened, cache_blocks=64) as sess:
+        a = sess.search(qs, k=k, deadline_blocks=deadline)
+    c = a.certificate
+    assert (c.upper >= true_kth - 1e-5 * np.abs(true_kth)).all()
+    assert (c.lower <= true_kth + 1e-5 * np.abs(true_kth)).all()
+    # wherever certified exact, the anytime k-th IS the true k-th
+    np.testing.assert_allclose(c.upper[c.exact], true_kth[c.exact],
+                               rtol=1e-6, atol=1e-6)
