@@ -11,8 +11,19 @@ On one CPU device the paper's #cores axis becomes the shard-partition axis
 of the distributed builder (bench_scaling.py); here we report wall time and
 the overlap gain serial -> paris_plus, which is the paper's Fig. 4 claim
 ("ParIS+ completely masks the CPU cost") in this container's terms.
+
+The ``pipeline`` section benchmarks the staged on-disk build
+(storage/pipeline/): wall time vs pass-1/pass-2 worker count, and the
+resume overhead after an injected mid-permute kill — with byte-exactness
+against ``save_index(core.build(...))`` asserted BEFORE any timing, so a
+fast-but-wrong pipeline can never post a number.
 """
 from __future__ import annotations
+
+import hashlib
+import tempfile
+import time
+from pathlib import Path
 
 import jax
 import jax.numpy as jnp
@@ -21,8 +32,10 @@ import numpy as np
 import repro.core as core
 from benchmarks.common import (BenchRunner, csv_ints, csv_strs, print_table,
                                timeit, write_rows)
+from repro import storage
 from repro.data import make_dataset
 from repro.data.loader import ChunkedLoader, IncrementalBuilder
+from repro.storage.pipeline import BuildInterrupted, run_pipeline
 
 
 def build_serial(raw: np.ndarray, capacity: int):
@@ -43,8 +56,83 @@ def build_overlapped(raw: np.ndarray, capacity: int):
     return builder.finalize()
 
 
+def _sha(path) -> str:
+    return hashlib.sha256(Path(path).read_bytes()).hexdigest()
+
+
+def run_pipeline_section(n: int = 100_000, length: int = 128,
+                         capacity: int = 512, chunk: int = 1 << 13,
+                         worker_counts=(1, 2, 4)) -> list[dict]:
+    """Staged-build rows: throughput vs workers + kill/resume overhead."""
+    raw = make_dataset("synthetic", n, length)
+    rows = []
+    with tempfile.TemporaryDirectory() as td:
+        td = Path(td)
+        store = storage.SeriesStore.write(td / "series.f32", raw)
+
+        # exactness FIRST: byte-identity to the in-memory write path
+        golden = td / "golden.dsix"
+        storage.save_index(core.build(jnp.asarray(raw), capacity=capacity),
+                           golden)
+        probe = td / "probe.dsix"
+        run_pipeline(store, probe, capacity=capacity, chunk=chunk,
+                     workers=2, shards=4)
+        assert _sha(probe) == _sha(golden), \
+            "pipeline output diverged from save_index(core.build(...))"
+
+        t_by_workers = {}
+        for wk in worker_counts:
+            out = td / f"w{wk}.dsix"
+            t0 = time.perf_counter()
+            _, rep = run_pipeline(store, out, capacity=capacity, chunk=chunk,
+                                  workers=wk, shards=max(worker_counts))
+            t = time.perf_counter() - t0
+            t_by_workers[wk] = t
+            rows.append({
+                "mode": "pipeline", "workers": wk, "n_series": n,
+                "length": length, "build_s": t,
+                "throughput_Mseries_s": n / t / 1e6,
+                "speedup_vs_1": t_by_workers[worker_counts[0]] / t,
+            })
+
+        # resume overhead: kill after the first completed permute unit,
+        # then resume; overhead = extra wall vs one uninterrupted build
+        def fault(stage, done):
+            if stage == "permute" and done >= 1:
+                raise BuildInterrupted(f"{stage}:{done}")
+
+        out = td / "killed.dsix"
+        t0 = time.perf_counter()
+        try:
+            run_pipeline(store, out, capacity=capacity, chunk=chunk,
+                         shards=max(worker_counts), fault=fault)
+        except BuildInterrupted:
+            pass
+        t_interrupted = time.perf_counter() - t0
+        t0 = time.perf_counter()
+        _, rep = run_pipeline(store, out, capacity=capacity, chunk=chunk,
+                              shards=max(worker_counts))
+        t_resume = time.perf_counter() - t0
+        assert rep.resumed and _sha(out) == _sha(golden)
+        fresh = t_by_workers[worker_counts[0]]
+        rows.append({
+            "mode": "pipeline_resume", "workers": 1, "n_series": n,
+            "length": length, "interrupted_s": t_interrupted,
+            "resume_s": t_resume, "fresh_s": fresh,
+            "resume_overhead": (t_interrupted + t_resume) / fresh - 1.0,
+            "permute_reused": rep.stages["permute"].reused,
+            "permute_built": rep.stages["permute"].built,
+        })
+    print_table("staged pipeline build (sharded + kill/resume)", rows,
+                ["mode", "workers", "n_series", "build_s",
+                 "throughput_Mseries_s", "resume_s", "resume_overhead",
+                 "permute_reused"])
+    return rows
+
+
 def run(sizes=(50_000, 200_000), datasets=("synthetic", "sald", "seismic"),
-        capacity: int = 1024) -> list[dict]:
+        capacity: int = 1024, pipeline_n: int = 100_000,
+        pipeline_workers=(1, 2, 4)) -> list[dict]:
     rows = []
     for ds in datasets:
         for n in sizes:
@@ -66,6 +154,9 @@ def run(sizes=(50_000, 200_000), datasets=("synthetic", "sald", "seismic"),
     print_table("index build (Fig. 4-7)", rows,
                 ["dataset", "n_series", "serial_s", "paris_plus_s",
                  "messi_s", "overlap_gain", "throughput_Mseries_s"])
+    if pipeline_n:
+        rows += run_pipeline_section(n=pipeline_n,
+                                     worker_counts=pipeline_workers)
     write_rows("build", rows)
     return rows
 
@@ -76,8 +167,13 @@ def main(argv=None) -> int:
             .arg("--datasets", type=csv_strs,
                  default=("synthetic", "sald", "seismic"))
             .arg("--capacity", type=int, default=1024)
+            .arg("--pipeline-n", type=int, default=100_000,
+                 help="series count for the staged-pipeline section "
+                      "(0 disables it)")
+            .arg("--pipeline-workers", type=csv_ints, default=(1, 2, 4))
             .main(lambda a: run(sizes=a.sizes, datasets=a.datasets,
-                                capacity=a.capacity), argv))
+                                capacity=a.capacity, pipeline_n=a.pipeline_n,
+                                pipeline_workers=a.pipeline_workers), argv))
 
 
 if __name__ == "__main__":

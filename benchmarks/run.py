@@ -29,7 +29,8 @@ def main(argv=None) -> int:
                             bench_query, bench_scaling, bench_serve)
 
     quick_kwargs = {
-        "build": dict(sizes=(20_000,), datasets=("synthetic",)),
+        "build": dict(sizes=(20_000,), datasets=("synthetic",),
+                      pipeline_n=20_000, pipeline_workers=(1, 2)),
         "query": dict(sizes=(50_000,), datasets=("synthetic",)),
         "engine": dict(n=10_000, capacity=256),
         "ooc": dict(sizes=(20_000,), datasets=("synthetic",),

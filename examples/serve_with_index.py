@@ -104,15 +104,30 @@ def main():
         jax.block_until_ready(embs)
         print(f"  {time.perf_counter()-t0:.1f}s -> embeddings {embs.shape}")
 
-        print("building MESSI vector index ...")
-        index = vector.build_vector_index(embs, capacity=256)
         if args.index_path:
-            storage.save_index(index, args.index_path,
-                               extra={"kind": "vector", "dim": embs.shape[-1],
-                                      "corpus": args.corpus,
-                                      "arch": args.arch})
-            print(f"saved index -> {args.index_path} "
-                  f"(next launch opens it, no rebuild)")
+            # persisted first launch goes through the staged build pipeline
+            # (DESIGN.md §5): embeddings land in a SeriesStore next to the
+            # index, and the sharded build records every stage in a
+            # manifest — a launch killed mid-build resumes from the last
+            # completed unit instead of rebuilding (the progress line says
+            # so), and the finished file is byte-identical to
+            # save_index(core.build(...))
+            prepped = np.asarray(vector.prep_vectors(embs, True))
+            store = storage.SeriesStore.write(args.index_path + ".series",
+                                              prepped)
+            print("building MESSI vector index (staged pipeline, "
+                  "resumable) ...")
+            index = storage.pipeline_build(
+                store, args.index_path, w=16, card=256, capacity=256,
+                normalize=False, workers=2,
+                extra={"kind": "vector", "dim": embs.shape[-1],
+                       "corpus": args.corpus, "arch": args.arch},
+                progress=lambda m: print(f"  [build] {m}"))
+            print(f"published index -> {args.index_path} (opened "
+                  f"out-of-core; next launch skips embed+build entirely)")
+        else:
+            print("building MESSI vector index ...")
+            index = vector.build_vector_index(embs, capacity=256)
 
     # serving traffic: --batches query batches, each perturbed members of
     # known clusters (fresh draws per batch, so only the index blocks their

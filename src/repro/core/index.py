@@ -129,6 +129,16 @@ class FlatIndex:
     n_real: int
 
 
+def block_layout(n_series: int, capacity: int) -> tuple[int, int, int]:
+    """-> (cap, n_blocks, n_padded): the one definition of how N series cut
+    into fixed-capacity blocks.  Shared by ``assemble_blocks`` and the
+    out-of-core build pipeline (storage/pipeline/driver.py), so the two
+    builders cannot disagree on padding and stay byte-compatible."""
+    cap = min(capacity, n_series)
+    n_padded = n_series + (-n_series) % cap
+    return cap, n_padded // cap, n_padded
+
+
 def build(raw: jax.Array, *, w: int = isax.W, card: int = isax.CARD,
           capacity: int = 512, normalize: bool = True,
           ids: jax.Array | None = None) -> BlockIndex:
@@ -177,8 +187,8 @@ def assemble_blocks(xn: jax.Array, bounds: jax.Array, ids: jax.Array, *,
     stage shared by the one-shot and the incremental (ParIS+) builders.
     """
     n_series = xn.shape[0]
-    cap = min(capacity, n_series)
-    pad = (-n_series) % cap
+    cap, b, n_padded = block_layout(n_series, capacity)
+    pad = n_padded - n_series
     if pad:
         xn = jnp.concatenate(
             [xn, jnp.full((pad, n), RAW_PAD, jnp.float32)], axis=0)
@@ -186,7 +196,6 @@ def assemble_blocks(xn: jax.Array, bounds: jax.Array, ids: jax.Array, *,
             [bounds, jnp.full((pad, w, 2), isax.SENTINEL, jnp.float32)], axis=0)
         ids = jnp.concatenate([ids, jnp.full((pad,), -1, jnp.int32)], axis=0)
 
-    b = xn.shape[0] // cap
     raw_b = xn.reshape(b, cap, n)
     bounds_b = bounds.reshape(b, cap, w, 2)
     slo = jnp.transpose(bounds_b[..., 0], (0, 2, 1))          # (B, w, C)

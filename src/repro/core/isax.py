@@ -70,12 +70,18 @@ def sax_from_paa(paa_vals: jax.Array, card: int = CARD) -> jax.Array:
     return jnp.sum(paa_vals[..., None] >= bps, axis=-1).astype(jnp.int32)
 
 
-def bounds_from_sax(sax: jax.Array, card: int = CARD) -> jax.Array:
-    """Decompress symbols into their region [lo, hi]. (..., w) -> (..., w, 2)."""
+def bounds_from_sax(sax, card: int = CARD, *, xp=jnp):
+    """Decompress symbols into their region [lo, hi]. (..., w) -> (..., w, 2).
+
+    ``xp`` is the array namespace: jnp (default) for the device builders,
+    np for the host side of the out-of-core build pipeline
+    (storage/pipeline/) — one definition of the symbol→region decode for
+    both, same table lookup, bit-identical f32 values.
+    """
     lo_t, hi_t = region_tables(card)
-    lo = jnp.asarray(lo_t)[sax]
-    hi = jnp.asarray(hi_t)[sax]
-    return jnp.stack([lo, hi], axis=-1)
+    lo = xp.asarray(lo_t)[sax]
+    hi = xp.asarray(hi_t)[sax]
+    return xp.stack([lo, hi], axis=-1)
 
 
 def summarize(x: jax.Array, w: int = W, card: int = CARD,

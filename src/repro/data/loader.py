@@ -77,6 +77,22 @@ class ChunkedLoader:
         return jax.device_put(host, self.device)  # async: returns immediately
 
 
+def summarize_chunk(chunk: jax.Array, *, w: int, card: int,
+                    normalize: bool) -> tuple[jax.Array, jax.Array]:
+    """One IndexBulkLoading step: (m, n) raw chunk -> (z-normed, sax).
+
+    The single definition of the per-chunk summarize launch, shared by
+    ``IncrementalBuilder`` (keeps both) and the pipeline's pass-1 run
+    builder (storage/pipeline/runs.py, keeps only the sax words).  Every
+    op is per-row independent, so chunking/sharding the input cannot
+    change any series' summary — the invariance the resumable build's
+    byte-identity rests on.
+    """
+    xn = isax.znorm(chunk) if normalize else chunk.astype(jnp.float32)
+    _, sax = ops.summarize(xn, w=w, card=card, normalize=False)
+    return xn, sax
+
+
 class IncrementalBuilder:
     """ParIS+-style incremental index construction over a chunk stream.
 
@@ -98,8 +114,8 @@ class IncrementalBuilder:
         self._count = 0
 
     def add_chunk(self, chunk: jax.Array) -> None:
-        xn = isax.znorm(chunk) if self.normalize else chunk.astype(jnp.float32)
-        _, sax = ops.summarize(xn, w=self.w, card=self.card, normalize=False)
+        xn, sax = summarize_chunk(chunk, w=self.w, card=self.card,
+                                  normalize=self.normalize)
         self._raw.append(xn)
         self._sax.append(sax)
         self._count += chunk.shape[0]

@@ -1,15 +1,18 @@
 """On-disk index subsystem (DESIGN.md §5): persisted index format,
-two-pass out-of-core build, streaming exact k-NN search, and the
-block-cache serving sessions."""
+staged/sharded/resumable build pipeline, streaming exact k-NN search,
+and the block-cache serving sessions."""
 from repro.storage.cache import BlockCache, PreparedRound, SearchSession
 from repro.storage.format import (SeriesStore, load_index, open_index,
                                   read_meta, save_index)
 from repro.storage.ooc_build import SummaryBuilder, build_on_disk
 from repro.storage.ooc_search import IOStats, OocSearchResult, ooc_search
+from repro.storage.pipeline import (BuildInterrupted, BuildReport,
+                                    pipeline_build, run_pipeline)
 
 __all__ = [
     "SeriesStore", "save_index", "load_index", "open_index", "read_meta",
     "build_on_disk", "SummaryBuilder",
+    "pipeline_build", "run_pipeline", "BuildReport", "BuildInterrupted",
     "ooc_search", "OocSearchResult", "IOStats",
     "BlockCache", "SearchSession", "PreparedRound",
 ]

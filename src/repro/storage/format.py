@@ -17,15 +17,30 @@ File layout (all little-endian; one file, mmap-friendly):
     4:8    u32    format version
     8:16   u64    meta length L (bytes of UTF-8 JSON)
     16:24  u64    data_start (absolute, page-aligned)
-    24:24+L       meta JSON: index meta (n, w, card, capacity, n_real,
-                  n_blocks), caller ``extra`` dict, and per-section
+    24:24+L       meta JSON: file kind, index meta (n, w, card, capacity,
+                  n_real, n_blocks), caller ``extra`` dict, and per-section
                   {offset (relative to data_start), shape, dtype}
 
     data_start +  ids (B, C) i4 · slo (B, w, C) f4 · shi · elo (w, B) f4
                   · ehi — each 64-aligned — then, page-aligned and LAST,
                   raw (B, C, n) f4, so the memmap window is one contiguous
                   aligned span and appending raw during a streaming build
-                  (ooc_build.IndexFileWriter) needs no backpatching.
+                  (the pipeline's pass 2) needs no backpatching.
+
+Format v2 (this repo's second on-disk generation) adds a ``kind`` field to
+the meta JSON so the SAME container carries the build pipeline's
+intermediate files: ``kind="run"`` sorted summary runs and ``kind="merge"``
+merged global orders (storage/pipeline/), alongside ``kind="index"``.
+v1 files (no ``kind``) are still read bit-exactly: the section layout is
+unchanged, so ``read_meta`` just defaults their kind to "index"
+(back-compat locked by tests/test_pipeline.py).
+
+Every writer here publishes atomically: bytes go to a temp path and
+``os.replace`` onto the final name only after a full flush+fsync, so a
+file that EXISTS under its final name is complete — and the readers
+enforce the contrapositive, rejecting truncated/partial files (from an
+interrupted copy, external truncation, or a foreign writer) loudly via
+``check_complete`` instead of mmapping garbage.
 
 ``SeriesStore`` handles the other file kind in play: headerless raw-series
 datasets (row-major float32 (N, n), the standard data-series benchmark
@@ -37,6 +52,7 @@ import dataclasses
 import json
 import os
 import struct
+import threading
 from pathlib import Path
 
 import jax.numpy as jnp
@@ -45,12 +61,12 @@ import numpy as np
 from repro.core.index import BlockIndex, HostRawBlocks
 
 MAGIC = b"DSIX"
-VERSION = 1
+VERSION = 2          # v2: meta "kind" field (run/merge pipeline files)
 _ALIGN = 64          # section alignment
 _PAGE = 4096         # raw-section (memmap window) alignment
 _FIXED = 24          # bytes before the meta JSON
 
-# Section order is part of the format: raw last (see module docstring).
+# Index-file section order is part of the format: raw last (see docstring).
 _SECTIONS = ("ids", "slo", "shi", "elo", "ehi", "raw")
 
 
@@ -59,7 +75,7 @@ def _align(off: int, align: int) -> int:
 
 
 def _section_specs(*, n_blocks: int, capacity: int, w: int, n: int) -> dict:
-    """name -> {offset (relative), shape, dtype} for the fixed layout."""
+    """name -> {offset (relative), shape, dtype} for the index layout."""
     b, c = n_blocks, capacity
     shapes = {
         "ids": ((b, c), "<i4"),
@@ -78,88 +94,157 @@ def _section_specs(*, n_blocks: int, capacity: int, w: int, n: int) -> dict:
     return specs
 
 
-def _build_meta(index_meta: dict, extra: dict | None) -> tuple[bytes, int]:
-    """-> (meta JSON bytes, absolute data_start)."""
-    specs = _section_specs(
-        n_blocks=index_meta["n_blocks"], capacity=index_meta["capacity"],
-        w=index_meta["w"], n=index_meta["n"])
-    meta = dict(index_meta)
-    meta["extra"] = dict(extra or {})
-    meta["sections"] = specs
-    blob = json.dumps(meta).encode()
-    return blob, _align(_FIXED + len(blob), _PAGE)
+def _generic_specs(shapes: dict) -> dict:
+    """name -> spec for a generic (run/merge) file: 64-aligned, dict order."""
+    specs, off = {}, 0
+    for name, (shape, dtype) in shapes.items():
+        off = _align(off, _ALIGN)
+        specs[name] = {"offset": off, "shape": list(shape), "dtype": dtype}
+        off += int(np.prod(shape)) * np.dtype(dtype).itemsize
+    return specs
 
 
-class IndexFileWriter:
-    """Incremental writer for the index file format.
+def _section_nbytes(spec: dict) -> int:
+    return int(np.prod(spec["shape"])) * np.dtype(spec["dtype"]).itemsize
 
-    ``save_index`` uses it in one shot; the out-of-core builder
-    (storage/ooc_build.py) uses it to append raw blocks as they are
-    permuted off the source file, never holding them all at once.
+
+def data_end(meta: dict) -> int:
+    """Absolute end offset of the last section — the complete file size."""
+    return meta["data_start"] + max(
+        s["offset"] + _section_nbytes(s) for s in meta["sections"].values())
+
+
+def check_complete(path: str | Path, meta: dict) -> None:
+    """Loudly reject a truncated/partial file before any section is read.
+
+    Writers publish via write-to-temp + atomic rename, so a file under its
+    final name is normally complete; a short file means an interrupted
+    copy, external truncation, or a foreign writer — mmapping it would
+    serve garbage (or crash later, deep in a search).
+    """
+    expected = data_end(meta)
+    actual = os.path.getsize(path)
+    if actual < expected:
+        raise ValueError(
+            f"{path}: truncated/partial file — {actual} bytes on disk but "
+            f"the header promises {expected}.  Builds publish atomically "
+            f"(temp + rename), so this file was likely produced by an "
+            f"interrupted copy or external truncation; rebuild or re-copy "
+            f"it.")
+
+
+class ArrayFileWriter:
+    """Incremental positioned writer for the DSIX container.
+
+    Serves every file kind: the index itself (``IndexFileWriter``), the
+    pipeline's sorted summary runs and merged order (storage/pipeline/).
+    Three properties the build pipeline leans on:
+
+      * **atomic publish** — bytes go to a temp path; ``close()`` flushes,
+        fsyncs and ``os.replace``s onto the final name, so a kill mid-write
+        never leaves a partial file under the final name;
+      * **positioned row writes** — ``write_rows(name, start, rows)`` seeks
+        to the section row, so independent units of work (pipeline permute
+        units, possibly on worker threads — writes are lock-serialized)
+        can fill disjoint spans in any order, and REDOING a unit rewrites
+        identical bytes (idempotent resume);
+      * **stable-temp resume** — with ``tmp_path=``/``resume=True`` a later
+        process reopens the surviving partial (after verifying the header
+        bytes match, i.e. same layout/params) and continues instead of
+        restarting; ``keep_partial()`` closes the fd without publishing.
     """
 
-    def __init__(self, path: str | Path, *, n: int, w: int, card: int,
-                 capacity: int, n_real: int, n_blocks: int,
-                 extra: dict | None = None):
+    def __init__(self, path: str | Path, *, kind: str, specs: dict,
+                 meta_fields: dict | None = None, extra: dict | None = None,
+                 tmp_path: str | Path | None = None, resume: bool = False):
         self.path = Path(path)
-        self.meta = dict(n=n, w=w, card=card, capacity=capacity,
-                         n_real=n_real, n_blocks=n_blocks)
-        blob, data_start = _build_meta(self.meta, extra)
-        self.sections = json.loads(blob)["sections"]
-        self.data_start = data_start
-        self._raw_rows = 0
+        meta = {"kind": kind}
+        meta.update(meta_fields or {})
+        meta["extra"] = dict(extra or {})
+        meta["sections"] = specs
+        blob = json.dumps(meta).encode()
+        self.sections = specs
+        self.data_start = _align(_FIXED + len(blob), _PAGE)
+        self._header = (MAGIC + struct.pack("<I", VERSION)
+                        + struct.pack("<QQ", len(blob), self.data_start)
+                        + blob)
         # write-to-tmp + rename publish (same property train/checkpoint.py
-        # relies on): a killed build never clobbers an existing good index
-        # and never leaves a partial file at the final path
-        self._tmp = self.path.with_name(
-            f".tmp-{os.getpid()}-{self.path.name}")
-        self._f = open(self._tmp, "wb")
-        self._f.write(MAGIC)
-        self._f.write(struct.pack("<I", VERSION))
-        self._f.write(struct.pack("<QQ", len(blob), data_start))
-        self._f.write(blob)
+        # relies on): a killed build never clobbers an existing good file
+        # and never leaves a partial file at the final path.  A caller that
+        # wants crash-RESUME passes a stable tmp_path (the pid-salted
+        # default is unfindable by the next process, by design: one-shot
+        # writers must never collide).
+        self._tmp = Path(tmp_path) if tmp_path is not None else \
+            self.path.with_name(f".tmp-{os.getpid()}-{self.path.name}")
+        self._lock = threading.Lock()
+        self.resumed = False
+        if resume and self._tmp.exists():
+            f = open(self._tmp, "r+b")
+            if f.read(len(self._header)) == self._header:
+                self._f, self.resumed = f, True
+            else:                      # stale partial: other params/layout
+                f.close()
+        if not self.resumed:
+            self._f = open(self._tmp, "wb")
+            self._f.write(self._header)
+
+    @property
+    def end_offset(self) -> int:
+        return self.data_start + max(
+            s["offset"] + _section_nbytes(s) for s in self.sections.values())
+
+    def write_rows(self, name: str, start: int, rows: np.ndarray) -> None:
+        """Write ``rows`` at row ``start`` of section ``name`` (axis 0)."""
+        spec = self.sections[name]
+        shape, dtype = spec["shape"], np.dtype(spec["dtype"])
+        rows = np.ascontiguousarray(rows, dtype=dtype)
+        if list(rows.shape[1:]) != shape[1:]:
+            raise ValueError(f"{name}: row shape {rows.shape[1:]} != "
+                             f"{tuple(shape[1:])}")
+        if start < 0 or start + rows.shape[0] > shape[0]:
+            raise ValueError(f"{name}: rows [{start}, "
+                             f"{start + rows.shape[0]}) overflow {shape[0]}")
+        row_bytes = _section_nbytes(spec) // max(shape[0], 1)
+        with self._lock:
+            self._f.seek(self.data_start + spec["offset"] + start * row_bytes)
+            self._f.write(rows.tobytes())
 
     def write_section(self, name: str, array: np.ndarray) -> None:
         spec = self.sections[name]
-        arr = np.ascontiguousarray(array, dtype=np.dtype(spec["dtype"]))
+        arr = np.asarray(array)
         if list(arr.shape) != spec["shape"]:
             raise ValueError(f"{name}: shape {arr.shape} != {spec['shape']}")
-        self._f.seek(self.data_start + spec["offset"])
-        self._f.write(arr.tobytes())
+        self.write_rows(name, 0, arr)
 
-    def append_raw_rows(self, rows: np.ndarray) -> None:
-        """Append (m, n) f32 series rows to the raw section, in block order."""
-        spec = self.sections["raw"]
-        b, c, n = spec["shape"]
-        rows = np.ascontiguousarray(rows, dtype=np.float32)
-        if rows.ndim != 2 or rows.shape[1] != n:
-            raise ValueError(f"raw rows must be (m, {n}), got {rows.shape}")
-        if self._raw_rows + rows.shape[0] > b * c:
-            raise ValueError("raw section overflow")
-        self._f.seek(self.data_start + spec["offset"]
-                     + self._raw_rows * n * 4)
-        self._f.write(rows.tobytes())
-        self._raw_rows += rows.shape[0]
+    def flush(self) -> None:
+        """Push buffered bytes to the OS — a unit recorded in the build
+        manifest after ``flush`` survives a SIGKILL of this process."""
+        with self._lock:
+            self._f.flush()
 
     def close(self) -> None:
-        spec = self.sections["raw"]
-        b, c, _ = spec["shape"]
-        if self._raw_rows not in (0, b * c):
-            self.abort()
-            raise ValueError(
-                f"raw section incomplete: {self._raw_rows} of {b * c} rows")
-        # ensure the file extends to the full raw span even if the last
-        # rows were all-zero (sparse writes must not shorten the file)
-        end = self.data_start + spec["offset"] + b * c * spec_row_bytes(spec)
-        self._f.truncate(end)
-        self._f.close()
+        """Finalize and atomically publish under the final name."""
+        with self._lock:
+            # extend to the full span even if the last rows were all-zero
+            # (sparse positioned writes must not shorten the file)
+            self._f.truncate(self.end_offset)
+            self._f.flush()
+            os.fsync(self._f.fileno())
+            self._f.close()
         os.replace(self._tmp, self.path)   # atomic publish
 
+    def keep_partial(self) -> None:
+        """Close the fd but KEEP the temp file for a later resume."""
+        with self._lock:
+            self._f.flush()
+            self._f.close()
+
     def abort(self) -> None:
-        self._f.close()
+        with self._lock:
+            self._f.close()
         self._tmp.unlink(missing_ok=True)
 
-    def __enter__(self) -> "IndexFileWriter":
+    def __enter__(self) -> "ArrayFileWriter":
         return self
 
     def __exit__(self, exc_type, exc, tb) -> None:
@@ -169,14 +254,110 @@ class IndexFileWriter:
             self.abort()
 
 
+class IndexFileWriter(ArrayFileWriter):
+    """Incremental writer for the index file kind.
+
+    ``save_index`` uses it in one shot; the build pipeline
+    (storage/pipeline/driver.py) uses its positioned writes to fill the
+    summary sections and raw permute units — resumably, via a stable
+    ``tmp_path``.  ``append_raw_rows`` keeps the simple sequential-append
+    surface for one-shot writers.
+    """
+
+    def __init__(self, path: str | Path, *, n: int, w: int, card: int,
+                 capacity: int, n_real: int, n_blocks: int,
+                 extra: dict | None = None,
+                 tmp_path: str | Path | None = None, resume: bool = False):
+        self.meta = dict(n=n, w=w, card=card, capacity=capacity,
+                         n_real=n_real, n_blocks=n_blocks)
+        super().__init__(
+            path, kind="index",
+            specs=_section_specs(n_blocks=n_blocks, capacity=capacity,
+                                 w=w, n=n),
+            meta_fields=self.meta, extra=extra,
+            tmp_path=tmp_path, resume=resume)
+        self._raw_rows = 0
+
+    def write_raw_rows(self, start: int, rows: np.ndarray) -> None:
+        """Write (m, n) f32 series rows at series-row ``start`` of the raw
+        section — SERIES granularity, not block granularity, so permute
+        units need not align to block boundaries."""
+        spec = self.sections["raw"]
+        b, c, n = spec["shape"]
+        rows = np.ascontiguousarray(rows, dtype=np.float32)
+        if rows.ndim != 2 or rows.shape[1] != n:
+            raise ValueError(f"raw rows must be (m, {n}), got {rows.shape}")
+        if start < 0 or start + rows.shape[0] > b * c:
+            raise ValueError("raw section overflow")
+        with self._lock:
+            self._f.seek(self.data_start + spec["offset"] + start * n * 4)
+            self._f.write(rows.tobytes())
+
+    def append_raw_rows(self, rows: np.ndarray) -> None:
+        """Append (m, n) f32 series rows to the raw section, in block order."""
+        self.write_raw_rows(self._raw_rows, rows)
+        self._raw_rows += rows.shape[0]
+
+    def close(self) -> None:
+        b, c, _ = self.sections["raw"]["shape"]
+        # append-mode completeness guard; positioned writers (the pipeline)
+        # track completeness through their manifest instead
+        if self._raw_rows not in (0, b * c):
+            self.abort()
+            raise ValueError(
+                f"raw section incomplete: {self._raw_rows} of {b * c} rows")
+        super().close()
+
+
+def write_arrays(path: str | Path, *, kind: str, arrays: dict,
+                 extra: dict | None = None) -> Path:
+    """One-shot atomic write of a generic (run/merge) DSIX file."""
+    path = Path(path)
+    specs = _generic_specs({name: (arr.shape, arr.dtype.str)
+                            for name, arr in arrays.items()})
+    with ArrayFileWriter(path, kind=kind, specs=specs, extra=extra) as wr:
+        for name, arr in arrays.items():
+            wr.write_section(name, arr)
+    return path
+
+
+def open_arrays(path: str | Path, *, kind: str | None = None,
+                mmap: bool = True) -> tuple[dict, dict]:
+    """-> (meta, {section: array}) for a generic DSIX file.
+
+    ``mmap=True`` returns read-only memmaps (the merge streams runs
+    through these without materializing them); completeness is checked
+    first so a partial file fails loudly, not at some later page fault.
+    """
+    path = Path(path)
+    meta = read_meta(path)
+    if kind is not None and meta["kind"] != kind:
+        raise ValueError(f"{path}: kind {meta['kind']!r}, expected {kind!r}")
+    check_complete(path, meta)
+    out = {}
+    for name, spec in meta["sections"].items():
+        shape = tuple(spec["shape"])
+        if mmap:
+            out[name] = np.memmap(path, dtype=np.dtype(spec["dtype"]),
+                                  mode="r",
+                                  offset=meta["data_start"] + spec["offset"],
+                                  shape=shape)
+        else:
+            with open(path, "rb") as f:
+                out[name] = _read_section(f, meta, name)
+    return meta, out
+
+
 def spec_row_bytes(spec: dict) -> int:
     """Bytes of one trailing-dim row of a section (raw: one series)."""
     return spec["shape"][-1] * np.dtype(spec["dtype"]).itemsize
 
 
 def read_meta(path: str | Path) -> dict:
-    """Parse the header; -> meta dict (incl. 'extra', 'sections',
-    'data_start')."""
+    """Parse the header; -> meta dict (incl. 'kind', 'extra', 'sections',
+    'data_start').  v1 files (pre-pipeline) carry no 'kind' field and
+    default to "index" — the section layout is identical, so they load
+    bit-exactly through the same readers."""
     with open(path, "rb") as f:
         head = f.read(_FIXED)
         if len(head) < _FIXED or head[:4] != MAGIC:
@@ -186,7 +367,12 @@ def read_meta(path: str | Path) -> dict:
             raise ValueError(f"{path}: format version {version} is newer "
                              f"than supported ({VERSION})")
         meta_len, data_start = struct.unpack("<QQ", head[8:24])
-        meta = json.loads(f.read(meta_len).decode())
+        blob = f.read(meta_len)
+        if len(blob) < meta_len:
+            raise ValueError(f"{path}: truncated header ({len(blob)} of "
+                             f"{meta_len} meta bytes)")
+        meta = json.loads(blob.decode())
+    meta.setdefault("kind", "index")
     meta["version"] = version
     meta["data_start"] = data_start
     return meta
@@ -200,6 +386,16 @@ def _read_section(f, meta: dict, name: str) -> np.ndarray:
     if arr.size != count:
         raise ValueError(f"{name}: truncated index file")
     return arr.reshape(spec["shape"])
+
+
+def _read_index_meta(path: Path) -> dict:
+    meta = read_meta(path)
+    if meta["kind"] != "index":
+        raise ValueError(
+            f"{path}: this is a {meta['kind']!r} file (a build-pipeline "
+            f"intermediate, storage/pipeline/), not an index")
+    check_complete(path, meta)
+    return meta
 
 
 def save_index(index: BlockIndex, path: str | Path, *,
@@ -230,7 +426,7 @@ def load_index(path: str | Path) -> BlockIndex:
     """Full load: everything (raw included) onto device — the in-memory
     paths (`core.search`, `paris`, …) work on the result unchanged."""
     path = Path(path)
-    meta = read_meta(path)
+    meta = _read_index_meta(path)
     parts = _load_summaries(path, meta)
     with open(path, "rb") as f:
         raw = _read_section(f, meta, "raw")
@@ -253,7 +449,7 @@ def open_index(path: str | Path) -> BlockIndex:
     with a pointer here (frontier.prepare).
     """
     path = Path(path)
-    meta = read_meta(path)
+    meta = _read_index_meta(path)
     parts = _load_summaries(path, meta)
     spec = meta["sections"]["raw"]
     mm = np.memmap(path, dtype=np.dtype(spec["dtype"]), mode="r",

@@ -1,93 +1,32 @@
-"""Two-pass out-of-core index build: series file -> index file (DESIGN.md §5).
+"""Out-of-core index build: series file -> index file (DESIGN.md §5).
 
-The ParIS+ bulk loader never holds the dataset: it streams raw series
-through the summarization workers and keeps only the iSAX summaries
-resident.  Same here, with the roles TPU-cast:
+Since the pipeline rework this module is a thin compatibility wrapper:
+the actual build path — parallel pass-1 workers emitting sorted summary
+runs, a k-way external merge producing the global block order, and the
+pass-2 permute streaming raw series into the final file, all resumable
+from a JSON manifest — lives in ``storage/pipeline/``.
+``build_on_disk`` drives it in the original monolithic shape (one
+worker, one shard), and its contract is unchanged: the produced file is
+byte-identical to ``save_index(core.build(...))`` on the same data
+(tested), so ``load_index``/``open_index``/``ooc_search`` cannot tell
+which builder wrote it.  Callers that want shards, workers, or
+kill-resume call ``storage.pipeline_build``/``storage.run_pipeline``
+directly.
 
-  pass 1  stream the source file chunk-by-chunk through the Pallas
-          summarize kernel (``ChunkedLoader``'s double buffer overlaps the
-          disk read / host->device DMA with the previous chunk's compute)
-          and keep ONLY the sax words + interleaved sort keys on host —
-          w+16 bytes per series, not 4n;
-  sort    one host lexsort over the accumulated keys — identical
-          permutation to ``isax.sort_order`` on the full array (same keys,
-          both sorts stable ascending);
-  pass 2  walk the blocks in index order, gather each block's member rows
-          off the source ``np.memmap`` (the external permute: random reads,
-          sequential writes), z-normalize on device, and append straight to
-          the index file's raw section via ``format.IndexFileWriter``.
-          Summaries/envelopes are recomputed from the resident sax words
-          with exactly ``index.assemble_blocks``'s padding/sentinel rules.
-
-Peak host memory: O(N·(w+20)) for summaries/keys/order + one block group
-of raw rows — a 100GB raw file with w=16, n=256 needs ~3.5% of its size in
-RAM.  The produced file is bit-compatible with ``save_index(build(...))``
-on the same data (tested), so ``load_index``/``open_index``/``ooc_search``
-cannot tell which builder wrote it.
+``SummaryBuilder`` (the pass-1 summaries-only worker state) moved to
+``storage/pipeline/runs.py`` and is re-exported here for the original
+import path.
 """
 from __future__ import annotations
 
 from pathlib import Path
 
-import jax
-import jax.numpy as jnp
-import numpy as np
-
-from repro.core import index as index_lib
 from repro.core import isax
-from repro.core.index import RAW_PAD, BlockIndex
-from repro.data.loader import ChunkedLoader, IncrementalBuilder
-from repro.kernels import ops
-from repro.storage import format as format_lib
-from repro.storage.format import IndexFileWriter, SeriesStore
+from repro.core.index import BlockIndex
+from repro.storage.pipeline.driver import pipeline_build
+from repro.storage.pipeline.runs import SummaryBuilder  # noqa: F401 (compat)
 
-
-class SummaryBuilder(IncrementalBuilder):
-    """Pass-1 worker: IncrementalBuilder that retains summaries only.
-
-    ``add_chunk`` runs the same znorm + summarize kernel launch, but drops
-    the (device) raw and z-normed chunks on the floor and keeps the sax
-    words (uint16) and interleaved sort keys (uint32) on HOST — the
-    summaries-resident half of the on-disk architecture.
-    """
-
-    def __init__(self, **kw):
-        super().__init__(**kw)
-        if self.card > (1 << 16):
-            raise ValueError("SummaryBuilder stores sax words as uint16; "
-                             f"card={self.card} does not fit")
-        self._keys: list[tuple[np.ndarray, ...]] = []
-
-    def add_chunk(self, chunk: jax.Array) -> None:
-        xn = isax.znorm(chunk) if self.normalize else chunk.astype(jnp.float32)
-        _, sax = ops.summarize(xn, w=self.w, card=self.card, normalize=False)
-        keys = isax.interleaved_keys(sax, self.w)
-        self._sax.append(np.asarray(sax).astype(np.uint16))
-        self._keys.append(tuple(np.asarray(k) for k in keys))
-        self._count += chunk.shape[0]
-
-    def finalize(self):
-        raise NotImplementedError(
-            "SummaryBuilder holds no raw data; use build_on_disk's pass 2")
-
-    def sort_order(self) -> np.ndarray:
-        """Block-order permutation == isax.sort_order on the full array."""
-        if not self._keys:
-            raise ValueError("no chunks added")
-        keys = tuple(np.concatenate([c[i] for c in self._keys])
-                     for i in range(len(self._keys[0])))
-        # np.lexsort: last key is primary — same convention as jnp.lexsort
-        # in isax.sort_order, and both are stable ascending.
-        return np.lexsort(tuple(reversed(keys))).astype(np.int64)
-
-    def sax_words(self) -> np.ndarray:
-        return np.concatenate(self._sax, axis=0)
-
-
-def _host_bounds(sax: np.ndarray, card: int) -> tuple[np.ndarray, np.ndarray]:
-    """(m, w) sax -> (m, w) lo / hi region edges — isax.region_tables lookup."""
-    lo_t, hi_t = isax.region_tables(card)
-    return lo_t[sax], hi_t[sax]
+__all__ = ["build_on_disk", "SummaryBuilder"]
 
 
 def build_on_disk(source, out_path: str | Path, *, length: int | None = None,
@@ -101,55 +40,7 @@ def build_on_disk(source, out_path: str | Path, *, length: int | None = None,
     (``format.open_index``) — hand it to ``storage.ooc_search``, or
     ``load_index(out_path)`` for the in-memory paths.
     """
-    store = source if isinstance(source, SeriesStore) else \
-        SeriesStore(path=Path(source), length=length)
-    n_series, n = store.n_series, store.length
-
-    # -- pass 1: stream the file through the summarize kernel ------------
-    loader = ChunkedLoader(store.path, chunk=chunk, length=store.length,
-                           dtype=store.dtype)
-    builder = SummaryBuilder(w=w, card=card, capacity=capacity,
-                             normalize=normalize)
-    for dev_chunk in loader:
-        builder.add_chunk(dev_chunk)
-    order = builder.sort_order()
-    sax = builder.sax_words()
-
-    # -- layout: same padding rules as index.assemble_blocks -------------
-    cap = min(capacity, n_series)
-    n_padded = n_series + (-n_series) % cap
-    n_blocks = n_padded // cap
-
-    # -- summaries in block order (host; w-sized, not n-sized) -----------
-    ids = np.full((n_padded,), -1, np.int32)
-    ids[:n_series] = order                       # build() sorts arange(N)
-    lo = np.full((n_padded, w), isax.SENTINEL, np.float32)
-    hi = np.full((n_padded, w), isax.SENTINEL, np.float32)
-    lo[:n_series], hi[:n_series] = _host_bounds(sax[order], card)
-    ids_b = ids.reshape(n_blocks, cap)
-    slo = np.transpose(lo.reshape(n_blocks, cap, w), (0, 2, 1))  # (B, w, C)
-    shi = np.transpose(hi.reshape(n_blocks, cap, w), (0, 2, 1))
-    elo, ehi = index_lib.block_envelopes(slo, shi, ids_b, xp=np)
-    elo, ehi = elo.astype(np.float32), ehi.astype(np.float32)
-
-    # -- pass 2: external permute of the raw file into block order -------
-    mm = store.memmap()
-    prep = jax.jit(isax.znorm) if normalize else \
-        jax.jit(lambda x: x.astype(jnp.float32))
-    rows_per_step = max(1, (max(chunk, cap) // cap)) * cap
-    with IndexFileWriter(out_path, n=n, w=w, card=card, capacity=cap,
-                         n_real=n_series, n_blocks=n_blocks,
-                         extra=extra) as wr:
-        wr.write_section("ids", ids_b)
-        wr.write_section("slo", slo)
-        wr.write_section("shi", shi)
-        wr.write_section("elo", elo)
-        wr.write_section("ehi", ehi)
-        for start in range(0, n_series, rows_per_step):
-            stop = min(start + rows_per_step, n_series)
-            rows = np.array(mm[order[start:stop]])   # gather (random reads)
-            wr.append_raw_rows(np.asarray(prep(rows)))
-        if n_padded > n_series:
-            wr.append_raw_rows(np.full((n_padded - n_series, n),
-                                       RAW_PAD, np.float32))
-    return format_lib.open_index(out_path)
+    return pipeline_build(source, out_path, length=length, w=w, card=card,
+                          capacity=capacity, chunk=chunk,
+                          normalize=normalize, extra=extra,
+                          workers=1, shards=1)

@@ -1,0 +1,105 @@
+"""Stage 2 of the build pipeline: k-way external merge of sorted runs.
+
+Produces the GLOBAL block order — the permutation the monolithic builder
+got from one host lexsort — without ever materializing all summaries in
+memory: each run is streamed through a small read buffer, a heap picks
+the least head by (interleaved keys, source id), and the winner's
+(id, sax) is appended to the output through a bounded write buffer.
+Peak memory is O(buffer_rows · n_runs), independent of N.
+
+Output is one ``kind="merge"`` DSIX file:
+
+    sax (N, w) u2   iSAX words in global block order (pass 2 recomputes
+                    per-series bounds + envelopes from these)
+    ids (N,)   i8   source row ids in global block order — THE permutation
+
+Correctness (locked by the random-shard-split property test): every run
+is sorted by (keys, id) — stable local lexsort over a shard scanned in
+source order — and the heap comparator is the same tuple, so the merged
+sequence is sorted by (keys, id).  Since ids are unique, that total
+order equals a stable global sort by keys alone: exactly
+``np.lexsort`` / ``isax.sort_order`` on the full array.
+
+The interface is deliberately source-agnostic: any set of sorted run
+files merges, whatever rows they cover — the future LSM compaction job
+merges a base index's summaries with delta runs through this same
+function.
+"""
+from __future__ import annotations
+
+import heapq
+from pathlib import Path
+
+import numpy as np
+
+from repro.storage import format as format_lib
+from repro.storage.pipeline import runs as runs_lib
+
+MERGE_KIND = "merge"
+
+
+def _run_rows(path: str | Path, buffer_rows: int):
+    """Yield (key-tuple, id, sax-row) from one run file, buffered reads."""
+    _, arrs = runs_lib.open_run(path)
+    keys, sax, ids = arrs["keys"], arrs["sax"], arrs["ids"]
+    m = ids.shape[0]
+    for s in range(0, m, buffer_rows):
+        e = min(s + buffer_rows, m)
+        kb = np.array(keys[:, s:e])          # copy the buffer off the mmap
+        sb = np.array(sax[s:e])
+        ib = np.array(ids[s:e])
+        for j in range(e - s):
+            yield (tuple(int(x) for x in kb[:, j]), int(ib[j]), sb[j])
+
+
+def merge_runs(run_paths: list[str | Path], out_path: str | Path, *,
+               w: int, buffer_rows: int = 8192) -> Path:
+    """K-way merge sorted runs into one global-order merge file (atomic)."""
+    run_paths = [Path(p) for p in run_paths]
+    n_total = sum(runs_lib.open_run(p)[0]["sections"]["ids"]["shape"][0]
+                  for p in run_paths)
+    specs = format_lib._generic_specs({
+        "sax": ((n_total, w), "<u2"),
+        "ids": ((n_total,), "<i8"),
+    })
+    out_path = Path(out_path)
+    wr = format_lib.ArrayFileWriter(out_path, kind=MERGE_KIND, specs=specs,
+                                    extra={"n_runs": len(run_paths)})
+    try:
+        sax_buf, ids_buf, row = [], [], 0
+        streams = [_run_rows(p, buffer_rows) for p in run_paths]
+        for key, sid, sax_row in heapq.merge(
+                *streams, key=lambda t: (t[0], t[1])):
+            sax_buf.append(sax_row)
+            ids_buf.append(sid)
+            if len(ids_buf) == buffer_rows:
+                wr.write_rows("sax", row, np.stack(sax_buf))
+                wr.write_rows("ids", row, np.asarray(ids_buf, np.int64))
+                row += len(ids_buf)
+                sax_buf, ids_buf = [], []
+        if ids_buf:
+            wr.write_rows("sax", row, np.stack(sax_buf))
+            wr.write_rows("ids", row, np.asarray(ids_buf, np.int64))
+            row += len(ids_buf)
+        if row != n_total:
+            raise ValueError(f"merge produced {row} of {n_total} rows")
+    except BaseException:
+        wr.abort()
+        raise
+    wr.close()
+    return out_path
+
+
+def open_merge(path: str | Path) -> tuple[dict, dict]:
+    """-> (meta, {sax, ids}) memmaps — pass 2 streams slices of these."""
+    return format_lib.open_arrays(path, kind=MERGE_KIND, mmap=True)
+
+
+def merge_order(run_paths: list[str | Path]) -> np.ndarray:
+    """The merged global permutation alone (property tests, small inputs)."""
+    out = []
+    for _, sid, _ in heapq.merge(*[_run_rows(Path(p), 8192)
+                                   for p in run_paths],
+                                 key=lambda t: (t[0], t[1])):
+        out.append(sid)
+    return np.asarray(out, np.int64)

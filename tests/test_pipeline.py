@@ -1,0 +1,286 @@
+"""Staged build pipeline: sharded byte-identity, k-way merge order
+property, SIGKILL crash-resume (manifest), truncation rejection, and
+format v1 back-compat (DESIGN.md §5)."""
+import hashlib
+import json
+import os
+import signal
+import struct
+import subprocess
+import sys
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+import repro.core as core
+from repro import storage
+from repro.data import random_walk
+from repro.storage.pipeline import (BuildInterrupted, build_run,
+                                    merge_order, run_pipeline)
+
+CAP, CHUNK, LEN = 32, 128, 64
+
+
+def _sha(path) -> str:
+    return hashlib.sha256(Path(path).read_bytes()).hexdigest()
+
+
+def _golden(tmp_path, raw) -> Path:
+    """save_index(core.build(...)) — the byte-identity reference."""
+    p = tmp_path / "golden.dsix"
+    storage.save_index(core.build(jnp.asarray(raw), capacity=CAP), p)
+    return p
+
+
+@pytest.fixture(scope="module")
+def dataset(tmp_path_factory):
+    raw = random_walk(600, LEN, seed=23)       # 600 % 32 != 0: pad unit too
+    td = tmp_path_factory.mktemp("pipe")
+    store = storage.SeriesStore.write(td / "series.f32", raw)
+    return raw, store, td
+
+
+def test_sharded_build_byte_identical_and_counted(dataset, tmp_path):
+    """Acceptance: >=2 workers, several shards -> byte-identical file."""
+    raw, store, _ = dataset
+    out = tmp_path / "sharded.dsix"
+    path, rep = run_pipeline(store, out, capacity=CAP, chunk=CHUNK,
+                             workers=2, shards=3)
+    assert _sha(path) == _sha(_golden(tmp_path, raw))
+    assert not rep.resumed
+    assert rep.stages["runs"].built == 3 and rep.stages["runs"].reused == 0
+    assert rep.stages["merge"].built == 1
+    assert rep.stages["publish"].built == 1
+    assert not (tmp_path / "sharded.dsix.build").exists()   # work dir gone
+
+
+def test_shard_count_does_not_change_bytes(dataset, tmp_path):
+    raw, store, _ = dataset
+    ref = _sha(_golden(tmp_path, raw))
+    for shards in (1, 2, 5):
+        out = tmp_path / f"s{shards}.dsix"
+        run_pipeline(store, out, capacity=CAP, chunk=CHUNK, shards=shards)
+        assert _sha(out) == ref, f"shards={shards}"
+
+
+def test_merge_random_shard_splits_match_global_lexsort(dataset, tmp_path):
+    """Property: ANY shard split k-way merges to the single-pass lexsort
+    order (stable ascending, ties by source id)."""
+    raw, store, _ = dataset
+    n = len(store)
+    # the single-sort oracle: the in-memory builder's own global ordering
+    from repro.core import isax
+    from repro.kernels import ops
+    _, sax = ops.summarize(jnp.asarray(raw), w=isax.W, card=isax.CARD)
+    want = np.asarray(isax.sort_order(sax, isax.W)).astype(np.int64)
+
+    rng = np.random.default_rng(0)
+    for trial in range(4):
+        n_cuts = int(rng.integers(1, 6))
+        cuts = np.sort(rng.choice(np.arange(1, n), n_cuts, replace=False))
+        bounds = [0, *cuts.tolist(), n]
+        paths = []
+        for i in range(len(bounds) - 1):
+            p = tmp_path / f"t{trial}-run{i}.dsix"
+            build_run(store, p, row_start=bounds[i], row_stop=bounds[i + 1],
+                      w=isax.W, card=isax.CARD, chunk=CHUNK, normalize=True)
+            paths.append(p)
+        got = merge_order(paths)
+        np.testing.assert_array_equal(got, want,
+                                      err_msg=f"splits {bounds}")
+
+
+def _spawn_build(store, out, *, kill_after: str, shards: int = 3) -> int:
+    """Run a pipeline build in a subprocess with the kill-switch armed;
+    -> returncode (expected -SIGKILL)."""
+    code = (
+        "import sys\n"
+        "from repro.storage import SeriesStore\n"
+        "from repro.storage.pipeline import run_pipeline\n"
+        "store = SeriesStore(path=sys.argv[1], length=int(sys.argv[2]))\n"
+        "run_pipeline(store, sys.argv[3], capacity=int(sys.argv[4]),\n"
+        "             chunk=int(sys.argv[5]), shards=int(sys.argv[6]))\n")
+    env = dict(os.environ)
+    env["PYTHONPATH"] = os.path.join(os.path.dirname(__file__), "..", "src")
+    env["REPRO_BUILD_KILL_AFTER"] = kill_after
+    env.setdefault("JAX_PLATFORMS", "cpu")
+    r = subprocess.run(
+        [sys.executable, "-c", code, str(store.path), str(store.length),
+         str(out), str(CAP), str(CHUNK), str(shards)],
+        capture_output=True, text=True, env=env, timeout=600)
+    assert r.returncode != 0, f"kill switch did not fire:\n{r.stdout}"
+    return r.returncode
+
+
+@pytest.mark.parametrize("kill_after,expect", [
+    # SIGKILL after the 1st completed pass-1 run: resume must reuse
+    # exactly that run and rebuild the other 2 + everything downstream
+    ("runs:1", dict(runs=(2, 1), permute_reused=0)),
+    # SIGKILL after the 1st completed pass-2 permute unit: every pass-1
+    # run, the merge, and the summaries must be reused, plus that unit
+    ("permute:1", dict(runs=(0, 3), permute_reused=1)),
+])
+def test_sigkill_resume_byte_identical(dataset, tmp_path, kill_after, expect):
+    raw, store, _ = dataset
+    out = tmp_path / "killed.dsix"
+    rc = _spawn_build(store, out, kill_after=kill_after)
+    assert rc == -signal.SIGKILL
+    assert not out.exists()                      # never a partial publish
+    work = out.with_name(out.name + ".build")
+    assert (work / "manifest.json").exists()
+
+    messages = []
+    path, rep = run_pipeline(store, out, capacity=CAP, chunk=CHUNK,
+                             shards=3, progress=messages.append)
+    assert rep.resumed
+    assert any("resuming from manifest" in m for m in messages)
+    built, reused = expect["runs"]
+    assert (rep.stages["runs"].built, rep.stages["runs"].reused) \
+        == (built, reused)
+    assert rep.stages["permute"].reused == expect["permute_reused"]
+    if kill_after.startswith("permute"):
+        assert rep.stages["merge"].reused == 1
+        assert rep.stages["summaries"].reused == 1
+    assert _sha(path) == _sha(_golden(tmp_path, raw))
+
+
+def test_inprocess_interrupt_resume_counters(dataset, tmp_path):
+    """The bench's injected-kill shape: a fault hook raises mid-permute;
+    the partial survives and the resume redoes only what was pending."""
+    raw, store, _ = dataset
+    out = tmp_path / "fault.dsix"
+
+    def fault(stage, done):
+        if stage == "permute" and done >= 2:
+            raise BuildInterrupted(f"{stage}:{done}")
+
+    with pytest.raises(BuildInterrupted):
+        run_pipeline(store, out, capacity=CAP, chunk=CHUNK, shards=2,
+                     fault=fault)
+    n_units = -(-len(store) // CHUNK) + 1        # + the pad unit
+    path, rep = run_pipeline(store, out, capacity=CAP, chunk=CHUNK, shards=2)
+    assert rep.resumed
+    assert rep.stages["permute"].reused == 2
+    assert rep.stages["permute"].built == n_units - 2
+    assert _sha(path) == _sha(_golden(tmp_path, raw))
+
+
+def test_completed_build_rerun_is_a_verified_noop(dataset, tmp_path):
+    raw, store, _ = dataset
+    out = tmp_path / "noop.dsix"
+    run_pipeline(store, out, capacity=CAP, chunk=CHUNK, keep_work=True)
+    before = _sha(out)
+    path, rep = run_pipeline(store, out, capacity=CAP, chunk=CHUNK,
+                             keep_work=True)
+    assert rep.stages["publish"].reused == 1     # verified, nothing redone
+    assert rep.stages["runs"].built == 0 and rep.stages["permute"].built == 0
+    assert _sha(path) == before
+
+
+def test_manifest_param_mismatch_starts_fresh(dataset, tmp_path):
+    raw, store, _ = dataset
+    out = tmp_path / "fresh.dsix"
+
+    def fault(stage, done):
+        if stage == "merge":
+            raise BuildInterrupted(stage)
+
+    with pytest.raises(BuildInterrupted):
+        run_pipeline(store, out, capacity=CAP, chunk=CHUNK, shards=2,
+                     fault=fault)
+    # different capacity -> different output bytes: the stale manifest
+    # must NOT be resumed
+    messages = []
+    path, rep = run_pipeline(store, out, capacity=CAP * 2, chunk=CHUNK,
+                             shards=2, progress=messages.append)
+    assert not rep.resumed
+    assert any("starting fresh" in m for m in messages)
+    assert rep.stages["runs"].built == 2 and rep.stages["runs"].reused == 0
+    golden = tmp_path / "g2.dsix"
+    storage.save_index(core.build(jnp.asarray(raw), capacity=CAP * 2), golden)
+    assert _sha(path) == _sha(golden)
+
+
+# ---------------------------------------------------------------------------
+# satellite: truncation rejection + format v1 back-compat
+# ---------------------------------------------------------------------------
+
+def test_truncated_index_rejected_loudly(dataset, tmp_path):
+    raw, store, _ = dataset
+    good = _golden(tmp_path, raw)
+    bad = tmp_path / "trunc.dsix"
+    bad.write_bytes(good.read_bytes()[:-4097])   # torn copy: tail missing
+    with pytest.raises(ValueError, match="truncated/partial"):
+        storage.load_index(bad)
+    with pytest.raises(ValueError, match="truncated/partial"):
+        storage.open_index(bad)
+    # header-level truncation fails loudly too, not with a JSON error
+    bad.write_bytes(good.read_bytes()[:40])
+    with pytest.raises(ValueError, match="truncated header"):
+        storage.read_meta(bad)
+
+
+def test_run_file_rejected_as_index(dataset, tmp_path):
+    from repro.core import isax
+    _, store, _ = dataset
+    p = tmp_path / "arun.dsix"
+    build_run(store, p, row_start=0, row_stop=100, w=isax.W, card=isax.CARD,
+              chunk=CHUNK, normalize=True)
+    with pytest.raises(ValueError, match="not an index"):
+        storage.load_index(p)
+    with pytest.raises(ValueError, match="not an index"):
+        storage.open_index(p)
+
+
+def _downgrade_to_v1(src: Path, dst: Path) -> None:
+    """Rewrite a v2 index file as its exact v1 (pre-pipeline) bytes.
+
+    v2 only added the meta 'kind' field (first key); stripping it restores
+    the v1 meta JSON key-for-key, and the section layout is unchanged, so
+    the data region is copied verbatim — this reproduces what the seed
+    writer emitted for the same index.
+    """
+    blob_all = src.read_bytes()
+    meta_len, data_start = struct.unpack("<QQ", blob_all[8:24])
+    meta = json.loads(blob_all[24:24 + meta_len].decode())
+    assert meta.pop("kind") == "index"
+    blob = json.dumps(meta).encode()
+    new_start = -(-(24 + len(blob)) // 4096) * 4096
+    out = bytearray()
+    out += b"DSIX" + struct.pack("<I", 1)
+    out += struct.pack("<QQ", len(blob), new_start)
+    out += blob
+    out += b"\0" * (new_start - len(out))
+    out += blob_all[data_start:]
+    dst.write_bytes(bytes(out))
+
+
+def test_v1_index_files_still_load_bit_exact(dataset, tmp_path):
+    """Back-compat: the previous on-disk generation (format v1, no 'kind')
+    loads bit-exactly through the v2 reader — the format-versioning story
+    earning its keep across the bump."""
+    raw, store, _ = dataset
+    v2 = _golden(tmp_path, raw)
+    v1 = tmp_path / "legacy.dsix"
+    _downgrade_to_v1(v2, v1)
+
+    meta = storage.read_meta(v1)
+    assert meta["version"] == 1 and meta["kind"] == "index"
+
+    a, b = storage.load_index(v1), storage.load_index(v2)
+    for f in ("raw", "slo", "shi", "elo", "ehi", "ids"):
+        assert np.array_equal(np.asarray(getattr(a, f)),
+                              np.asarray(getattr(b, f))), f
+    for f in ("n", "w", "card", "capacity", "n_real"):
+        assert getattr(a, f) == getattr(b, f), f
+
+    # and the out-of-core open streams the same blocks
+    opened = storage.open_index(v1)
+    qs = jnp.asarray(raw[:3])
+    res = storage.ooc_search(opened, qs, k=3)
+    want = storage.ooc_search(storage.open_index(v2), qs, k=3)
+    assert np.array_equal(np.asarray(res.idx), np.asarray(want.idx))
+    assert np.array_equal(np.asarray(res.dist), np.asarray(want.dist))

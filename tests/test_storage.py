@@ -59,7 +59,8 @@ def test_meta_and_extra(saved):
     _, path = saved
     meta = storage.read_meta(path)
     assert meta["extra"] == {"dataset": "rw4000"}
-    assert meta["version"] == 1
+    assert meta["version"] == 2          # v2: kind field (pipeline files)
+    assert meta["kind"] == "index"
     # raw is last and page-aligned: the memmap window is one aligned span
     raw_off = meta["sections"]["raw"]["offset"]
     assert (meta["data_start"] + raw_off) % 4096 == 0
