@@ -10,10 +10,17 @@ claim at configurable sizes —
   * streaming exact k-NN (`storage.ooc_search`, summaries-resident) vs
     the in-memory MESSI search on identical data;
   * raw bytes read vs a full scan — the bytes-level pruning ratio that
-    explains the on-disk latency (the paper's §IV mechanism).
+    explains the on-disk latency (the paper's §IV mechanism);
+  * depth x group pipeline sweep (``section == "pipeline"``): the same
+    one-shot search with D speculative reads in flight and G blocks per
+    batched refine — per-query latency, speculated-but-pruned blocks,
+    and the threshold-sync amortization, each point cold on disk
+    (``ooc_search`` is a throwaway session) and asserted bitwise
+    against the serial walk first.
 
     PYTHONPATH=src python -m benchmarks.bench_ooc \\
-        --sizes 50000 --k 1,5 --out BENCH_ooc.json
+        --sizes 50000 --k 1,5 --depths 1,2,4 --groups 1,2,8 \\
+        --out BENCH_ooc.json
 """
 from __future__ import annotations
 
@@ -30,10 +37,41 @@ from repro import storage
 from repro.data import make_dataset
 
 
+def _pipeline_sweep(opened, qs, k: int, ds: str, n: int,
+                    depths, groups, readers: int) -> list[dict]:
+    """Cold depth x group sweep through one-shot ``ooc_search`` calls;
+    exactness vs the serial point is asserted before reporting."""
+    rows, serial = [], None
+    for d in depths:
+        for g in groups:
+            t, r = timeit(storage.ooc_search, opened, qs, k=k,
+                          pipeline_depth=d, group_blocks=g,
+                          readers=readers)
+            if serial is None:
+                serial = r                  # (depths, groups) start at 1, 1
+            assert np.array_equal(np.asarray(r.idx),
+                                  np.asarray(serial.idx)), "exactness!"
+            assert np.array_equal(np.asarray(r.dist),
+                                  np.asarray(serial.dist)), "exactness!"
+            touched = r.io.blocks_fetched + r.io.cache_hits
+            rows.append({
+                "section": "pipeline", "dataset": ds, "n_series": n,
+                "k": k, "pipeline_depth": d, "group_blocks": g,
+                "readers": readers,
+                "ooc_ms": t / qs.shape[0] * 1e3,
+                "blocks_fetched": r.io.blocks_fetched,
+                "blocks_refined": r.io.blocks_refined,
+                "speculated_pruned": int(touched - r.io.blocks_refined),
+            })
+    return rows
+
+
 def run(sizes=(50_000, 200_000), datasets=("synthetic",),
         n_queries: int = 8, capacity: int = 1024, ks=(1, 5),
+        depths=(1, 2, 4), groups=(1, 2, 8), readers: int = 3,
         workdir: str | None = None) -> list[dict]:
     rows = []
+    pipe_rows: list[dict] = []
     tmp = workdir or tempfile.mkdtemp(prefix="bench_ooc_")
     for ds in datasets:
         for n in sizes:
@@ -76,12 +114,19 @@ def run(sizes=(50_000, 200_000), datasets=("synthetic",),
                     "refined_frac": float(np.mean(np.asarray(
                         r_ooc.stats.series_refined))) / n,
                 })
+            pipe_rows += _pipeline_sweep(opened, qs, max(ks), ds, n,
+                                         depths, groups, readers)
             os.remove(series_path)
             os.remove(index_path)
     print_table("out-of-core vs in-memory (paper's on-disk claim)", rows,
                 ["dataset", "n_series", "k", "build_mem_s", "build_ooc_s",
                  "mem_ms", "ooc_ms", "ooc_vs_mem", "read_frac",
                  "blocks_fetched", "blocks_total"])
+    print_table("pipeline sweep: depth x group, cold one-shot searches",
+                pipe_rows, ["dataset", "n_series", "k", "pipeline_depth",
+                            "group_blocks", "ooc_ms", "blocks_fetched",
+                            "blocks_refined", "speculated_pruned"])
+    rows += pipe_rows
     write_rows("ooc", rows)
     return rows
 
@@ -93,9 +138,13 @@ def main(argv=None) -> int:
             .arg("--k", type=csv_ints, default=(1, 5))
             .arg("--queries", type=int, default=8)
             .arg("--capacity", type=int, default=1024)
+            .arg("--depths", type=csv_ints, default=(1, 2, 4))
+            .arg("--groups", type=csv_ints, default=(1, 2, 8))
+            .arg("--readers", type=int, default=3)
             .main(lambda a: run(sizes=a.sizes, datasets=a.datasets,
                                 n_queries=a.queries, capacity=a.capacity,
-                                ks=a.k), argv))
+                                ks=a.k, depths=a.depths, groups=a.groups,
+                                readers=a.readers), argv))
 
 
 if __name__ == "__main__":

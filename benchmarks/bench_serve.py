@@ -8,7 +8,7 @@ device-resident raw blocks across query batches, so the surviving
 working set migrates on device and warm batches approach the in-memory
 latency without ever holding more than `cache_blocks` raw blocks.
 
-Two sections, one BENCH_serve.json:
+Three sections, one BENCH_serve.json:
 
   * cold-vs-warm (``mode == "session"``): a fixed sequence of query
     batches answered twice through one session per cache size —
@@ -20,10 +20,18 @@ Two sections, one BENCH_serve.json:
     completion-latency p50/p99, fairness (max/mean completion), and
     disk blocks (sum vs union).  Exactness between the two modes is
     asserted bitwise before anything is reported.
+  * pipeline sweep (``mode == "pipeline"``): the depth-D / group-G
+    walk pipeline on a COLD cache per point — per-query latency,
+    host<->device threshold syncs per walked block (the amortization:
+    syncs ~= walked/G + 1), blocks speculated-but-pruned
+    (fetched + hits - refined), and reader-pool effectiveness
+    (1 - demand-miss fraction: how many disk reads the speculation
+    hid from the walk).  Answers are asserted bitwise against the
+    serial (D=1, G=1) walk before any number is reported.
 
     PYTHONPATH=src python -m benchmarks.bench_serve \\
         --size 50000 --cache-blocks 8,32,128 --tenants 2,4,8 \\
-        --out BENCH_serve.json
+        --depths 1,2,4 --groups 1,2,8 --out BENCH_serve.json
 """
 from __future__ import annotations
 
@@ -122,9 +130,75 @@ def _concurrency_section(opened, batches, k: int, cache_blocks: int,
     return rows
 
 
+def _pipeline_section(opened, batches, k: int, cache_blocks: int,
+                      depths, groups, readers: int) -> list[dict]:
+    """Depth x group sweep, every point cold on disk: each batch runs
+    through a FRESH session, so the latency is the overlap the pipeline
+    wins against real (first-touch) reads, not cache residency.
+    Exactness vs the serial walk is asserted before reporting."""
+    serial = None
+    rows = []
+    for d in depths:
+        for g in groups:
+            lat, tel_sum, io_sum, misses, results = [], {}, {}, 0, []
+            for qs in batches:
+                with storage.SearchSession(
+                        opened, cache_blocks=max(cache_blocks, d + g),
+                        readers=readers, pipeline_depth=d,
+                        group_blocks=g) as sess:
+                    t0 = time.perf_counter()
+                    res = sess.search(qs, k=k)
+                    jax.block_until_ready(res.dist)
+                    lat.append((time.perf_counter() - t0) * 1e3)
+                    misses += sess.cache.demand_misses
+                    for key, v in sess.last_telemetry.items():
+                        tel_sum[key] = tel_sum.get(key, 0) + v
+                results.append(res)
+                for key in ("blocks_fetched", "cache_hits",
+                            "blocks_refined"):
+                    io_sum[key] = io_sum.get(key, 0) + getattr(res.io, key)
+            if serial is None:
+                serial = results             # (depths, groups) start at 1, 1
+            for a, b in zip(results, serial):          # exactness first
+                assert np.array_equal(np.asarray(a.idx),
+                                      np.asarray(b.idx)), "exactness!"
+                assert np.array_equal(np.asarray(a.dist), np.asarray(b.dist))
+            lat = np.asarray(lat)
+            walked = tel_sum["walk_blocks"]
+            touched = io_sum["blocks_fetched"] + io_sum["cache_hits"]
+            rows.append({
+                "mode": "pipeline", "pipeline_depth": d, "group_blocks": g,
+                "readers": readers, "k": k,
+                "cache_blocks": max(cache_blocks, d + g),
+                "p50_ms": float(np.percentile(lat, 50)),
+                "p99_ms": float(np.percentile(lat, 99)),
+                "ms_per_query": float(np.percentile(lat, 50)
+                                      / batches[0].shape[0]),
+                "syncs": int(tel_sum["syncs"]),
+                "walk_blocks": int(walked),
+                "syncs_per_block": tel_sum["syncs"] / max(walked, 1),
+                "speculated_pruned": int(touched - io_sum["blocks_refined"]),
+                "demand_miss_frac": misses / max(io_sum["blocks_fetched"], 1),
+            })
+    # the acceptance property: grouping amortizes the per-block sync
+    # (syncs ~= walked/G + 1 per batch; compare same-depth rows)
+    by_dg = {(r["pipeline_depth"], r["group_blocks"]): r for r in rows}
+    for d in depths:
+        base = by_dg.get((d, 1))
+        for g in groups:
+            r = by_dg[(d, g)]
+            if base is not None and g > 1:
+                assert r["syncs"] < base["syncs"], \
+                    f"group_blocks={g} did not amortize syncs"
+            assert r["syncs"] <= r["walk_blocks"] / g + 2 * len(batches), \
+                "syncs exceed the walked/G bound"
+    return rows
+
+
 def run(n: int = 50_000, length: int = 256, n_queries: int = 8,
         n_batches: int = 6, capacity: int = 1024,
         cache_blocks=(8, 32, 128), k: int = 5, tenants=(2, 4),
+        depths=(1, 2, 4), groups=(1, 2, 8), readers: int = 3,
         workdir: str | None = None) -> list[dict]:
     tmp = workdir or tempfile.mkdtemp(prefix="bench_serve_")
     raw = make_dataset("synthetic", n, length)
@@ -174,6 +248,8 @@ def run(n: int = 50_000, length: int = 256, n_queries: int = 8,
         })
     conc_cb = max(2, min(max(cache_blocks), opened.n_blocks))
     conc_rows = _concurrency_section(opened, batches, k, conc_cb, tenants)
+    pipe_rows = _pipeline_section(opened, batches, k, conc_cb,
+                                  depths, groups, readers)
 
     os.remove(series_path)
     os.remove(index_path)
@@ -185,7 +261,13 @@ def run(n: int = 50_000, length: int = 256, n_queries: int = 8,
                 conc_rows, ["mode", "tenants", "cache_blocks", "p50_ms",
                             "p99_ms", "makespan_ms", "fairness",
                             "blocks_fetched"])
-    rows += conc_rows
+    print_table("pipeline sweep: depth-D prefetch x group-G refine "
+                "(cold cache; exactness asserted)",
+                pipe_rows, ["pipeline_depth", "group_blocks", "readers",
+                            "p50_ms", "ms_per_query", "syncs",
+                            "walk_blocks", "syncs_per_block",
+                            "speculated_pruned", "demand_miss_frac"])
+    rows += conc_rows + pipe_rows
     write_rows("serve", rows)
     return rows
 
@@ -200,11 +282,15 @@ def main(argv=None) -> int:
             .arg("--cache-blocks", type=csv_ints, default=(8, 32, 128))
             .arg("--k", type=int, default=5)
             .arg("--tenants", type=csv_ints, default=(2, 4))
+            .arg("--depths", type=csv_ints, default=(1, 2, 4))
+            .arg("--groups", type=csv_ints, default=(1, 2, 8))
+            .arg("--readers", type=int, default=3)
             .main(lambda a: run(n=a.size, length=a.length,
                                 n_queries=a.queries, n_batches=a.batches,
                                 capacity=a.capacity,
                                 cache_blocks=a.cache_blocks, k=a.k,
-                                tenants=a.tenants), argv))
+                                tenants=a.tenants, depths=a.depths,
+                                groups=a.groups, readers=a.readers), argv))
 
 
 if __name__ == "__main__":

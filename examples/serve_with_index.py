@@ -59,6 +59,16 @@ def main():
     ap.add_argument("--cache-blocks", type=int, default=64,
                     help="SearchSession LRU capacity, in raw blocks "
                          "(out-of-core serving only)")
+    ap.add_argument("--pipeline-depth", type=int, default=1,
+                    help="speculative block reads kept in flight ahead "
+                         "of the walk (out-of-core only; answers are "
+                         "bit-identical at every setting)")
+    ap.add_argument("--group-blocks", type=int, default=1,
+                    help="surviving blocks batched per refine dispatch, "
+                         "one threshold sync per group (out-of-core "
+                         "only; answers are bit-identical)")
+    ap.add_argument("--readers", type=int, default=2,
+                    help="block-cache reader threads (out-of-core only)")
     ap.add_argument("--concurrency", type=int, default=1,
                     help="tenant threads per batch (out-of-core only): "
                          "each thread submit()s its share of the queries "
@@ -153,8 +163,10 @@ def main():
             jax.block_until_ready(
                 warmup.search(batches[0][1], k=args.k,
                               metric=vector.Cosine()).dist)
-        session = storage.SearchSession(index,
-                                        cache_blocks=args.cache_blocks)
+        session = storage.SearchSession(
+            index, cache_blocks=args.cache_blocks, readers=args.readers,
+            pipeline_depth=args.pipeline_depth,
+            group_blocks=args.group_blocks)
         # the engine's Cosine metric owns the unit-norm prep, so the
         # session serves raw embeddings directly (DESIGN.md §4 matrix:
         # Cosine x cached backend)

@@ -160,7 +160,9 @@ def search_sharded(sharded_index: BlockIndex, queries: jax.Array, mesh: Mesh,
 
 def search_sharded_ooc(sessions: Sequence, queries: jax.Array, *,
                        k: int = 1, lb_filter: bool = True,
-                       normalize_queries: bool = True, metric=None):
+                       normalize_queries: bool = True, metric=None,
+                       pipeline_depth: int | None = None,
+                       group_blocks: int | None = None):
     """Distributed OUT-OF-CORE exact k-NN: the same two-round protocol,
     host-level, over per-shard ``storage.SearchSession``s.
 
@@ -183,6 +185,11 @@ def search_sharded_ooc(sessions: Sequence, queries: jax.Array, *,
     identical to a single out-of-core search over the union of the
     shards.  (``stats.iters`` stays 0: the cached walk does not count
     while_loop trips.)
+
+    ``pipeline_depth``/``group_blocks`` forward to every shard's stage-A
+    chain and round-2 walk (``engine.run_cached``'s pipeline knobs;
+    None = each session's own default).  Answers are bit-identical at
+    every setting — only speculative I/O and sync cadence change.
     """
     import numpy as np
 
@@ -191,7 +198,8 @@ def search_sharded_ooc(sessions: Sequence, queries: jax.Array, *,
     if not sessions:
         raise ValueError("search_sharded_ooc needs at least one session")
     kw = dict(k=k, lb_filter=lb_filter, normalize_queries=normalize_queries,
-              metric=metric)
+              metric=metric, pipeline_depth=pipeline_depth,
+              group_blocks=group_blocks)
     # round 1: per-shard stage-A prepared states -> host pmin of thresholds
     preps = [s.approximate_threshold(queries, **kw) for s in sessions]
     thr_g = jnp.asarray(np.minimum.reduce([p.threshold for p in preps]))
@@ -218,6 +226,7 @@ def search_sharded_ooc(sessions: Sequence, queries: jax.Array, *,
         blocks_fetched=sum(r.io.blocks_fetched for r in results),
         blocks_total=sum(r.io.blocks_total for r in results),
         cache_hits=sum(r.io.cache_hits for r in results),
+        blocks_refined=sum(r.io.blocks_refined for r in results),
     )
     return OocSearchResult(dist=front.dists, idx=front.ids,
                            stats=stats, io=io)

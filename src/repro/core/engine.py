@@ -780,6 +780,46 @@ def _cached_refine_step(metric, qs, front, stats, block, ids_b, lo, hi, lbs,
                         active, thr, n=n, w=w)
 
 
+@functools.partial(jax.jit, static_argnames=("metric", "n", "w"))
+def _cached_refine_group(metric, qs, front, stats, blocks, ids_g, lo_g, hi_g,
+                         lbs_g, initial_threshold, *, n: int, w: int):
+    """G stacked blocks against all queries in ONE dispatch.
+
+    ``blocks`` is the (G, C, n) stack of a group of consecutive surviving
+    schedule slots; a ``lax.scan`` runs the same per-block body as
+    ``_cached_refine_step`` over the group with the frontier as carry, so
+    every block's active mask is computed against the threshold AFTER all
+    earlier blocks in the group — exactly the threshold the serial walk
+    would have shown it.  The host only picked the group under a stale
+    (one-group-old) threshold; staleness can admit a block whose queries
+    are all dead by its turn, and such a block contributes nothing: its
+    active mask is all-False, so the frontier insert and every stat
+    counter are no-ops.  Hence dist/idx AND stats are bit-identical to
+    dispatching the group one block at a time.
+
+    ``lo_g``/``hi_g`` are (G, w, C) stacked per-series bounds or None
+    (metrics that filter off raw values, or not at all) — the None case
+    traces a separate program, mirroring the single-block step.  One
+    compile per distinct group length; partial final groups reuse the
+    single-block step when they shrink to one block.
+    """
+    def body(carry, xs):
+        f, st = carry
+        if lo_g is None:
+            block, ids_b, lbs = xs
+            lo = hi = None
+        else:
+            block, ids_b, lo, hi, lbs = xs
+        thr = _bound(f, initial_threshold)
+        active = lbs < thr
+        return panel_refine(metric, qs, f, st, block, ids_b, lo, hi,
+                            active, thr, n=n, w=w), None
+    xs = ((blocks, ids_g, lbs_g) if lo_g is None
+          else (blocks, ids_g, lo_g, hi_g, lbs_g))
+    (front, stats), _ = jax.lax.scan(body, (front, stats), xs)
+    return front, stats
+
+
 def cached_setup(index: BlockIndex, queries: jax.Array, plan: QueryPlan
                  ) -> PreparedSearch:
     """Query prep + block ranking for an index whose raw lives off-device.
@@ -797,26 +837,82 @@ def cached_setup(index: BlockIndex, queries: jax.Array, plan: QueryPlan
                           stats=frontier_lib.stats_init(qn))
 
 
+def _check_pipeline_knobs(pipeline_depth: int, group_blocks: int) -> None:
+    if pipeline_depth < 1 or group_blocks < 1:
+        raise ValueError(
+            f"pipeline_depth and group_blocks must be >= 1 (1, 1 is the "
+            f"serial walk), got ({pipeline_depth}, {group_blocks})")
+
+
+class _GroupDispatcher:
+    """Host side of the pipelined refine: stack a group, dispatch once.
+
+    Shared by stage A and the walk.  A one-block group goes through
+    ``_cached_refine_step`` — byte-for-byte today's serial dispatch, so
+    (D=1, G=1) walks reuse the existing jit cache and stay bit-identical
+    including stats; larger groups stack to (G, C, n) and run the
+    ``lax.scan`` group kernel in a single dispatch (one host->device
+    round trip, one threshold sync for the whole group).
+    """
+
+    def __init__(self, index: BlockIndex, plan: QueryPlan, block_lb,
+                 fetch, initial_threshold):
+        self.index = index
+        self.metric = plan.metric
+        self.block_lb = block_lb                 # (Q, B) device
+        self.fetch = fetch
+        self.thr0 = initial_threshold
+        self.needs = plan.metric.filters and plan.metric.needs_bounds
+        self.dispatches = 0
+
+    def __call__(self, qs, front, stats, gids: list[int]):
+        index, needs = self.index, self.needs
+        self.dispatches += 1
+        if len(gids) == 1:
+            b = gids[0]
+            lo = index.slo[b] if needs else None
+            hi = index.shi[b] if needs else None
+            return _cached_refine_step(
+                self.metric, qs, front, stats, self.fetch(b), index.ids[b],
+                lo, hi, self.block_lb[:, b], self.thr0,
+                n=index.n, w=index.w)
+        blocks = jnp.stack([self.fetch(b) for b in gids])        # (G, C, n)
+        gi = jnp.asarray(np.asarray(gids, dtype=np.int32))
+        lo_g = index.slo[gi] if needs else None                  # (G, w, C)
+        hi_g = index.shi[gi] if needs else None
+        return _cached_refine_group(
+            self.metric, qs, front, stats, blocks, index.ids[gi],
+            lo_g, hi_g, jnp.transpose(self.block_lb[:, gi]),     # (G, Q)
+            self.thr0, n=index.n, w=index.w)
+
+
 def _cached_stage_a(index, plan, prep: PreparedSearch, block_lb_h,
-                    fetch, speculate, initial_threshold) -> PreparedSearch:
+                    fetch, speculate, initial_threshold, *,
+                    pipeline_depth: int = 1, group_blocks: int = 1,
+                    telemetry: dict | None = None) -> PreparedSearch:
     """Stage A on the cached backend: each query's best-envelope block
-    seeds the frontier, pipelined one block ahead so reads overlap the
-    refines.  Returns the state with the refined block ids recorded, so
-    a resumed walk never fetches or refines them again."""
+    seeds the frontier — a pure fetch/refine chain, so it gets the full
+    pipeline treatment: the next ``pipeline_depth`` blocks are always in
+    flight behind the reader pool, and up to ``group_blocks`` blocks ride
+    one batched dispatch.  Returns the state with the refined block ids
+    recorded, so a resumed walk never fetches or refines them again."""
     qs, front, stats = prep.qs, prep.front, prep.stats
-    step = functools.partial(_cached_refine_step, plan.metric,
-                             n=index.n, w=index.w)
-    needs = plan.metric.filters and plan.metric.needs_bounds
+    dispatch = _GroupDispatcher(index, plan, prep.block_lb, fetch,
+                                initial_threshold)
     stage_a = [int(b) for b in np.unique(np.argmin(block_lb_h, axis=1))]
-    if stage_a:
-        speculate(stage_a[0])
-    for i, b in enumerate(stage_a):
-        if i + 1 < len(stage_a):
-            speculate(stage_a[i + 1])
-        lo = index.slo[b] if needs else None
-        hi = index.shi[b] if needs else None
-        front, stats = step(qs, front, stats, fetch(b), index.ids[b],
-                            lo, hi, prep.block_lb[:, b], initial_threshold)
+    i = 0
+    while i < len(stage_a):
+        gids = stage_a[i:i + group_blocks]
+        for b in gids:                     # group reads first, in order
+            speculate(b)
+        nxt = i + len(gids)
+        for b in stage_a[nxt:nxt + pipeline_depth]:    # depth-D lookahead
+            speculate(b)
+        front, stats = dispatch(qs, front, stats, gids)
+        i = nxt
+    if telemetry is not None:
+        telemetry["stage_a_blocks"] = len(stage_a)
+        telemetry["stage_a_dispatches"] = dispatch.dispatches
     return dataclasses.replace(
         prep, front=front, stats=stats,
         refined=prep.refined | frozenset(stage_a))
@@ -826,17 +922,40 @@ def run_cached(index: BlockIndex, queries: jax.Array, plan: QueryPlan, *,
                fetch: Callable[[int], jax.Array],
                speculate: Callable[[int], None] = lambda b: None,
                initial_threshold: jax.Array | None = None,
-               prepared: PreparedSearch | None = None
+               prepared: PreparedSearch | None = None,
+               pipeline_depth: int = 1, group_blocks: int = 1,
+               telemetry: dict | None = None
                ) -> tuple[Frontier, SearchStats, PreparedSearch]:
     """The §5 host-level walk: the block-major schedule driven through a
-    fetch callback (``storage.BlockCache`` in production).
+    fetch callback (``storage.BlockCache`` in production), as a
+    depth-D, group-G pipeline that degenerates to the serial walk at
+    (D=1, G=1).
 
     Same schedule, same stopping rule, same ``panel_refine`` as the
     device block-major backend — only the block transport differs:
     ``fetch(b)`` must return the (C, n) device block (blocking only if a
     disk read is needed), ``speculate(b)`` starts a background read.
-    The one-block-ahead speculation is threshold-speculative: the bound
-    only tightens, so it can waste bytes but never wrongly refine.
+
+    ``pipeline_depth`` (D) is how many surviving schedule slots beyond
+    the current group are speculated per iteration — D reads in flight
+    behind the cache's reader pool instead of one.  ``group_blocks``
+    (G) batches up to G consecutive surviving blocks (under the current
+    host threshold) into ONE jitted dispatch (``_cached_refine_group``),
+    and the walk syncs the threshold once per GROUP instead of once per
+    block.  Both are threshold-speculative and exact by construction:
+    the host threshold only decides which blocks are dispatched, it is
+    stale by at most one group, and a stale bound only *weakens* host
+    pruning — a block admitted stale meets the up-to-date device-side
+    threshold inside the dispatch (the group scan carries the frontier),
+    so it refines exactly what the serial walk would have refined (often
+    nothing), and dist/idx/stats land bit-identical for any (D, G);
+    only I/O (extra speculated-then-pruned fetches) can differ.
+
+    ``telemetry`` (optional dict) is filled with host-side walk counters
+    — ``syncs`` (host<->device threshold round trips), ``dispatches``,
+    ``walk_blocks`` — so callers can verify the amortization
+    (syncs ~= refined_blocks / G + 1).
+
     Returns ``(frontier, stats, state)``: the local frontier, the
     finalized work stats, and the walk's end state as a resumable
     ``PreparedSearch`` (pre-finalize stats; ``refined`` holds every
@@ -862,11 +981,15 @@ def run_cached(index: BlockIndex, queries: jax.Array, plan: QueryPlan, *,
     if plan.schedule != "block_major":
         raise ValueError("the cached backend walks the block-major "
                          f"schedule; got {plan.schedule!r}")
+    _check_pipeline_knobs(pipeline_depth, group_blocks)
     n_blocks = index.n_blocks
     if prepared is None:
         prep = cached_setup(index, queries, plan)
         prep = _cached_stage_a(index, plan, prep, np.asarray(prep.block_lb),
-                               fetch, speculate, initial_threshold)
+                               fetch, speculate, initial_threshold,
+                               pipeline_depth=pipeline_depth,
+                               group_blocks=group_blocks,
+                               telemetry=telemetry)
     else:
         _check_prepared(prepared, plan, n_blocks, queries.shape[0])
         prep = prepared
@@ -874,50 +997,62 @@ def run_cached(index: BlockIndex, queries: jax.Array, plan: QueryPlan, *,
                                   prep.stats)
     done = prep.refined
     block_lb_h = np.asarray(block_lb)
-    step = functools.partial(_cached_refine_step, plan.metric,
-                             n=index.n, w=index.w)
-    needs = plan.metric.filters and plan.metric.needs_bounds
+    dispatch = _GroupDispatcher(index, plan, block_lb, fetch,
+                                initial_threshold)
     budget = plan.deadline_blocks        # refines left; None = unbounded
 
     # -- block-major walk over the surviving schedule -----------------
-    order, sched_lb, suffix = block_major_schedule(block_lb_h, xp=np)
-
-    def pending(ptr: int) -> bool:
-        """Block at schedule slot ptr still needs a refine under thr_h."""
-        return int(order[ptr]) not in done \
-            and bool(np.any(sched_lb[:, ptr] < thr_h))
+    order, sched_lb, _ = block_major_schedule(block_lb_h, xp=np)
+    # slot_done[s]: schedule slot s already refined (stage A / a resumed
+    # run) or consumed by this walk — the survivor scan masks it out
+    slot_done = (np.isin(order, np.fromiter(done, np.int64, len(done)))
+                 if done else np.zeros(n_blocks, dtype=bool))
 
     walked: list[int] = []               # blocks THIS walk refined
+    n_syncs = 1
     thr_h = np.asarray(_bound(front, initial_threshold))              # sync
     ptr = 0
     while ptr < n_blocks:
-        if np.all(suffix[:, ptr] >= thr_h):
-            break                       # nothing later helps any query
         if budget is not None and len(walked) >= budget:
             break                       # deadline: answer is anytime now
-        if not pending(ptr):
-            ptr += 1
-            continue                    # pruned (or stage-A-refined)
-        b_id = int(order[ptr])
-        lo = index.slo[b_id] if needs else None
-        hi = index.shi[b_id] if needs else None
-        front, stats = step(qs, front, stats, fetch(b_id), index.ids[b_id],
-                            lo, hi, block_lb[:, b_id],
-                            initial_threshold)                        # async
-        walked.append(b_id)
-        nxt = ptr + 1                   # next survivor under current thr
-        while nxt < n_blocks and not pending(nxt):
-            nxt += 1
-        if nxt < n_blocks and not np.all(suffix[:, nxt] >= thr_h):
-            # threshold-speculative: read overlaps the refine above; if
-            # the slot is pruned before its turn the block just stays
-            # in the cache under its id for a later query/batch (a
-            # deadline-cut walk leaves it warm for its own continuation)
-            speculate(int(order[nxt]))
-        thr_h = np.asarray(_bound(front, initial_threshold))  # one sync/block
-        # blocks in (ptr, nxt) were pruned under a bound that only
-        # tightened since — safe to jump straight to the prefetch target
-        ptr = nxt
+        # vectorized survivor scan — one numpy op per threshold sync
+        # replaces the per-slot Python pending() loop: a slot survives
+        # if unconsumed and any query's scheduled LB beats the bound.
+        # (No survivors <=> the suffix-min stopping rule fires: suffix
+        # minima over pruned slots cannot beat thr either.)
+        live = np.flatnonzero(~slot_done[ptr:] & np.any(
+            sched_lb[:, ptr:] < thr_h[:, None], axis=0)) + ptr
+        if live.size == 0:
+            break                       # nothing later helps any query
+        g = (group_blocks if budget is None
+             else min(group_blocks, budget - len(walked)))
+        take = live[:g]                 # this group's schedule slots
+        gids = [int(order[s]) for s in take]
+        for b in gids[1:]:
+            # group members behind the head start reading now, so the
+            # reader pool overlays them with the head's blocking fetch
+            speculate(b)
+        front, stats = dispatch(qs, front, stats, gids)           # async
+        walked += gids
+        slot_done[take] = True
+        # depth-D threshold-speculative lookahead: the next D surviving
+        # slots under the (now one group stale) bound start reading
+        # while the device refines and the sync below waits.  The bound
+        # only tightens, so a speculated slot pruned before its turn
+        # just stays cached under its id for a later query/batch (a
+        # deadline-cut walk leaves it warm for its own continuation).
+        for s in live[g:g + pipeline_depth]:
+            speculate(int(order[s]))
+        thr_h = np.asarray(_bound(front, initial_threshold))  # 1 sync/group
+        n_syncs += 1
+        # slots in [ptr, take[-1]] not taken were pruned under a bound
+        # that only tightened since — jump straight past the group
+        ptr = int(take[-1]) + 1
+    if telemetry is not None:
+        telemetry.update(syncs=n_syncs, dispatches=dispatch.dispatches,
+                         walk_blocks=len(walked),
+                         pipeline_depth=pipeline_depth,
+                         group_blocks=group_blocks)
     state = dataclasses.replace(prep, front=front, stats=stats,
                                 refined=done | frozenset(walked))
     return front, plan.metric.finalize_stats(stats, index.capacity), state
@@ -926,16 +1061,22 @@ def run_cached(index: BlockIndex, queries: jax.Array, plan: QueryPlan, *,
 def run_cached_stage_a(index: BlockIndex, queries: jax.Array,
                        plan: QueryPlan, *,
                        fetch: Callable[[int], jax.Array],
-                       speculate: Callable[[int], None] = lambda b: None
+                       speculate: Callable[[int], None] = lambda b: None,
+                       pipeline_depth: int = 1, group_blocks: int = 1
                        ) -> PreparedSearch:
     """Stage A only, on the cached backend: the approximate top-k after
     refining each query's best-envelope block.  The distributed
     out-of-core protocol min-reduces ``front.threshold()`` across shards
     (round 1), then threads the returned ``PreparedSearch`` back into
-    ``run_cached`` so round 2 resumes instead of repeating stage A."""
+    ``run_cached`` so round 2 resumes instead of repeating stage A.
+    ``pipeline_depth``/``group_blocks`` pipeline the stage-A chain the
+    same way they pipeline the walk (see ``run_cached``)."""
+    _check_pipeline_knobs(pipeline_depth, group_blocks)
     prep = cached_setup(index, queries, plan)
     return _cached_stage_a(index, plan, prep, np.asarray(prep.block_lb),
-                           fetch, speculate, None)
+                           fetch, speculate, None,
+                           pipeline_depth=pipeline_depth,
+                           group_blocks=group_blocks)
 
 
 # the dispatch mode is read at trace time inside these jitted entry
@@ -943,3 +1084,4 @@ def run_cached_stage_a(index: BlockIndex, queries: jax.Array,
 ops.register_dispatch_cache(run)
 ops.register_dispatch_cache(run_flat)
 ops.register_dispatch_cache(_cached_refine_step)
+ops.register_dispatch_cache(_cached_refine_group)

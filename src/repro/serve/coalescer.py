@@ -162,11 +162,16 @@ class AdmissionCoalescer:
             groups.setdefault(t.plan, []).append(t)
         tenants: list[TenantRun] = []
         rows: list[list[tuple[Ticket, slice]]] = []
+        # the drain inherits the session's walk pipeline (depth-D
+        # speculation, group-G batched refines — engine.run_cached's
+        # knobs); answers are bit-identical at every setting
+        d, g = session.pipeline_depth, session.group_blocks
         for plan, tickets in groups.items():
             qs = (tickets[0].queries if len(tickets) == 1 else
                   jnp.concatenate([t.queries for t in tickets], axis=0))
             tenants.append(prepare_tenant(index, qs, plan,
-                                          fetch=fetch, speculate=speculate))
+                                          fetch=fetch, speculate=speculate,
+                                          pipeline_depth=d, group_blocks=g))
             sls, at = [], 0
             for t in tickets:
                 qn = t.queries.shape[0]
@@ -175,9 +180,12 @@ class AdmissionCoalescer:
             rows.append(sls)
 
         coalesced_walk(index, tenants, fetch=fetch, speculate=speculate,
-                       budget=deadline_blocks)
+                       budget=deadline_blocks,
+                       pipeline_depth=d, group_blocks=g)
         session.cache.drain()            # settle speculations into this bill
-        io = session._bill(tracker, batches=len(batch))
+        union = set().union(*(t.state.refined for t in tenants))
+        io = session._bill(tracker, batches=len(batch),
+                           blocks_refined=len(union))
 
         for tenant, sls in zip(tenants, rows):
             display = tenant.plan.metric.finalize_stats(

@@ -61,33 +61,53 @@ class TenantRun:
 def prepare_tenant(index: BlockIndex, queries: jax.Array,
                    plan: engine.QueryPlan, *,
                    fetch: Callable[[int], jax.Array],
-                   speculate: Callable[[int], None] = lambda b: None
+                   speculate: Callable[[int], None] = lambda b: None,
+                   pipeline_depth: int = 1, group_blocks: int = 1
                    ) -> TenantRun:
     """Admission: metric prep + block ranking + stage-A seeding.
 
     Stage A goes through the SHARED fetch callback, so tenants whose
     best-envelope blocks coincide already coalesce here — the second
     tenant's stage A is a cache hit, not a disk read.
+    ``pipeline_depth``/``group_blocks`` pipeline the tenant's own
+    stage-A chain exactly as in ``run_cached`` (answers unchanged).
     """
     state = engine.run_cached_stage_a(index, queries, plan,
-                                      fetch=fetch, speculate=speculate)
+                                      fetch=fetch, speculate=speculate,
+                                      pipeline_depth=pipeline_depth,
+                                      group_blocks=group_blocks)
     return TenantRun(plan=plan, queries=queries, state=state)
 
 
 def coalesced_walk(index: BlockIndex, tenants: list[TenantRun], *,
                    fetch: Callable[[int], jax.Array],
                    speculate: Callable[[int], None] = lambda b: None,
-                   budget: int | None = None) -> int:
+                   budget: int | None = None,
+                   pipeline_depth: int = 1, group_blocks: int = 1) -> int:
     """Run the shared priority walk to completion (or ``budget`` refines).
 
     Mutates each tenant's ``state``/``complete`` in place; returns the
     number of blocks fetched+refined by the walk (excluding stage A).
-    One device sync per tenant per refined block (the threshold
-    read-back), same cadence as ``run_cached``; the next target's read
-    is speculated before the sync so disk stays overlapped with compute.
+
+    The walk is pipelined exactly like ``engine.run_cached``: each step
+    picks the ``group_blocks`` most urgent surviving blocks under the
+    CURRENT host thresholds (stable urgency order — ties fall to the
+    lowest block id, so G=1 degenerates to today's argmin pick), batches
+    each tenant's share of the group into one jitted dispatch, then
+    speculates the next ``pipeline_depth`` targets before paying ONE
+    threshold sync per tenant per group.  Stale thresholds only admit
+    extra blocks, and the device-side active mask inside each dispatch
+    re-checks the carried frontier's threshold, so final dist/idx stay
+    bit-identical to the serial walk (and to each tenant alone).  The
+    work counters may differ under G>1: unlike ``run_cached``'s static
+    schedule, this walk's fetch order is threshold-dynamic, so grouping
+    can legitimately change which interleave (and how much masked work)
+    produced the same exact answer.  ``budget`` still counts blocks: a
+    partial final group is cut to fit.
     """
     if not tenants:
         return 0
+    engine._check_pipeline_knobs(pipeline_depth, group_blocks)
     n_blocks = index.n_blocks
     # host-side walk state, per tenant: LB matrix, refined mask, thresholds
     lbs = [np.asarray(t.state.block_lb) for t in tenants]
@@ -107,7 +127,13 @@ def coalesced_walk(index: BlockIndex, tenants: list[TenantRun], *,
         u[refined[i]] = np.inf
         return u
 
-    def pick() -> tuple[int, float]:
+    def pick_many(g: int) -> list[int]:
+        """The ``g`` most urgent surviving blocks, urgency-ascending.
+
+        Stable: ties keep ascending block-id order, so ``g=1`` is
+        exactly the old ``np.argmin`` pick.  Flags tenants whose
+        urgency went all-inf as complete, like the old ``pick``.
+        """
         glob = np.full(n_blocks, np.inf)
         for i in range(len(tenants)):
             if not tenants[i].complete:
@@ -116,42 +142,53 @@ def coalesced_walk(index: BlockIndex, tenants: list[TenantRun], *,
                     tenants[i].complete = True
                 else:
                     glob = np.minimum(glob, u)
-        b = int(np.argmin(glob))
-        return b, float(glob[b])
+        live = np.flatnonzero(np.isfinite(glob))
+        if live.size == 0:
+            return []
+        return [int(b) for b in
+                live[np.argsort(glob[live], kind="stable")[:g]]]
+
+    # per-tenant group dispatchers share one fetched-this-step map, so
+    # each block is read once for the whole fleet and stacked per tenant
+    fetched: dict[int, jax.Array] = {}
+    disps = [engine._GroupDispatcher(index, t.plan, t.state.block_lb,
+                                     fetched.__getitem__, None)
+             for t in tenants]
 
     steps = 0
     while True:
-        b_id, best = pick()
-        if not np.isfinite(best):
+        gids = pick_many(group_blocks)
+        if not gids:
             break                          # every tenant proved complete
-        if budget is not None and steps >= budget:
-            break                          # deadline: states are anytime now
-        block = fetch(b_id)
-        lo = index.slo[b_id]
-        hi = index.shi[b_id]
+        if budget is not None:
+            if steps >= budget:
+                break                      # deadline: states are anytime now
+            gids = gids[:budget - steps]   # partial final group: cut to fit
+        for b in gids[1:]:
+            speculate(b)                   # overlap the group's own reads
+        fetched.clear()
+        for b in gids:
+            fetched[b] = fetch(b)
         for i, t in enumerate(tenants):
-            if refined[i][b_id]:
-                continue                   # stage A (or an earlier step)
-            refined[i][b_id] = True        # needed or not, never revisit:
-            if not (lbs[i][:, b_id] < thrs[i]).any():
+            sel = [b for b in gids if not refined[i][b]]
+            for b in sel:
+                refined[i][b] = True       # needed or not, never revisit:
+            # host-side cut under this tenant's (possibly one-group-
+            # stale) threshold; the device mask re-checks per block
+            sel = [b for b in sel if (lbs[i][:, b] < thrs[i]).any()]
+            if not sel:
                 continue                   # bounds only tighten from here
-            metric = t.plan.metric
-            needs = metric.filters and metric.needs_bounds
-            front, stats = engine._cached_refine_step(
-                metric, t.state.qs, t.state.front, t.state.stats,
-                block, index.ids[b_id],
-                lo if needs else None, hi if needs else None,
-                t.state.block_lb[:, b_id], None,
-                n=index.n, w=index.w)      # async dispatch
+            front, stats = disps[i](t.state.qs, t.state.front,
+                                    t.state.stats, sel)   # async dispatch
             t.state = dataclasses.replace(t.state, front=front, stats=stats)
-            walked[i].add(b_id)
-        steps += 1
-        # speculate the next target under the PRE-sync thresholds (the
-        # bound only tightens: a wasted read stays cached under its id),
-        # then pay the one sync per tenant this block cost
-        nxt, nbest = pick()
-        if np.isfinite(nbest):
-            speculate(nxt)
+            walked[i].update(sel)
+        steps += len(gids)
+        # speculate the next depth-D targets under the PRE-sync
+        # thresholds (the bound only tightens: a wasted read stays
+        # cached under its id), then pay the one sync per tenant this
+        # GROUP cost — the amortization that motivates group_blocks
+        for b in pick_many(pipeline_depth):
+            speculate(b)
         for i, t in enumerate(tenants):
             if not t.complete:
                 thrs[i] = np.asarray(t.state.front.threshold())

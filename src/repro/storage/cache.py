@@ -12,10 +12,11 @@ set.  This module makes that working set explicit:
     through it: a speculative read lands in the cache under its id, so
     a block whose schedule slot is pruned before its turn simply waits
     there for a later query (or batch) instead of leaking a device
-    buffer behind a stale slot key.  Reads run on a single background
-    reader thread, so the disk latency of block i+1 genuinely overlaps
-    the device compute (and the per-block threshold sync) of block i —
-    the driver thread never blocks inside ``np.ascontiguousarray``.
+    buffer behind a stale slot key.  Reads run on a pool of ``readers``
+    background threads with a bounded in-flight speculation set, so a
+    depth-D pipelined walk keeps D disk reads genuinely concurrent with
+    the device compute (and the per-group threshold sync) — the driver
+    thread never blocks inside ``np.ascontiguousarray``.
 
   * ``SearchSession`` — a stateful wrapper holding one ``BlockCache``
     across query batches.  The walk itself is ``engine.run_cached``:
@@ -34,9 +35,9 @@ Accounting is per batch and split so the paper's pruning claim stays
 measurable under caching: ``IOStats.bytes_read``/``blocks_fetched``
 count actual disk reads only (each block at most once per batch — a
 second same-batch read could only come from an evict-refetch cycle,
-which the >= 2 capacity floor plus the single outstanding prefetch rule
-out), while ``IOStats.cache_hits`` counts surviving blocks served from
-the cache with zero disk traffic.  A two-round protocol run is ONE
+which the ``pipeline_depth + group_blocks`` capacity floor plus the
+bounded in-flight set rule out), while ``IOStats.cache_hits`` counts
+surviving blocks served from the cache with zero disk traffic.  A two-round protocol run is ONE
 billing unit: ``approximate_threshold`` returns a ``PreparedRound``
 owning round 1's touch-set and disk reads, and the round-2
 ``search(..., prepared=...)`` that consumes it resumes that touch-set
@@ -68,34 +69,60 @@ from repro.storage.ooc_search import IOStats, OocSearchResult
 class BlockCache:
     """Capacity-bounded LRU of device-resident raw blocks, keyed by block id.
 
-    One background reader thread serves ``prefetch``/``get`` misses in
-    request order; a completed read inserts itself into the LRU under
-    the lock, so an in-flight block can never be orphaned — whoever
-    requested it (or nobody: a pruned speculation) finds it cached.
-    Eviction just drops the reference; the device buffer is freed when
-    the last ``jax.Array`` reference dies.
+    A pool of ``readers`` background reader threads serves
+    ``prefetch``/``get`` misses in request order, so a depth-D pipelined
+    walk keeps D disk reads genuinely concurrent (the ParIS+ shape:
+    whole thread groups devoted to I/O while compute proceeds); a
+    completed read inserts itself into the LRU under the lock, so an
+    in-flight block can never be orphaned — whoever requested it (or
+    nobody: a pruned speculation) finds it cached.  Eviction just drops
+    the reference; the device buffer is freed when the last
+    ``jax.Array`` reference dies.
+
+    Speculative reads are *bounded*: ``prefetch`` declines (a silent
+    no-op) once ``max_inflight`` reads are outstanding, so a deep or
+    buggy speculator can never queue unbounded I/O or churn the LRU —
+    demand ``get`` misses are never declined.  Dropping a speculation is
+    always safe: it is a pure overlap hint, and the demand fetch that
+    actually needs the block submits its own read.
 
     ``disk_blocks``/``disk_bytes`` are cumulative actual-disk-read
     counters (sessions snapshot deltas per batch); a cache hit moves
-    none of them.
+    none of them.  ``demand_misses`` counts ``get`` calls that found
+    their block neither resident nor in flight — the walk stalls the
+    pipeline was supposed to hide (``bench_serve.py`` reports the
+    fraction as reader-pool effectiveness).
     """
 
-    def __init__(self, host: HostRawBlocks, capacity_blocks: int):
+    def __init__(self, host: HostRawBlocks, capacity_blocks: int, *,
+                 readers: int = 2, max_inflight: int | None = None):
         if capacity_blocks < 2:
             # the streaming walk keeps one block in refinement plus one
             # outstanding prefetch; below 2 the prefetch could evict the
             # block it was meant to overlap, forcing a same-batch re-read
+            # (a pipelined session raises the floor to depth + group —
+            # see SearchSession)
             raise ValueError(
                 f"capacity_blocks must be >= 2, got {capacity_blocks}")
+        if readers < 1:
+            raise ValueError(f"readers must be >= 1, got {readers}")
+        if max_inflight is None:
+            max_inflight = 2 * readers
+        if max_inflight < 1:
+            raise ValueError(f"max_inflight must be >= 1, got {max_inflight}")
         self.host = host
         self.capacity_blocks = capacity_blocks
+        self.readers = readers
+        self.max_inflight = max_inflight
         self._closed = False
         self._lru: OrderedDict[int, jax.Array] = OrderedDict()
         self._inflight: dict[int, Future] = {}
         self._lock = threading.Lock()
-        self._reader = ThreadPoolExecutor(1, thread_name_prefix="block-read")
+        self._reader = ThreadPoolExecutor(readers,
+                                          thread_name_prefix="block-read")
         self.disk_blocks = 0
         self.disk_bytes = 0
+        self.demand_misses = 0
 
     def __len__(self) -> int:
         with self._lock:
@@ -132,24 +159,34 @@ class BlockCache:
             self._lru.popitem(last=False)
 
     def prefetch(self, block_id: int) -> None:
-        """Start reading ``block_id`` in the background; no-op if present."""
+        """Start reading ``block_id`` in the background; no-op if present,
+        in flight, at the ``max_inflight`` bound, or after ``close``."""
         with self._lock:
+            if self._closed:
+                return                   # a late speculation is droppable
             if block_id in self._lru:
                 self._lru.move_to_end(block_id)
                 return
-            if block_id not in self._inflight:
+            if (block_id not in self._inflight
+                    and len(self._inflight) < self.max_inflight):
                 self._inflight[block_id] = self._reader.submit(
                     self._read, block_id)
 
     def get(self, block_id: int) -> jax.Array:
         """The (C, n) device block; blocks only if a disk read is needed."""
         with self._lock:
+            if self._closed:
+                raise ValueError("BlockCache is closed")
             dev = self._lru.get(block_id)
             if dev is not None:
                 self._lru.move_to_end(block_id)
                 return dev
             fut = self._inflight.get(block_id)
             if fut is None:
+                # a demand miss is never declined (the walk needs this
+                # block NOW) — and is exactly a pipeline stall: nothing
+                # had speculated the read ahead of the fetch
+                self.demand_misses += 1
                 fut = self._reader.submit(self._read, block_id)
                 self._inflight[block_id] = fut
         return fut.result()
@@ -157,10 +194,14 @@ class BlockCache:
     def drain(self) -> None:
         """Wait for every in-flight read to land (settles the counters).
 
-        A failed read is swallowed here: it was speculative (nobody
-        blocked on it), read no bytes, and removed its own in-flight
-        entry — a caller that actually needs the block will ``get`` it
-        again and either succeed or see the error itself.
+        The reader pool may hold many concurrent reads (depth-D
+        speculation): each drain round snapshots ALL outstanding futures
+        and waits them out, looping in case a racing ``prefetch``
+        submitted more while we waited.  A failed read is swallowed
+        here: it was speculative (nobody blocked on it), read no bytes,
+        and removed its own in-flight entry — a caller that actually
+        needs the block will ``get`` it again and either succeed or see
+        the error itself.
         """
         while True:
             with self._lock:
@@ -179,10 +220,15 @@ class BlockCache:
             self._lru.clear()
 
     def close(self) -> None:
-        """Stop the reader and drop every cached block (idempotent)."""
-        if self._closed:
-            return
-        self._closed = True
+        """Stop the readers and drop every cached block (idempotent, and
+        safe with reads still in flight: outstanding reads finish and
+        publish, the pool shuts down, THEN the LRU drops — so no reader
+        thread can resurrect an entry after the clear, and the disk
+        counters settle to exactly the reads performed)."""
+        with self._lock:
+            if self._closed:
+                return
+            self._closed = True          # new prefetches decline from here
         self.drain()
         self._reader.shutdown(wait=True)
         with self._lock:
@@ -286,19 +332,56 @@ class SearchSession:
     the session; each result's ``io`` carries the per-batch split.
     """
 
-    def __init__(self, index: BlockIndex, *, cache_blocks: int = 64):
+    def __init__(self, index: BlockIndex, *, cache_blocks: int = 64,
+                 readers: int = 2, pipeline_depth: int = 1,
+                 group_blocks: int = 1):
         if index.host_raw is None:
             raise ValueError("index has no host_raw — open it with "
                              "storage.open_index (or pass a built index to "
                              "core.search instead)")
+        if pipeline_depth < 1 or group_blocks < 1:
+            raise ValueError(
+                f"pipeline_depth and group_blocks must be >= 1, got "
+                f"({pipeline_depth}, {group_blocks})")
+        if cache_blocks < pipeline_depth + group_blocks:
+            # the pipelined walk holds one group of G blocks being
+            # refined plus D speculative reads landing behind it; below
+            # D + G a landing speculation could evict a group member
+            # mid-assembly and force a same-batch re-read, breaking the
+            # at-most-once billing contract
+            raise ValueError(
+                f"cache_blocks must cover the pipeline: >= pipeline_depth "
+                f"+ group_blocks = {pipeline_depth + group_blocks}, got "
+                f"{cache_blocks}")
         self.index = index
-        self.cache = BlockCache(index.host_raw, cache_blocks)
+        self.pipeline_depth = pipeline_depth
+        self.group_blocks = group_blocks
+        self.cache = BlockCache(
+            index.host_raw, cache_blocks, readers=readers,
+            max_inflight=max(2 * readers, pipeline_depth + group_blocks))
         self.batches = 0
         self.cache_hits = 0
         self.blocks_fetched = 0
+        self.last_telemetry: dict = {}
         self._closed = False
         self._coalescer = None         # built lazily on first submit()
         self._coalescer_lock = threading.Lock()
+
+    def _knobs(self, pipeline_depth: int | None,
+               group_blocks: int | None) -> tuple[int, int]:
+        """Per-call override of the session's pipeline knobs (None =
+        session default), validated against the cache capacity."""
+        d = self.pipeline_depth if pipeline_depth is None else pipeline_depth
+        g = self.group_blocks if group_blocks is None else group_blocks
+        if d < 1 or g < 1:
+            raise ValueError(f"pipeline_depth and group_blocks must be "
+                             f">= 1, got ({d}, {g})")
+        if d + g > self.cache.capacity_blocks:
+            raise ValueError(
+                f"pipeline_depth + group_blocks = {d + g} exceeds the "
+                f"session's cache capacity ({self.cache.capacity_blocks} "
+                "blocks); enlarge cache_blocks or shrink the pipeline")
+        return d, g
 
     @property
     def hit_rate(self) -> float:
@@ -322,19 +405,23 @@ class SearchSession:
         self.close()
 
     def _bill(self, tracker: _TouchTracker, *, carry_blocks: int = 0,
-              carry_bytes: int = 0, batches: int = 1) -> IOStats:
+              carry_bytes: int = 0, batches: int = 1,
+              blocks_refined: int = 0) -> IOStats:
         """Close out one accounting unit: its ``IOStats``, rolled into
         the session totals.  ``carry_*`` are disk reads billed into this
         unit from a resumed round 1; ``batches`` is how many logical
         query batches the unit answered (a coalesced drain bills once
-        for N)."""
+        for N); ``blocks_refined`` is how many distinct blocks the
+        unit's walk(s) actually refined — fetched + hit - refined is the
+        unit's speculated-but-pruned overshoot."""
         fetched = tracker.disk_blocks + carry_blocks
         io = IOStats(bytes_read=tracker.disk_bytes + carry_bytes,
                      bytes_scan=(self.index.n_real * self.index.n
                                  * self.index.host_raw.dtype.itemsize),
                      blocks_fetched=fetched,
                      blocks_total=self.index.n_blocks,
-                     cache_hits=tracker.hits)
+                     cache_hits=tracker.hits,
+                     blocks_refined=blocks_refined)
         self.batches += batches
         self.cache_hits += tracker.hits
         self.blocks_fetched += fetched
@@ -350,7 +437,10 @@ class SearchSession:
     def approximate_threshold(self, queries: jax.Array, *, k: int = 1,
                               lb_filter: bool = True,
                               normalize_queries: bool = True,
-                              metric=None) -> PreparedRound:
+                              metric=None,
+                              pipeline_depth: int | None = None,
+                              group_blocks: int | None = None
+                              ) -> PreparedRound:
         """Stage A only -> a resumable ``PreparedRound`` (round 1).
 
         Round 1 of the distributed out-of-core protocol
@@ -367,10 +457,12 @@ class SearchSession:
         its reads are billed to no batch.
         """
         plan = self._plan(k, lb_filter, normalize_queries, metric)
+        d, g = self._knobs(pipeline_depth, group_blocks)
         tracker = _TouchTracker(self.cache)
         state = engine.run_cached_stage_a(
             self.index, queries, plan,
-            fetch=tracker.fetch, speculate=tracker.speculate)
+            fetch=tracker.fetch, speculate=tracker.speculate,
+            pipeline_depth=d, group_blocks=g)
         self.cache.drain()
         return PreparedRound(self, plan, _query_signature(queries), state,
                              carry_blocks=tracker.disk_blocks,
@@ -400,7 +492,9 @@ class SearchSession:
                metric=None,
                initial_threshold: jax.Array | None = None,
                prepared: PreparedRound | None = None,
-               deadline_blocks: int | None = None):
+               deadline_blocks: int | None = None,
+               pipeline_depth: int | None = None,
+               group_blocks: int | None = None):
         """Exact k-NN for one (Q, n) query batch through the cache.
 
         The walk is ``engine.run_cached`` — the §5 block-major schedule
@@ -425,9 +519,19 @@ class SearchSession:
         the exact ``OocSearchResult``.  A deadline cannot be combined
         with ``initial_threshold`` or ``prepared`` — the anytime
         contract is a fresh batch's.
+
+        ``pipeline_depth``/``group_blocks`` override the session's walk
+        pipeline for this batch (None = session default): D speculative
+        reads in flight behind the reader pool, G consecutive surviving
+        blocks batched per dispatch with ONE threshold sync per group.
+        Answers are bit-identical for every setting — the knobs trade
+        speculative I/O for latency, never exactness (see
+        ``engine.run_cached``).  The walk's host-side counters land in
+        ``session.last_telemetry``.
         """
         index = self.index
         plan = self._plan(k, lb_filter, normalize_queries, metric)
+        d, g = self._knobs(pipeline_depth, group_blocks)
         if deadline_blocks is not None:
             if deadline_blocks < 1:
                 raise ValueError(f"deadline_blocks must be >= 1 (or None "
@@ -455,15 +559,19 @@ class SearchSession:
         run_plan = (plan if deadline_blocks is None else
                     dataclasses.replace(plan,
                                         deadline_blocks=deadline_blocks))
+        tel: dict = {}
         front, stats, state = engine.run_cached(
             index, queries, run_plan,
             fetch=tracker.fetch, speculate=tracker.speculate,
             initial_threshold=initial_threshold,
-            prepared=None if prepared is None else prepared.state)
+            prepared=None if prepared is None else prepared.state,
+            pipeline_depth=d, group_blocks=g, telemetry=tel)
+        self.last_telemetry = tel
 
         self.cache.drain()  # settle the last speculation into this bill
         io = self._bill(tracker, carry_blocks=carry_blocks,
-                        carry_bytes=carry_bytes)
+                        carry_bytes=carry_bytes,
+                        blocks_refined=len(state.refined))
         dist = frontier_lib.result_dists(front)
         if deadline_blocks is None:
             return OocSearchResult(dist=dist, idx=front.ids,

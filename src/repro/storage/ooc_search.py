@@ -56,6 +56,9 @@ class IOStats(NamedTuple):
     blocks_fetched: int   # disk block reads (each block at most once/batch)
     blocks_total: int
     cache_hits: int = 0   # surviving blocks served from the device cache
+    blocks_refined: int = 0  # distinct blocks the walk actually refined;
+                             # fetched + hits - refined = speculative
+                             # reads the threshold pruned before use
 
     @property
     def read_fraction(self) -> float:
@@ -81,7 +84,9 @@ class OocSearchResult(NamedTuple):
 
 def ooc_search(index: BlockIndex, queries: jax.Array, *, k: int = 1,
                lb_filter: bool = True, normalize_queries: bool = True,
-               cache_blocks: int = 4, metric=None) -> OocSearchResult:
+               cache_blocks: int = 4, metric=None,
+               pipeline_depth: int = 1, group_blocks: int = 1,
+               readers: int = 2) -> OocSearchResult:
     """Exact k-NN for (Q, n) queries against an index opened out-of-core.
 
     ``index`` must come from ``storage.open_index`` (or ``build_on_disk``):
@@ -91,13 +96,23 @@ def ooc_search(index: BlockIndex, queries: jax.Array, *, k: int = 1,
     ``metric`` picks the plan's metric axis (``engine.DTW(r)`` is
     out-of-core DTW, ``engine.Cosine()`` serves embeddings; default ED).
 
+    ``pipeline_depth``/``group_blocks``/``readers`` tune the walk
+    pipeline (speculative reads in flight / blocks per batched refine /
+    cache reader threads); every setting answers bit-identically, see
+    ``engine.run_cached``.  ``cache_blocks`` is raised automatically to
+    the ``pipeline_depth + group_blocks`` floor the session requires.
+
     One-shot wrapper over ``cache.SearchSession``: the session (and its
     ``cache_blocks``-bounded device cache) lives only for this call, so
     every batch pays cold-disk cost.  Hold a ``SearchSession`` yourself
     to serve repeated traffic warm.
     """
     from repro.storage.cache import SearchSession
-    with SearchSession(index, cache_blocks=cache_blocks) as session:
+    with SearchSession(index,
+                       cache_blocks=max(cache_blocks,
+                                        pipeline_depth + group_blocks),
+                       readers=readers, pipeline_depth=pipeline_depth,
+                       group_blocks=group_blocks) as session:
         return session.search(queries, k=k, lb_filter=lb_filter,
                               normalize_queries=normalize_queries,
                               metric=metric)

@@ -169,3 +169,83 @@ def test_no_inflight_reads_survive_a_batch(dataset, opened):
         sess.search(qs, k=5)
         assert not sess.cache._inflight
         assert len(sess.cache) <= 8
+
+
+# -- reader pool + bounded speculation (the depth-D pipeline's cache) ----
+
+
+def test_multi_reader_drain_lands_every_inflight_read(opened):
+    """drain() must wait out ALL outstanding reads from the pool, not
+    just one: after a burst of prefetches every block is resident and
+    nothing is left in flight."""
+    cache = storage.BlockCache(opened.host_raw, opened.n_blocks,
+                               readers=3, max_inflight=8)
+    try:
+        for b in range(8):
+            cache.prefetch(b)
+        cache.drain()
+        assert not cache._inflight
+        assert len(cache) == 8                 # every read published
+        assert cache.disk_blocks == 8
+    finally:
+        cache.close()
+
+
+def test_prefetch_declines_at_max_inflight_but_get_never_does(opened):
+    """Speculation is bounded: once max_inflight reads are outstanding,
+    further prefetches are silent no-ops — while a demand get always
+    submits (and counts the stall)."""
+    import threading as th
+    gate = th.Event()
+    orig = opened.host_raw.fetch
+    opened.host_raw.fetch = lambda b: (gate.wait(10), orig(b))[1]
+    cache = storage.BlockCache(opened.host_raw, opened.n_blocks,
+                               readers=2, max_inflight=2)
+    try:
+        cache.prefetch(0)
+        cache.prefetch(1)
+        cache.prefetch(2)                      # at the bound: declined
+        assert 2 in cache._inflight or 2 not in cache
+        assert len(cache._inflight) == 2
+        gate.set()
+        cache.drain()
+        assert len(cache) == 2                 # block 2 was never read
+        assert cache.demand_misses == 0
+        got = cache.get(2)                     # demand is never declined
+        assert got.shape == (opened.capacity, opened.n)
+        assert cache.demand_misses == 1
+    finally:
+        del opened.host_raw.fetch
+        cache.close()
+
+
+def test_close_idempotent_under_inflight_reads(opened):
+    """Regression: close() with several reads still in flight (from the
+    multi-thread pool) must wait them out, shut down, and stay correct
+    when called again — no deadlock, no resurrection of LRU entries, no
+    lost disk accounting."""
+    import threading as th
+    gate = th.Event()
+    orig = opened.host_raw.fetch
+    opened.host_raw.fetch = lambda b: (gate.wait(10), orig(b))[1]
+    cache = storage.BlockCache(opened.host_raw, 8, readers=3,
+                               max_inflight=4)
+    try:
+        for b in range(4):
+            cache.prefetch(b)
+        assert len(cache._inflight) == 4       # all four genuinely pending
+        closer = th.Thread(target=cache.close)
+        closer.start()
+        gate.set()                             # release the readers
+        closer.join(timeout=10)
+        assert not closer.is_alive(), "close() deadlocked on in-flight reads"
+    finally:
+        del opened.host_raw.fetch
+    cache.close()                              # idempotent second close
+    assert len(cache) == 0                     # LRU dropped, stays dropped
+    assert not cache._inflight
+    assert cache.disk_blocks == 4              # counters settled first
+    cache.prefetch(5)                          # late speculation: no-op
+    assert not cache._inflight
+    with pytest.raises(ValueError, match="closed"):
+        cache.get(5)                           # demand after close is a bug

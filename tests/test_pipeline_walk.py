@@ -1,0 +1,283 @@
+"""The depth-D / group-G pipelined cached walk (DESIGN.md §5).
+
+The pipeline is pure overlap: every (pipeline_depth, group_blocks)
+setting must answer bit-identically to the serial walk — the knobs
+trade speculative I/O and sync cadence for latency, never results.
+These tests pin that contract across the engine matrix (ED/DTW/Cosine),
+the anytime/deadline path, the coalesced multi-tenant drain, and the
+two-round prepared protocol, plus the accounting invariants (at-most-
+once disk reads under depth-D speculation) and the amortization the
+pipeline exists for (threshold syncs ~= refined blocks / G).
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+import repro.core as core
+from repro import storage
+from repro.core import engine, vector
+from repro.core.ucr import search_scan
+from repro.data import random_walk
+
+N, LEN, CAP, R = 2000, 128, 64, 4
+
+# the ISSUE's exactness grid: (pipeline_depth, group_blocks)
+GRID = [(d, g) for d in (1, 2, 4) for g in (1, 2, 8)]
+
+
+@pytest.fixture(scope="module")
+def dataset():
+    raw = random_walk(N, LEN, seed=41)
+    rng = np.random.default_rng(13)
+    qs = jnp.asarray(raw[rng.choice(N, 8, replace=False)]
+                     + 0.05 * rng.standard_normal((8, LEN))
+                     .astype(np.float32))
+    return raw, qs
+
+
+@pytest.fixture(scope="module")
+def opened(dataset, tmp_path_factory):
+    raw, _ = dataset
+    idx = core.build(jnp.asarray(raw), capacity=CAP)
+    path = tmp_path_factory.mktemp("pipeline") / "rw.dsix"
+    storage.save_index(idx, path)
+    return storage.open_index(path)
+
+
+@pytest.fixture(scope="module")
+def vec_opened(tmp_path_factory):
+    rng = np.random.default_rng(5)
+    embs = jnp.asarray(rng.standard_normal((1024, 64)).astype(np.float32))
+    qs = jnp.asarray(rng.standard_normal((6, 64)).astype(np.float32))
+    vidx = vector.build_vector_index(embs, capacity=64)
+    path = tmp_path_factory.mktemp("pipeline") / "vec.dsix"
+    storage.save_index(vidx, path)
+    return storage.open_index(path), qs
+
+
+def _search(opened, qs, *, d, g, metric=None, k=5, readers=2):
+    with storage.SearchSession(opened, cache_blocks=opened.n_blocks,
+                               readers=readers, pipeline_depth=d,
+                               group_blocks=g) as sess:
+        res = sess.search(qs, k=k, metric=metric)
+        tel = sess.last_telemetry
+    return res, tel
+
+
+def _bitwise(got, want, *, stats=True):
+    assert np.array_equal(np.asarray(got.idx), np.asarray(want.idx))
+    assert np.array_equal(np.asarray(got.dist), np.asarray(want.dist))
+    if stats:
+        for f in ("blocks_visited", "series_refined", "lb_series"):
+            assert np.array_equal(np.asarray(getattr(got.stats, f)),
+                                  np.asarray(getattr(want.stats, f))), f
+
+
+# ---------------------------------------------------------------------------
+# the exactness grid: dist/idx bitwise vs the serial walk, all metrics
+# ---------------------------------------------------------------------------
+
+@pytest.fixture(scope="module")
+def serial_goldens(dataset, opened, vec_opened):
+    raw, qs = dataset
+    vidx, vqs = vec_opened
+    ed, _ = _search(opened, qs, d=1, g=1)
+    dtw, _ = _search(opened, qs, d=1, g=1, metric=engine.DTW(r=R))
+    cos, _ = _search(vidx, vqs, d=1, g=1, metric=engine.Cosine())
+    # anchor the golden itself against the scan oracle
+    want = search_scan(jnp.asarray(raw), qs, k=5)
+    assert np.array_equal(np.asarray(ed.idx), np.asarray(want.idx))
+    return ed, dtw, cos
+
+
+@pytest.mark.parametrize("d,g", GRID)
+def test_exactness_grid_ed(dataset, opened, serial_goldens, d, g):
+    _, qs = dataset
+    got, _ = _search(opened, qs, d=d, g=g)
+    _bitwise(got, serial_goldens[0])
+
+
+@pytest.mark.parametrize("d,g", GRID)
+def test_exactness_grid_dtw(dataset, opened, serial_goldens, d, g):
+    _, qs = dataset
+    got, _ = _search(opened, qs, d=d, g=g, metric=engine.DTW(r=R))
+    _bitwise(got, serial_goldens[1])
+
+
+@pytest.mark.parametrize("d,g", GRID)
+def test_exactness_grid_cosine(vec_opened, serial_goldens, d, g):
+    vidx, vqs = vec_opened
+    got, _ = _search(vidx, vqs, d=d, g=g, metric=engine.Cosine())
+    _bitwise(got, serial_goldens[2])
+
+
+def test_d1_g1_bit_identical_including_stats_and_io(dataset, opened):
+    """(D=1, G=1) is today's walk byte for byte: same dispatch sequence,
+    same fetch/speculate call order, so stats AND the I/O bill match the
+    pre-pipeline session exactly (the session default IS (1, 1))."""
+    _, qs = dataset
+    with storage.SearchSession(opened, cache_blocks=8) as sess:
+        want = sess.search(qs, k=5)
+    got, tel = _search(opened, qs, d=1, g=1)
+    _bitwise(got, want)
+    assert got.io.cache_hits == want.io.cache_hits
+    assert got.io.blocks_refined == want.io.blocks_refined
+    # serial cadence: one dispatch and one sync per walked block
+    assert tel["syncs"] == tel["walk_blocks"] + 1
+    assert tel["dispatches"] == tel["walk_blocks"]
+    assert tel["stage_a_dispatches"] == tel["stage_a_blocks"]
+
+
+# ---------------------------------------------------------------------------
+# anytime/deadline + resume under batching
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("deadline", [1, 3, 7])
+def test_deadline_cut_and_refine_to_exact_parity(dataset, opened, deadline):
+    """deadline_blocks still counts BLOCKS under batching: a partial
+    final group is cut to fit, so the anytime answer, its certificate,
+    and the refine_to_exact continuation are all bit-identical to the
+    serial session's."""
+    _, qs = dataset
+    with storage.SearchSession(opened, cache_blocks=8) as sess:
+        a_ser = sess.search(qs, k=5, deadline_blocks=deadline)
+        e_ser = a_ser.refine_to_exact()
+    with storage.SearchSession(opened, cache_blocks=16, pipeline_depth=2,
+                               group_blocks=4) as sess:
+        a_pip = sess.search(qs, k=5, deadline_blocks=deadline)
+        assert sess.last_telemetry["walk_blocks"] <= deadline
+        e_pip = a_pip.refine_to_exact()
+    _bitwise(a_pip, a_ser)
+    for f in ("upper", "lower", "exact", "blocks_deferred"):
+        assert np.array_equal(getattr(a_pip.certificate, f),
+                              getattr(a_ser.certificate, f)), f
+    _bitwise(e_pip, e_ser)
+
+
+def test_prepared_two_round_protocol_under_batching(dataset, opened):
+    """Round 1 (stage A) -> round 2 (resumed walk), both pipelined,
+    equals the serial protocol bitwise — PreparedRound stays an exact
+    resume point under grouping."""
+    _, qs = dataset
+
+    def protocol(d, g):
+        with storage.SearchSession(opened, cache_blocks=16,
+                                   pipeline_depth=d,
+                                   group_blocks=g) as sess:
+            prep = sess.approximate_threshold(qs, k=3)
+            return sess.search(qs, k=3, prepared=prep,
+                               initial_threshold=jnp.asarray(prep.threshold))
+
+    want = protocol(1, 1)
+    got = protocol(4, 8)
+    _bitwise(got, want)
+
+
+# ---------------------------------------------------------------------------
+# coalesced multi-tenant drain through a pipelined session
+# ---------------------------------------------------------------------------
+
+def test_coalesced_drain_parity_with_pipelined_sessions(dataset, opened):
+    """N tenants through one pipelined coalesced drain answer exactly
+    what each would get from its own serial session — the walk's
+    grouped dispatches and stale-threshold picks never leak into
+    results.  (Work counters are NOT compared: the coalesced walk's
+    fetch order is threshold-dynamic, so grouping can change which
+    interleave produced the same exact answer — unlike ``run_cached``'s
+    static schedule, where stats stay bitwise too.)"""
+    _, qs = dataset
+    batches = [(qs[0:3], dict(k=5)),
+               (qs[3:6], dict(k=3, metric=engine.DTW(r=R))),
+               (qs[6:8], dict(k=2))]
+    want = []
+    for q, kw in batches:
+        with storage.SearchSession(opened, cache_blocks=64) as sess:
+            want.append(sess.search(q, **kw))
+    with storage.SearchSession(opened, cache_blocks=64) as sess:
+        serial = [t.result() for t in
+                  [sess.submit(q, **kw) for q, kw in batches]]
+    with storage.SearchSession(opened, cache_blocks=64, readers=3,
+                               pipeline_depth=2, group_blocks=4) as sess:
+        got = [t.result() for t in
+               [sess.submit(q, **kw) for q, kw in batches]]
+    for g, s, w in zip(got, serial, want):
+        _bitwise(g, w, stats=False)        # vs each tenant alone
+        _bitwise(g, s, stats=False)        # vs the serial drain
+
+
+# ---------------------------------------------------------------------------
+# accounting under depth-D speculation
+# ---------------------------------------------------------------------------
+
+def test_at_most_once_billing_with_depth_speculation(dataset, opened):
+    """Depth-D speculation may race group fetches through the reader
+    pool, but the id-keyed cache still reads any block from disk at
+    most once per batch, and the bill counts exactly those reads."""
+    _, qs = dataset
+    calls: list[int] = []
+    orig = opened.host_raw.fetch
+    opened.host_raw.fetch = lambda b: (calls.append(int(b)), orig(b))[1]
+    try:
+        with storage.SearchSession(opened, cache_blocks=opened.n_blocks,
+                                   readers=3, pipeline_depth=4,
+                                   group_blocks=2) as sess:
+            res = sess.search(qs, k=5)
+    finally:
+        del opened.host_raw.fetch          # restore the class method
+    counts = np.bincount(calls, minlength=opened.n_blocks)
+    assert counts.max() <= 1, f"block(s) read twice in one batch: " \
+        f"{np.nonzero(counts > 1)[0].tolist()}"
+    assert res.io.blocks_fetched == len(calls)
+    assert res.io.bytes_read == len(calls) * opened.host_raw.block_nbytes
+    # the overshoot split is consistent: every refined block was touched
+    assert res.io.blocks_refined <= res.io.blocks_fetched + res.io.cache_hits
+
+
+# ---------------------------------------------------------------------------
+# the amortization itself
+# ---------------------------------------------------------------------------
+
+def test_group_batching_amortizes_threshold_syncs(dataset, opened):
+    """The acceptance criterion: G-block groups pay ~refined/G + 1
+    threshold syncs instead of one per block, without changing what is
+    refined."""
+    _, qs = dataset
+    res1, tel1 = _search(opened, qs, d=1, g=1)
+    res8, tel8 = _search(opened, qs, d=1, g=8)
+    _bitwise(res8, res1)
+    assert tel1["syncs"] == tel1["walk_blocks"] + 1
+    # every full group refines 8 blocks in one sync; only threshold
+    # tightening mid-walk can shrink a group below G
+    assert tel8["syncs"] <= max(-(-tel8["walk_blocks"] // 8) + 2,
+                                tel8["walk_blocks"] // 4 + 1)
+    assert tel8["syncs"] < tel1["syncs"]
+    assert tel8["dispatches"] == tel8["syncs"] - 1
+
+
+# ---------------------------------------------------------------------------
+# knob validation
+# ---------------------------------------------------------------------------
+
+def test_knob_validation(dataset, opened):
+    _, qs = dataset
+    with pytest.raises(ValueError, match=">= 1"):
+        storage.SearchSession(opened, pipeline_depth=0)
+    with pytest.raises(ValueError, match=">= 1"):
+        storage.SearchSession(opened, group_blocks=0)
+    with pytest.raises(ValueError, match="cover the pipeline"):
+        storage.SearchSession(opened, cache_blocks=4, pipeline_depth=2,
+                              group_blocks=4)
+    with pytest.raises(ValueError, match="readers"):
+        storage.BlockCache(opened.host_raw, 4, readers=0)
+    with pytest.raises(ValueError, match="max_inflight"):
+        storage.BlockCache(opened.host_raw, 4, max_inflight=0)
+    with storage.SearchSession(opened, cache_blocks=4) as sess:
+        with pytest.raises(ValueError, match=">= 1"):
+            sess.search(qs, k=1, pipeline_depth=0)
+        with pytest.raises(ValueError, match="cache capacity"):
+            sess.search(qs, k=1, pipeline_depth=2, group_blocks=8)
+    with pytest.raises(ValueError, match=">= 1"):
+        engine.run_cached(opened, qs, engine.QueryPlan(
+            metric=engine.ED(), schedule="block_major", k=1),
+            fetch=lambda b: None, group_blocks=0)
