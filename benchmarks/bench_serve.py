@@ -45,6 +45,7 @@ import numpy as np
 
 from benchmarks.common import BenchRunner, csv_ints, print_table, write_rows
 from repro import storage
+from repro.analysis import sanitize
 from repro.data import make_dataset
 
 
@@ -268,6 +269,9 @@ def run(n: int = 50_000, length: int = 256, n_queries: int = 8,
                             "walk_blocks", "syncs_per_block",
                             "speculated_pruned", "demand_miss_frac"])
     rows += conc_rows + pipe_rows
+    # meta row first, so readers can tell the numbers came from
+    # uninstrumented locks (run.py refuses to run when sanitizing)
+    rows.insert(0, {"mode": "meta", "sanitize": sanitize.enabled()})
     write_rows("serve", rows)
     return rows
 

@@ -24,6 +24,12 @@ def main(argv=None) -> int:
                     help="skip writing root-level BENCH_*.json copies")
     args = ap.parse_args(argv)
 
+    from repro.analysis import sanitize
+    if sanitize.enabled():
+        raise SystemExit(
+            "benchmarks refuse to run with REPRO_SANITIZE=1: instrumented "
+            "locks would be measured instead of the production ones")
+
     from benchmarks import (bench_build, bench_capacity, bench_dtw,
                             bench_engine, bench_kernels, bench_ooc,
                             bench_query, bench_scaling, bench_serve)

@@ -1,0 +1,28 @@
+"""repro.analysis — repo-invariant static checkers + runtime sanitizer.
+
+Three AST-based checkers (stdlib ``ast`` only, no third-party deps)
+machine-check invariants that used to live as prose in DESIGN.md:
+
+- :mod:`repro.analysis.locks` — lock-discipline: every access to a
+  field annotated ``# guarded by: <lock>`` happens under
+  ``with self.<lock>:`` or inside a ``# caller holds <lock>`` helper
+  whose call sites are themselves verified.
+- :mod:`repro.analysis.syncs` — host-sync tracer: implicit
+  device->host transfers (``float()``, ``np.asarray``, ``.item()``,
+  ...) inside jitted functions and ``lax`` loop bodies must carry an
+  explicit ``# sync`` annotation.
+- :mod:`repro.analysis.contracts` — kernel/dispatch contracts: every
+  Pallas kernel entry has a same-signature oracle in ``kernels/ref.py``
+  and every jitted function that reaches the ``ops.*`` mode dispatch is
+  registered via ``register_dispatch_cache``.
+
+Run the suite with ``python -m repro.analysis src/`` (see
+:mod:`repro.analysis.cli`).  ``REPRO_SANITIZE=1`` additionally arms the
+runtime lock assertions in :mod:`repro.analysis.sanitize`.
+"""
+from __future__ import annotations
+
+from .common import Finding, Project
+from .cli import run_analysis
+
+__all__ = ["Finding", "Project", "run_analysis"]

@@ -1,0 +1,248 @@
+"""Kernel/dispatch contract checkers.
+
+**Kernel-oracle contract** (KERN00x): every Pallas kernel module under
+``repro/kernels/`` (everything except ``__init__``/``ops``/``ref``)
+must pair each public entry — a top-level jit-decorated function —
+with a same-signature oracle in ``kernels/ref.py``.  The oracle is
+``<entry>_ref`` by default; a trailing ``# oracle: <name>`` comment on
+the ``def`` line overrides.  Signatures match when the parameter-name
+sets are equal after stripping tuning-only parameters (``interpret``
+and anything starting with ``tile_``).
+
+**Dispatch-registry contract** (DISP001): every module-level jitted
+function whose body (transitively, over an AST-derived call graph)
+reaches one of the ``ops.*`` mode-dispatch wrappers — the top-level
+functions in ``kernels/ops.py`` that consult ``_use_pallas()`` — must
+be registered via ``register_dispatch_cache`` so ``ops.set_mode``
+can clear its trace cache.  The call graph is conservative: a
+``obj.m(...)`` call edges to *every* repo class method named ``m``
+(minus a small builtin-collision denylist), so reachability
+over-approximates — exactly what you want for a cache-invalidation
+invariant.
+"""
+from __future__ import annotations
+
+import ast
+
+from .common import (Finding, Project, SourceFile, decorator_is_jit,
+                     top_level_functions)
+
+__all__ = ["check", "check_oracles", "check_dispatch"]
+
+_TUNING_PARAMS = {"interpret"}
+
+# obj.m() edges skip method names that collide with ubiquitous
+# builtin/stdlib attributes; none of the repo's dispatch-reaching
+# methods (metric.block_lb / distances / panel_topk / ...) are here.
+_COMMON_ATTRS = {
+    "append", "extend", "items", "keys", "values", "get", "pop",
+    "update", "setdefault", "copy", "sort", "split", "join", "format",
+    "add", "discard", "remove", "index", "count", "startswith",
+    "endswith", "astype", "reshape", "result", "submit", "put",
+    "acquire", "release", "wait", "set", "clear", "close", "flush",
+    "write", "read",
+}
+
+
+def _params(fn: ast.FunctionDef) -> set[str]:
+    a = fn.args
+    names = [p.arg for p in a.posonlyargs + a.args + a.kwonlyargs]
+    return {n for n in names
+            if n not in _TUNING_PARAMS and not n.startswith("tile_")}
+
+
+def check_oracles(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    kernel_files = [
+        f for f in project.files
+        if (p := f.module.split("."))[-1] not in ("ops", "ref")
+        and len(p) >= 2 and p[-2] == "kernels"]
+    if not kernel_files:
+        return findings
+    ref = project.find_module("kernels.ref")
+    ref_fns = {fn.name: fn for fn in
+               top_level_functions(ref.tree)} if ref else {}
+
+    for sf in kernel_files:
+        for fn in top_level_functions(sf.tree):
+            if fn.name.startswith("_"):
+                continue
+            if not any(decorator_is_jit(d) for d in fn.decorator_list):
+                continue
+            oracle = sf.oracle_override(fn.lineno) or f"{fn.name}_ref"
+            if ref is None:
+                findings.append(Finding(
+                    sf.path, fn.lineno, "KERN002",
+                    f"kernel entry {fn.name} needs an oracle but "
+                    f"kernels/ref.py is not in the analysis set"))
+                continue
+            target = ref_fns.get(oracle)
+            if target is None:
+                findings.append(Finding(
+                    sf.path, fn.lineno, "KERN001",
+                    f"kernel entry {fn.name} has no oracle "
+                    f"{oracle}() in kernels/ref.py (add one, or map "
+                    f"it with '# oracle: <name>')"))
+            elif _params(target) != _params(fn):
+                findings.append(Finding(
+                    sf.path, fn.lineno, "KERN003",
+                    f"kernel entry {fn.name}{sorted(_params(fn))} and "
+                    f"oracle {oracle}{sorted(_params(target))} "
+                    f"disagree on parameter names"))
+    return findings
+
+
+# ---------------------------------------------------------------------
+# dispatch-registry contract
+
+
+def _import_map(tree: ast.Module) -> dict[str, str]:
+    """alias -> dotted target (module, or module.attr for from-imports)."""
+    out: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                out[a.asname or a.name.split(".")[0]] = a.name
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                out[a.asname or a.name] = f"{node.module}.{a.name}"
+    return out
+
+
+class _Graph:
+    """Call graph over (module, qualname) nodes."""
+
+    def __init__(self):
+        self.edges: dict[tuple[str, str], set[tuple[str, str]]] = {}
+        self.methods_by_name: dict[str, list[tuple[str, str]]] = {}
+
+    def edge(self, src, dst):
+        self.edges.setdefault(src, set()).add(dst)
+
+    def reachable(self, start, targets: set) -> bool:
+        seen, todo = {start}, [start]
+        while todo:
+            cur = todo.pop()
+            if cur in targets:
+                return True
+            for nxt in self.edges.get(cur, ()):
+                if nxt not in seen:
+                    seen.add(nxt)
+                    todo.append(nxt)
+        return False
+
+
+def _resolve_module(project: Project, dotted: str) -> str | None:
+    """Map an imported dotted name to a project module name."""
+    sf = project.find_module(dotted)
+    return sf.module if sf else None
+
+
+def _collect_calls(project: Project, graph: _Graph, sf: SourceFile,
+                   src: tuple[str, str], fn: ast.AST,
+                   imports: dict[str, str],
+                   local_toplevel: set[str]) -> None:
+    for node in ast.walk(fn):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        if isinstance(f, ast.Name):
+            if f.id in local_toplevel:
+                graph.edge(src, (sf.module, f.id))
+            elif f.id in imports:
+                dotted = imports[f.id]
+                mod, _, name = dotted.rpartition(".")
+                m = _resolve_module(project, mod)
+                if m:
+                    graph.edge(src, (m, name))
+        elif isinstance(f, ast.Attribute):
+            if isinstance(f.value, ast.Name) and \
+                    f.value.id in imports:
+                m = _resolve_module(project, imports[f.value.id])
+                if m:
+                    graph.edge(src, (m, f.attr))
+                    continue
+            # obj.m(...) — conservative: edge to every repo method m
+            if f.attr not in _COMMON_ATTRS:
+                for key in graph.methods_by_name.get(f.attr, ()):
+                    graph.edge(src, key)
+
+
+def check_dispatch(project: Project) -> list[Finding]:
+    ops = project.find_module("kernels.ops")
+    if ops is None:
+        return []
+
+    dispatch_targets = set()
+    for fn in top_level_functions(ops.tree):
+        for node in ast.walk(fn):
+            if isinstance(node, ast.Call) and (
+                    (isinstance(node.func, ast.Name)
+                     and node.func.id == "_use_pallas")
+                    or (isinstance(node.func, ast.Attribute)
+                        and node.func.attr == "_use_pallas")):
+                dispatch_targets.add((ops.module, fn.name))
+                break
+    if not dispatch_targets:
+        return []
+
+    graph = _Graph()
+    # pass 1: index every class method so obj.m() edges can resolve
+    for sf in project.files:
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.ClassDef):
+                for m in node.body:
+                    if isinstance(m, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                        graph.methods_by_name.setdefault(
+                            m.name, []).append(
+                            (sf.module, f"{node.name}.{m.name}"))
+
+    jitted: list[tuple[SourceFile, ast.FunctionDef]] = []
+    registered: set[tuple[str, str]] = set()
+
+    # pass 2: edges, jitted set, registrations
+    for sf in project.files:
+        imports = _import_map(sf.tree)
+        local = {fn.name for fn in top_level_functions(sf.tree)}
+        for fn in top_level_functions(sf.tree):
+            _collect_calls(project, graph, sf, (sf.module, fn.name),
+                           fn, imports, local)
+            if any(decorator_is_jit(d) for d in fn.decorator_list):
+                jitted.append((sf, fn))
+        for node in ast.walk(sf.tree):
+            if isinstance(node, ast.ClassDef):
+                for m in node.body:
+                    if isinstance(m, (ast.FunctionDef,
+                                      ast.AsyncFunctionDef)):
+                        _collect_calls(
+                            project, graph, sf,
+                            (sf.module, f"{node.name}.{m.name}"),
+                            m, imports, local)
+            elif isinstance(node, ast.Call):
+                f = node.func
+                is_reg = (isinstance(f, ast.Name)
+                          and f.id == "register_dispatch_cache") or \
+                         (isinstance(f, ast.Attribute)
+                          and f.attr == "register_dispatch_cache")
+                if is_reg and node.args and \
+                        isinstance(node.args[0], ast.Name):
+                    registered.add((sf.module, node.args[0].id))
+
+    findings = []
+    for sf, fn in jitted:
+        key = (sf.module, fn.name)
+        if key in registered:
+            continue
+        if graph.reachable(key, dispatch_targets):
+            findings.append(Finding(
+                sf.path, fn.lineno, "DISP001",
+                f"jitted function {fn.name} reaches the ops.* kernel "
+                f"dispatch but is not registered via "
+                f"register_dispatch_cache — ops.set_mode cannot "
+                f"clear its trace cache"))
+    return findings
+
+
+def check(project: Project) -> list[Finding]:
+    return check_oracles(project) + check_dispatch(project)

@@ -1,0 +1,161 @@
+"""Host-sync tracer.
+
+Two rules:
+
+1. **Traced scopes** (SYNC001): inside a jit-decorated function, a
+   function passed to ``lax.scan`` / ``lax.fori_loop`` /
+   ``lax.while_loop`` / ``lax.cond`` / ``lax.switch`` / ``lax.map``,
+   or anything lexically nested in one, any implicit device->host
+   conversion is flagged: ``float()`` / ``int()`` / ``bool()`` on a
+   non-literal, ``np.asarray`` / ``np.array`` (plain-numpy aliases
+   only — ``jnp`` is fine), ``jax.device_get``, ``.item()``,
+   ``.tolist()``.  These either sync or fail at trace time; both are
+   bugs the annotation must own.
+2. **Sync-traced modules** (SYNC002): a module carrying a
+   ``# repro: sync-trace`` directive opts its *entire* body into
+   tracing of the explicit conversion APIs (``np.asarray`` /
+   ``np.array`` / ``jax.device_get`` / ``.item()`` / ``.tolist()``;
+   bare ``float()``/``int()`` are too common on host scalars to flag
+   module-wide).  This is how ``core/engine.py`` pins its
+   one-sync-per-group claim.
+
+Suppressions: a trailing comment containing the word ``sync``
+sanctions a deliberate transfer; a trailing ``# host`` comment asserts
+the operand is plain host data (python ints/lists), so no transfer
+occurs.
+"""
+from __future__ import annotations
+
+import ast
+
+from .common import Finding, Project, SourceFile, decorator_is_jit
+
+__all__ = ["check"]
+
+_LAX_BODY_TAKERS = {"scan", "fori_loop", "while_loop", "cond",
+                    "switch", "map"}
+_NUMPY_MODULES = {"numpy"}
+_SCALARIZERS = {"float", "int", "bool"}
+_METHOD_SYNCS = {"item", "tolist"}
+
+
+def _import_aliases(tree: ast.Module) -> dict[str, str]:
+    """local alias -> imported module name (``np`` -> ``numpy``)."""
+    aliases: dict[str, str] = {}
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Import):
+            for a in node.names:
+                aliases[a.asname or a.name.split(".")[0]] = a.name
+        elif isinstance(node, ast.ImportFrom) and node.module:
+            for a in node.names:
+                aliases[a.asname or a.name] = \
+                    f"{node.module}.{a.name}"
+    return aliases
+
+
+def _traced_roots(sf: SourceFile) -> list[ast.AST]:
+    """Function nodes whose bodies run under a jax trace: jit-decorated
+    defs, defs passed (by name or inline lambda) to lax loop/branch
+    combinators, and ``name = jax.jit(fn)`` targets."""
+    defs_by_name: dict[str, list[ast.AST]] = {}
+    for node in ast.walk(sf.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            defs_by_name.setdefault(node.name, []).append(node)
+
+    roots: list[ast.AST] = []
+    for node in ast.walk(sf.tree):
+        if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+            if any(decorator_is_jit(d) for d in node.decorator_list):
+                roots.append(node)
+        elif isinstance(node, ast.Call):
+            fn = node.func
+            is_lax = (isinstance(fn, ast.Attribute)
+                      and fn.attr in _LAX_BODY_TAKERS
+                      and isinstance(fn.value, (ast.Name, ast.Attribute))
+                      and (fn.value.id if isinstance(fn.value, ast.Name)
+                           else fn.value.attr) in ("lax", "jax"))
+            is_jit_call = (isinstance(fn, ast.Attribute)
+                           and fn.attr == "jit") or \
+                          (isinstance(fn, ast.Name) and fn.id == "jit")
+            if not (is_lax or is_jit_call):
+                continue
+            for arg in list(node.args) + [kw.value for kw in
+                                          node.keywords]:
+                if isinstance(arg, ast.Lambda):
+                    roots.append(arg)
+                elif isinstance(arg, ast.Name):
+                    roots.extend(defs_by_name.get(arg.id, []))
+    return roots
+
+
+class _SyncScan(ast.NodeVisitor):
+    """Collects conversion-call sites; caller filters by scope/rule."""
+
+    def __init__(self, sf: SourceFile, aliases: dict[str, str],
+                 explicit_only: bool):
+        self.sf = sf
+        self.aliases = aliases
+        self.explicit_only = explicit_only
+        self.hits: list[tuple[int, str]] = []
+
+    def visit_Call(self, node: ast.Call):
+        fn = node.func
+        line = node.lineno
+        if isinstance(fn, ast.Name) and fn.id in _SCALARIZERS \
+                and not self.explicit_only:
+            if node.args and not isinstance(node.args[0], ast.Constant):
+                self.hits.append(
+                    (line, f"{fn.id}() on a traced value forces a "
+                           f"device->host sync"))
+        elif isinstance(fn, ast.Attribute):
+            owner = fn.value
+            owner_mod = None
+            if isinstance(owner, ast.Name):
+                owner_mod = self.aliases.get(owner.id)
+            if fn.attr in ("asarray", "array") and \
+                    owner_mod in _NUMPY_MODULES:
+                self.hits.append(
+                    (line, f"{owner.id}.{fn.attr}(...) pulls the "
+                           f"operand to host"))
+            elif fn.attr == "device_get" and owner_mod == "jax":
+                self.hits.append((line, "jax.device_get(...) is an "
+                                        "explicit device->host sync"))
+            elif fn.attr in _METHOD_SYNCS:
+                self.hits.append(
+                    (line, f".{fn.attr}() on an array syncs it to "
+                           f"host"))
+        self.generic_visit(node)
+
+
+def check(project: Project) -> list[Finding]:
+    findings: list[Finding] = []
+    seen: set[tuple[str, int]] = set()
+
+    def emit(sf: SourceFile, code: str, hits: list[tuple[int, str]],
+             where: str):
+        for line, msg in hits:
+            if (sf.path, line) in seen:
+                continue
+            if sf.sync_ok(line) or sf.host_ok(line):
+                continue
+            seen.add((sf.path, line))
+            findings.append(Finding(
+                sf.path, line, code,
+                f"{msg} {where}; annotate with '# sync' if deliberate "
+                f"or '# host' if the operand is host data"))
+
+    for sf in project.files:
+        aliases = _import_aliases(sf.tree)
+        for root in _traced_roots(sf):
+            scan = _SyncScan(sf, aliases, explicit_only=False)
+            body = root.body  # Lambda bodies are a bare expression
+            for stmt in (body if isinstance(body, list) else [body]):
+                scan.visit(stmt)
+            emit(sf, "SYNC001", scan.hits,
+                 "inside a jit/lax-traced scope")
+        if sf.sync_trace_module():
+            scan = _SyncScan(sf, aliases, explicit_only=True)
+            scan.visit(sf.tree)
+            emit(sf, "SYNC002", scan.hits,
+                 "in a '# repro: sync-trace' module")
+    return findings

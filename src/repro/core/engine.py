@@ -42,6 +42,9 @@ frontier's k-th-best distance, and every metric's bounds satisfy
 ``block_lb <= series_lb <= distance``, so no true k-NN member is ever
 dismissed — for any metric, schedule, backend, or k.
 """
+# repro: sync-trace — every device->host transfer in this module must
+# carry a '# sync' (deliberate) or '# host' (host-data, no transfer)
+# annotation; `python -m repro.analysis` enforces it (DESIGN.md §10)
 from __future__ import annotations
 
 import dataclasses
@@ -877,7 +880,7 @@ class _GroupDispatcher:
                 lo, hi, self.block_lb[:, b], self.thr0,
                 n=index.n, w=index.w)
         blocks = jnp.stack([self.fetch(b) for b in gids])        # (G, C, n)
-        gi = jnp.asarray(np.asarray(gids, dtype=np.int32))
+        gi = jnp.asarray(np.asarray(gids, dtype=np.int32))       # host ids
         lo_g = index.slo[gi] if needs else None                  # (G, w, C)
         hi_g = index.shi[gi] if needs else None
         return _cached_refine_group(
@@ -985,7 +988,8 @@ def run_cached(index: BlockIndex, queries: jax.Array, plan: QueryPlan, *,
     n_blocks = index.n_blocks
     if prepared is None:
         prep = cached_setup(index, queries, plan)
-        prep = _cached_stage_a(index, plan, prep, np.asarray(prep.block_lb),
+        prep = _cached_stage_a(index, plan, prep,
+                               np.asarray(prep.block_lb),  # sync: 1/batch
                                fetch, speculate, initial_threshold,
                                pipeline_depth=pipeline_depth,
                                group_blocks=group_blocks,
@@ -996,7 +1000,10 @@ def run_cached(index: BlockIndex, queries: jax.Array, plan: QueryPlan, *,
     qs, front, block_lb, stats = (prep.qs, prep.front, prep.block_lb,
                                   prep.stats)
     done = prep.refined
-    block_lb_h = np.asarray(block_lb)
+    # one sync per batch: the host copy drives block ordering and the
+    # suffix-min stop table; the walk itself then syncs once per GROUP
+    # (the '# sync' sites below), which is the PR-9 amortization claim
+    block_lb_h = np.asarray(block_lb)                            # sync
     dispatch = _GroupDispatcher(index, plan, block_lb, fetch,
                                 initial_threshold)
     budget = plan.deadline_blocks        # refines left; None = unbounded
@@ -1073,7 +1080,8 @@ def run_cached_stage_a(index: BlockIndex, queries: jax.Array,
     same way they pipeline the walk (see ``run_cached``)."""
     _check_pipeline_knobs(pipeline_depth, group_blocks)
     prep = cached_setup(index, queries, plan)
-    return _cached_stage_a(index, plan, prep, np.asarray(prep.block_lb),
+    return _cached_stage_a(index, plan, prep,
+                           np.asarray(prep.block_lb),  # sync: 1/round
                            fetch, speculate, None,
                            pipeline_depth=pipeline_depth,
                            group_blocks=group_blocks)

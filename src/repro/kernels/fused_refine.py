@@ -117,7 +117,7 @@ def fused_panel_topk(q: jax.Array, q_paa: jax.Array, block: jax.Array,
 
     grid = (q.shape[0] // tq, block.shape[0] // tc)
     out_d, out_i, out_n = pl.pallas_call(
-        functools.partial(_kernel, k=k, scale=float(n) / float(w)),
+        functools.partial(_kernel, k=k, scale=float(n) / float(w)),  # host
         grid=grid,
         in_specs=[
             pl.BlockSpec((tq, n), lambda i, j: (i, 0)),     # q

@@ -63,7 +63,7 @@ def lb_scan(q_paa: jax.Array, lo: jax.Array, hi: jax.Array, *, n: int,
 
     grid = (q_paa.shape[0] // tq, lo.shape[1] // tn)
     out = pl.pallas_call(
-        functools.partial(_kernel, scale=float(n) / float(w)),
+        functools.partial(_kernel, scale=float(n) / float(w)),  # host
         grid=grid,
         in_specs=[
             pl.BlockSpec((tq, w), lambda i, j: (i, 0)),

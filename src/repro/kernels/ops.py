@@ -50,7 +50,6 @@ def clear_dispatch_caches() -> None:
 
 
 import jax
-import jax.numpy as jnp
 
 from repro.kernels import ref
 from repro.kernels.batch_l2 import batch_l2 as _batch_l2_kernel
@@ -124,9 +123,8 @@ def summarize(x: jax.Array, *, w: int, card: int, normalize: bool = True
     if use:
         return _summ_kernel(x, w=w, card=card, normalize=normalize,
                             interpret=interp)
-    from repro.core import isax
-    xx = isax.znorm(x) if normalize else x
-    return ref.paa_sax_ref(xx, w, card)
+    return ref.isax_summarize_ref(x, w=w, card=card,
+                                  normalize=normalize)
 
 
 def lb_scan_planar(q_paa: jax.Array, lo: jax.Array, hi: jax.Array, *, n: int
@@ -135,10 +133,7 @@ def lb_scan_planar(q_paa: jax.Array, lo: jax.Array, hi: jax.Array, *, n: int
     use, interp = _use_pallas()
     if use:
         return _lb_kernel(q_paa, lo, hi, n=n, interpret=interp)
-    w = q_paa.shape[1]
-    qe = q_paa[:, :, None]
-    d = jnp.maximum(jnp.maximum(lo[None] - qe, qe - hi[None]), 0.0)
-    return (float(n) / float(w)) * jnp.sum(d * d, axis=1)
+    return ref.lb_scan_ref(q_paa, lo, hi, n=n)
 
 
 def batch_l2(q: jax.Array, x: jax.Array) -> jax.Array:
@@ -187,6 +182,4 @@ def dtw_panel(q: jax.Array, x: jax.Array, *, r: int) -> jax.Array:
     use, interp = _use_pallas()
     if use:
         return _dtw_band_kernel(q, x, r=r, interpret=interp)
-    if x.ndim == 2:
-        return ref.dtw_band_ref(q[:, None, :], x[None, :, :], r)
-    return ref.dtw_band_ref(q[:, None, :], x, r)
+    return ref.dtw_band_panel_ref(q, x, r=r)

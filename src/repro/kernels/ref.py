@@ -21,6 +21,14 @@ def paa_sax_ref(x: jax.Array, w: int, card: int) -> tuple[jax.Array, jax.Array]:
     return p, isax.sax_from_paa(p, card)
 
 
+def isax_summarize_ref(x: jax.Array, *, w: int, card: int,
+                       normalize: bool = True
+                       ) -> tuple[jax.Array, jax.Array]:
+    """Oracle for kernels/isax_summarize.py: optional z-norm + PAA/SAX."""
+    xx = isax.znorm(x) if normalize else x
+    return paa_sax_ref(xx, w, card)
+
+
 def lb_block_ref(q_paa: jax.Array, env: jax.Array, n: int) -> jax.Array:
     """Block-envelope lower bounds. q_paa (Q, w), env (B, w, 2) -> (Q, B) f32 (squared)."""
     return isax.mindist_paa_bounds_sq(q_paa[:, None, :], env[None], n)
@@ -29,6 +37,19 @@ def lb_block_ref(q_paa: jax.Array, env: jax.Array, n: int) -> jax.Array:
 def lb_series_ref(q_paa: jax.Array, bounds: jax.Array, n: int) -> jax.Array:
     """Per-series lower bounds. q_paa (Q, w), bounds (N, w, 2) -> (Q, N) f32 (squared)."""
     return isax.mindist_paa_bounds_sq(q_paa[:, None, :], bounds[None], n)
+
+
+def lb_scan_ref(q_paa: jax.Array, lo: jax.Array, hi: jax.Array, *,
+                n: int) -> jax.Array:
+    """Oracle for kernels/lb_scan.py: planar MINDIST lower bounds.
+
+    q_paa (Q, w); lo/hi (w, N) -> (Q, N) squared bounds with the n/w
+    scale factor (``n`` is the raw series length).
+    """
+    w = q_paa.shape[1]
+    qe = q_paa[:, :, None]
+    d = jnp.maximum(jnp.maximum(lo[None] - qe, qe - hi[None]), 0.0)
+    return (float(n) / float(w)) * jnp.sum(d * d, axis=1)
 
 
 def batch_l2_ref(q: jax.Array, x: jax.Array) -> jax.Array:
@@ -152,6 +173,16 @@ def dtw_band_ref(a: jax.Array, b: jax.Array, r: int) -> jax.Array:
     (last, second), _ = jax.lax.scan(body, (prev, prev2),
                                      jnp.arange(2 * n - 1))
     return last[..., n - 1]   # cell (n-1, n-1) lives on diag 2n-2 at i=n-1
+
+
+def dtw_band_panel_ref(q: jax.Array, x: jax.Array, *, r: int
+                       ) -> jax.Array:
+    """Oracle for kernels/dtw_band.py's panel entry: q (Q, n) against
+    a shared panel x (C, n) -> (Q, C), or gathered x (Q, M, n) ->
+    (Q, M), by broadcasting into dtw_band_ref."""
+    if x.ndim == 2:
+        return dtw_band_ref(q[:, None, :], x[None, :, :], r)
+    return dtw_band_ref(q[:, None, :], x, r)
 
 
 def ssm_scan_ref(xc, dt, bm, cm, a_log):

@@ -29,6 +29,7 @@ import threading
 import jax
 import jax.numpy as jnp
 
+from repro.analysis import sanitize
 from repro.core import engine
 from repro.core import frontier as frontier_lib
 from repro.core.frontier import Frontier, SearchStats
@@ -94,6 +95,7 @@ def _slice_state(state: engine.PreparedSearch, sl: slice
         refined=state.refined)
 
 
+@sanitize.guarded
 class AdmissionCoalescer:
     """Pending-submission queue + the coalesced drain, bound to one
     ``storage.SearchSession`` (sessions construct one lazily on first
@@ -101,9 +103,10 @@ class AdmissionCoalescer:
 
     def __init__(self, session):
         self.session = session
-        self._pending: list[Ticket] = []
-        self._admit_lock = threading.Lock()
-        self._drain_lock = threading.Lock()
+        self._pending: list[Ticket] = []      # guarded by: _admit_lock
+        self._admit_lock = sanitize.create_lock()
+        # serializes drains; _run only ever executes under it
+        self._drain_lock = sanitize.create_lock()
 
     def submit(self, queries: jax.Array, plan: engine.QueryPlan) -> Ticket:
         if plan.deadline_blocks is not None:
@@ -145,6 +148,7 @@ class AdmissionCoalescer:
     # -- the drain body --------------------------------------------------
 
     def _run(self, batch: list[Ticket], deadline_blocks: int | None) -> None:
+        # caller holds _drain_lock
         from repro.storage.cache import (PreparedRound, _TouchTracker,
                                          _query_signature)
         session = self.session

@@ -60,12 +60,14 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitize
 from repro.core import engine
 from repro.core import frontier as frontier_lib
 from repro.core.index import BlockIndex, HostRawBlocks
 from repro.storage.ooc_search import IOStats, OocSearchResult
 
 
+@sanitize.guarded
 class BlockCache:
     """Capacity-bounded LRU of device-resident raw blocks, keyed by block id.
 
@@ -114,15 +116,16 @@ class BlockCache:
         self.capacity_blocks = capacity_blocks
         self.readers = readers
         self.max_inflight = max_inflight
-        self._closed = False
-        self._lru: OrderedDict[int, jax.Array] = OrderedDict()
-        self._inflight: dict[int, Future] = {}
-        self._lock = threading.Lock()
+        self._closed = False                       # guarded by: _lock
+        self._lru: OrderedDict[int, jax.Array] = (  # guarded by: _lock
+            OrderedDict())
+        self._inflight: dict[int, Future] = {}     # guarded by: _lock
+        self._lock = sanitize.create_lock()
         self._reader = ThreadPoolExecutor(readers,
                                           thread_name_prefix="block-read")
-        self.disk_blocks = 0
-        self.disk_bytes = 0
-        self.demand_misses = 0
+        self.disk_blocks = 0                       # guarded by: _lock
+        self.disk_bytes = 0                        # guarded by: _lock
+        self.demand_misses = 0                     # guarded by: _lock
 
     def __len__(self) -> int:
         with self._lock:
@@ -318,6 +321,7 @@ class _TouchTracker:
         return self.cache.disk_bytes - self._bytes0
 
 
+@sanitize.guarded
 class SearchSession:
     """Stateful out-of-core serving: one block cache across query batches.
 
@@ -364,8 +368,9 @@ class SearchSession:
         self.blocks_fetched = 0
         self.last_telemetry: dict = {}
         self._closed = False
-        self._coalescer = None         # built lazily on first submit()
-        self._coalescer_lock = threading.Lock()
+        # built lazily on first submit()
+        self._coalescer = None         # guarded by: _coalescer_lock
+        self._coalescer_lock = sanitize.create_lock()
 
     def _knobs(self, pipeline_depth: int | None,
                group_blocks: int | None) -> tuple[int, int]:
@@ -598,13 +603,21 @@ class SearchSession:
         most once for all of them.  Results are bit-identical to
         ``search`` on each batch alone.
         """
-        if self._coalescer is None:
-            with self._coalescer_lock:
-                if self._coalescer is None:
-                    from repro.serve.coalescer import AdmissionCoalescer
-                    self._coalescer = AdmissionCoalescer(self)
-        return self._coalescer.submit(
+        return self._get_coalescer().submit(
             queries, self._plan(k, lb_filter, normalize_queries, metric))
+
+    def _get_coalescer(self):
+        """The session's coalescer, created on first use.  The whole
+        check-create-read runs under the lock: the old double-checked
+        fast path read ``_coalescer`` off-lock, which the lock checker
+        (LOCK001) rightly rejects — on a weak memory model a second
+        thread could observe the reference before the coalescer's own
+        fields."""
+        with self._coalescer_lock:
+            if self._coalescer is None:
+                from repro.serve.coalescer import AdmissionCoalescer
+                self._coalescer = AdmissionCoalescer(self)
+            return self._coalescer
 
     def drain(self, *, deadline_blocks: int | None = None) -> list:
         """Answer every pending ``submit`` in one coalesced walk.
@@ -614,6 +627,8 @@ class SearchSession:
         refines past stage A and unfinished tickets resolve to certified
         ``serve.AnytimeResult``s instead of exact results.
         """
-        if self._coalescer is None:
+        with self._coalescer_lock:
+            co = self._coalescer
+        if co is None:
             return []
-        return self._coalescer.drain(deadline_blocks=deadline_blocks)
+        return co.drain(deadline_blocks=deadline_blocks)

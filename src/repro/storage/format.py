@@ -52,12 +52,12 @@ import dataclasses
 import json
 import os
 import struct
-import threading
 from pathlib import Path
 
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitize
 from repro.core.index import BlockIndex, HostRawBlocks
 
 MAGIC = b"DSIX"
@@ -133,6 +133,7 @@ def check_complete(path: str | Path, meta: dict) -> None:
             f"it.")
 
 
+@sanitize.guarded
 class ArrayFileWriter:
     """Incremental positioned writer for the DSIX container.
 
@@ -176,7 +177,7 @@ class ArrayFileWriter:
         # writers must never collide).
         self._tmp = Path(tmp_path) if tmp_path is not None else \
             self.path.with_name(f".tmp-{os.getpid()}-{self.path.name}")
-        self._lock = threading.Lock()
+        self._lock = sanitize.create_lock()
         self.resumed = False
         if resume and self._tmp.exists():
             f = open(self._tmp, "r+b")
@@ -185,7 +186,7 @@ class ArrayFileWriter:
             else:                      # stale partial: other params/layout
                 f.close()
         if not self.resumed:
-            self._f = open(self._tmp, "wb")
+            self._f = open(self._tmp, "wb")   # guarded by: _lock
             self._f.write(self._header)
 
     @property
@@ -254,6 +255,7 @@ class ArrayFileWriter:
             self.abort()
 
 
+@sanitize.guarded
 class IndexFileWriter(ArrayFileWriter):
     """Incremental writer for the index file kind.
 
@@ -276,7 +278,7 @@ class IndexFileWriter(ArrayFileWriter):
                                  w=w, n=n),
             meta_fields=self.meta, extra=extra,
             tmp_path=tmp_path, resume=resume)
-        self._raw_rows = 0
+        self._raw_rows = 0                      # guarded by: _lock
 
     def write_raw_rows(self, start: int, rows: np.ndarray) -> None:
         """Write (m, n) f32 series rows at series-row ``start`` of the raw
@@ -294,18 +296,35 @@ class IndexFileWriter(ArrayFileWriter):
             self._f.write(rows.tobytes())
 
     def append_raw_rows(self, rows: np.ndarray) -> None:
-        """Append (m, n) f32 series rows to the raw section, in block order."""
-        self.write_raw_rows(self._raw_rows, rows)
-        self._raw_rows += rows.shape[0]
+        """Append (m, n) f32 series rows to the raw section, in block order.
+
+        Reserve-then-write: the row counter advances under the lock
+        (the lock is not reentrant, so the reservation releases before
+        the positioned write re-acquires it), then the write lands in
+        the reserved span — concurrent appenders get disjoint spans.
+        The pre-annotation code read and bumped ``_raw_rows`` off-lock,
+        which the lock checker (LOCK001) rejects: two appenders could
+        reserve the same start row.
+        """
+        m = rows.shape[0]
+        b, c, _ = self.sections["raw"]["shape"]
+        with self._lock:
+            if self._raw_rows + m > b * c:
+                raise ValueError("raw section overflow")
+            start = self._raw_rows
+            self._raw_rows += m
+        self.write_raw_rows(start, rows)
 
     def close(self) -> None:
         b, c, _ = self.sections["raw"]["shape"]
+        with self._lock:
+            raw_rows = self._raw_rows
         # append-mode completeness guard; positioned writers (the pipeline)
         # track completeness through their manifest instead
-        if self._raw_rows not in (0, b * c):
+        if raw_rows not in (0, b * c):
             self.abort()
             raise ValueError(
-                f"raw section incomplete: {self._raw_rows} of {b * c} rows")
+                f"raw section incomplete: {raw_rows} of {b * c} rows")
         super().close()
 
 

@@ -39,7 +39,6 @@ import json
 import os
 import shutil
 import signal
-import threading
 import time
 from concurrent.futures import ThreadPoolExecutor
 from pathlib import Path
@@ -48,6 +47,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+from repro.analysis import sanitize
 from repro.core import index as index_lib
 from repro.core import isax
 from repro.core.index import RAW_PAD, BlockIndex
@@ -94,6 +94,31 @@ def _maybe_kill(stage: str, done_units: int, fault) -> None:
         st, _, k = spec.partition(":")
         if st == stage and done_units >= int(k):
             os.kill(os.getpid(), signal.SIGKILL)   # no cleanup, by design
+
+
+@sanitize.guarded
+class _UnitRecorder:
+    """The one mutation point shared by concurrent stage workers:
+    manifest record + report counter + fault hook, as a single atomic
+    step under one lock (formerly a function-local ``lock`` the
+    checker could not see).  ``flush`` runs inside the same critical
+    section so 'recorded' still implies 'survives a SIGKILL'."""
+
+    def __init__(self, man: Manifest, report: BuildReport, fault):
+        self._lock = sanitize.create_lock()
+        self._man = man          # guarded by: _lock
+        self._report = report    # guarded by: _lock
+        self._fault = fault
+
+    def record(self, stage: str, uid, rec: dict | None = None, *,
+               flush=None) -> None:
+        with self._lock:
+            if flush is not None:
+                flush()          # recorded == survives a SIGKILL
+            self._man.record_unit(stage, uid, rec)
+            self._report.stages[stage].built += 1
+            _maybe_kill(stage, self._report.stages[stage].built,
+                        self._fault)
 
 
 def _plan_layout(n_series: int, capacity: int, chunk: int,
@@ -184,7 +209,7 @@ def run_pipeline(source, out_path: str | Path, *, length: int | None = None,
 
     cap, n_blocks, n_padded = \
         layout["cap"], layout["n_blocks"], layout["n_padded"]
-    lock = threading.Lock()
+    recorder = _UnitRecorder(man, report, fault)
 
     # -- stage 1: sorted summary runs, one unit per shard ----------------
     run_path = lambda i: work_dir / f"run-{i:05d}.dsix"
@@ -204,10 +229,7 @@ def run_pipeline(source, out_path: str | Path, *, length: int | None = None,
         runs_lib.build_run(store, run_path(i), row_start=a, row_stop=b,
                            w=w, card=card, chunk=layout["chunk"],
                            normalize=normalize)
-        with lock:
-            man.record_unit("runs", i, file_record(run_path(i)))
-            report.stages["runs"].built += 1
-            _maybe_kill("runs", report.stages["runs"].built, fault)
+        recorder.record("runs", i, file_record(run_path(i)))
 
     if workers > 1 and len(todo) > 1:
         with ThreadPoolExecutor(max_workers=workers) as ex:
@@ -226,9 +248,7 @@ def run_pipeline(source, out_path: str | Path, *, length: int | None = None,
         merge_lib.merge_runs([run_path(i)
                               for i in range(len(layout["shards"]))],
                              merged_path, w=w)
-        man.record_unit("merge", "0", file_record(merged_path))
-        report.stages["merge"].built += 1
-        _maybe_kill("merge", 1, fault)
+        recorder.record("merge", "0", file_record(merged_path))
     _, merged = merge_lib.open_merge(merged_path)
     order_mm, sax_mm = merged["ids"], merged["sax"]
 
@@ -273,10 +293,7 @@ def run_pipeline(source, out_path: str | Path, *, length: int | None = None,
                 wr.write_rows("shi", g0, shi)
             wr.write_section("elo", elo)
             wr.write_section("ehi", ehi)
-            wr.flush()
-            man.record_unit("summaries", "0")
-            report.stages["summaries"].built += 1
-            _maybe_kill("summaries", 1, fault)
+            recorder.record("summaries", "0", flush=wr.flush)
 
         # -- stage 4: external permute of raw rows, unit = row range -----
         prep = jax.jit(isax.znorm) if normalize else \
@@ -300,11 +317,7 @@ def run_pipeline(source, out_path: str | Path, *, length: int | None = None,
                 gather = np.array(mm[np.array(order_mm[s:e])])
                 rows = np.asarray(prep(gather))
             wr.write_raw_rows(s, rows)
-            with lock:
-                wr.flush()         # recorded == survives a SIGKILL
-                man.record_unit("permute", uid)
-                report.stages["permute"].built += 1
-                _maybe_kill("permute", report.stages["permute"].built, fault)
+            recorder.record("permute", uid, flush=wr.flush)
 
         if workers > 1 and len(todo_u) > 1:
             with ThreadPoolExecutor(max_workers=workers) as ex:

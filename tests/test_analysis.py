@@ -1,0 +1,456 @@
+"""repro.analysis: the linter suite's contract with the repo.
+
+Three layers:
+
+1. The acceptance gate — the full ``src/`` tree has ZERO findings
+   (the same invariant the CI ``lint`` job enforces).
+2. Fixture snippets proving each checker actually catches known-bad
+   code at the right file:line — lock discipline (including
+   ``# caller holds`` delegation), host-sync tracing (jit scope and
+   module directive), the kernel-oracle contract, and the
+   dispatch-registry contract.
+3. The ``REPRO_SANITIZE=1`` runtime wrappers, plus regression tests
+   for the two real races the checker's introduction fixed:
+   ``IndexFileWriter.append_raw_rows`` off-lock reservation and
+   ``SearchSession``'s double-checked coalescer init.
+"""
+import os
+import textwrap
+import threading
+from pathlib import Path
+
+import numpy as np
+import pytest
+
+from conftest import run_subprocess
+from repro.analysis import Project, run_analysis
+from repro.analysis import contracts, locks, syncs
+from repro.analysis.cli import load_project
+from repro.analysis import sanitize
+
+SRC = str(Path(__file__).resolve().parent.parent / "src")
+
+
+def _project(*named):
+    return Project.from_sources(
+        [(path, textwrap.dedent(src)) for path, src in named])
+
+
+# -- 1. the acceptance gate -------------------------------------------------
+
+def test_src_tree_has_zero_findings():
+    project, parse_errors = load_project([SRC])
+    assert not parse_errors
+    findings = run_analysis(project)
+    assert findings == [], "\n".join(f.text() for f in findings)
+
+
+# -- 2a. lock-discipline fixtures ------------------------------------------
+
+BAD_LOCK = """\
+import threading
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.n = 0   # guarded by: _lock
+
+    def good(self):
+        with self._lock:
+            self.n += 1
+
+    def bad(self):
+        self.n += 1
+"""
+
+
+def test_lock_checker_flags_offlock_mutation():
+    findings = locks.check(_project(("svc/counter.py", BAD_LOCK)))
+    assert len(findings) == 1
+    f = findings[0]
+    assert (f.path, f.code) == ("svc/counter.py", "LOCK001")
+    assert f.line == 13          # the `self.n += 1` inside bad()
+    assert "Counter.n" in f.message and "_lock" in f.message
+
+
+def test_lock_checker_flags_offlock_read():
+    src = """\
+    class C:
+        def __init__(self):
+            self.items = []   # guarded by: _lock
+
+        def peek(self):
+            return len(self.items)
+    """
+    findings = locks.check(_project(("c.py", src)))
+    assert [f.code for f in findings] == ["LOCK001"]
+    assert findings[0].line == 6
+
+
+def test_lock_checker_passes_clean_class():
+    src = BAD_LOCK.replace("    def bad(self):\n        self.n += 1\n",
+                           "")
+    assert locks.check(_project(("svc/counter.py", src))) == []
+
+
+CALLER_HOLDS = """\
+import threading
+
+class Cache:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._d = {}   # guarded by: _lock
+
+    def _insert(self, k, v):
+        # caller holds self._lock
+        self._d[k] = v
+
+    def put(self, k, v):
+        with self._lock:
+            self._insert(k, v)
+
+    def put_racy(self, k, v):
+        self._insert(k, v)
+"""
+
+
+def test_caller_holds_delegation():
+    findings = locks.check(_project(("cache.py", CALLER_HOLDS)))
+    # _insert's own body passes (the annotation grants the lock), the
+    # locked call site passes, the off-lock call site is the finding
+    assert [(f.code, f.line) for f in findings] == [("LOCK002", 17)]
+    assert "_insert" in findings[0].message
+
+
+def test_unannotated_helper_is_flagged_in_its_body():
+    src = CALLER_HOLDS.replace("        # caller holds self._lock\n", "")
+    findings = locks.check(_project(("cache.py", src)))
+    # without the annotation the helper's own guarded access is the
+    # violation (both call sites are then fine to the checker)
+    assert [f.code for f in findings] == ["LOCK001"]
+    assert "Cache._d" in findings[0].message
+
+
+def test_nested_function_does_not_inherit_the_lock():
+    src = """\
+    class C:
+        def __init__(self):
+            self.n = 0   # guarded by: _lock
+
+        def spawn(self):
+            with self._lock:
+                def later():
+                    self.n += 1     # runs off-thread, lock NOT held
+                return later
+    """
+    findings = locks.check(_project(("c.py", src)))
+    assert [(f.code, f.line) for f in findings] == [("LOCK001", 8)]
+
+
+# -- 2b. host-sync tracer fixtures -----------------------------------------
+
+def test_sync_tracer_flags_asarray_inside_jit():
+    src = """\
+    import jax
+    import numpy as np
+
+    @jax.jit
+    def f(x):
+        y = x + 1
+        return np.asarray(y)
+    """
+    findings = syncs.check(_project(("m.py", src)))
+    assert [(f.code, f.line) for f in findings] == [("SYNC001", 7)]
+
+
+def test_sync_tracer_flags_float_in_lax_scan_body():
+    src = """\
+    from jax import lax
+
+    def walk(xs):
+        def body(carry, x):
+            t = float(carry)
+            return carry + x, t
+        return lax.scan(body, 0.0, xs)
+    """
+    findings = syncs.check(_project(("m.py", src)))
+    assert [(f.code, f.line) for f in findings] == [("SYNC001", 5)]
+
+
+def test_sync_annotation_is_the_sanctioned_suppression():
+    src = """\
+    import jax
+    import numpy as np
+
+    @jax.jit
+    def f(x):
+        return np.asarray(x)   # sync
+    """
+    assert syncs.check(_project(("m.py", src))) == []
+
+
+def test_jnp_asarray_is_not_a_sync():
+    src = """\
+    import jax
+    import jax.numpy as jnp
+
+    @jax.jit
+    def f(x):
+        return jnp.asarray(x)
+    """
+    assert syncs.check(_project(("m.py", src))) == []
+
+
+def test_module_sync_trace_directive():
+    src = """\
+    # repro: sync-trace
+    import numpy as np
+
+    def host_sched(lb, gids):
+        a = np.asarray(lb)
+        b = np.asarray(lb)          # sync
+        c = np.asarray(gids)        # host ids
+        return a, b, c
+    """
+    findings = syncs.check(_project(("engineish.py", src)))
+    assert [(f.code, f.line) for f in findings] == [("SYNC002", 5)]
+
+
+# -- 2c. contract-checker fixtures -----------------------------------------
+
+REF_OK = """\
+def foo_ref(x, *, k):
+    return x
+
+def bar_oracle(x):
+    return x
+"""
+
+KERNEL_FOO = """\
+import functools
+import jax
+
+@functools.partial(jax.jit, static_argnames=("k", "tile_n", "interpret"))
+def foo(x, *, k, tile_n=128, interpret=False):
+    return x
+"""
+
+
+def test_oracle_contract_passes_and_strips_tuning_params():
+    p = _project(("src/repro/kernels/foo.py", KERNEL_FOO),
+                 ("src/repro/kernels/ref.py", REF_OK))
+    assert contracts.check_oracles(p) == []
+
+
+def test_missing_oracle_is_flagged():
+    p = _project(("src/repro/kernels/foo.py",
+                  KERNEL_FOO.replace("def foo(", "def fresh(")),
+                 ("src/repro/kernels/ref.py", REF_OK))
+    findings = contracts.check_oracles(p)
+    assert [(f.code, f.line) for f in findings] == [("KERN001", 5)]
+    assert "fresh_ref" in findings[0].message
+
+
+def test_oracle_signature_mismatch_is_flagged():
+    ref = REF_OK.replace("def foo_ref(x, *, k):", "def foo_ref(x, *, kk):")
+    p = _project(("src/repro/kernels/foo.py", KERNEL_FOO),
+                 ("src/repro/kernels/ref.py", ref))
+    assert [f.code for f in contracts.check_oracles(p)] == ["KERN003"]
+
+
+def test_oracle_override_comment():
+    src = KERNEL_FOO.replace(
+        "def foo(x, *, k, tile_n=128, interpret=False):",
+        "def bar(x, tile_n=128, interpret=False):   # oracle: bar_oracle")
+    p = _project(("src/repro/kernels/bar.py", src),
+                 ("src/repro/kernels/ref.py", REF_OK))
+    assert contracts.check_oracles(p) == []
+
+
+OPS = """\
+def _use_pallas():
+    return False, False
+
+def register_dispatch_cache(fn):
+    pass
+
+def batch_l2(q, x):
+    use, interp = _use_pallas()
+    return q
+"""
+
+DISPATCHER = """\
+import jax
+from repro.kernels import ops
+
+@jax.jit
+def search(q, x):
+    return helper(q, x)
+
+def helper(q, x):
+    return ops.batch_l2(q, x)
+"""
+
+
+def test_unregistered_jitted_dispatcher_is_flagged():
+    p = _project(("src/repro/kernels/ops.py", OPS),
+                 ("src/repro/core/search.py", DISPATCHER))
+    findings = contracts.check_dispatch(p)
+    # reached transitively through helper(), two modules away
+    assert [(f.code, f.path, f.line) for f in findings] == \
+        [("DISP001", "src/repro/core/search.py", 5)]
+    assert "register_dispatch_cache" in findings[0].message
+
+
+def test_registered_dispatcher_passes():
+    src = DISPATCHER + "\n\nops.register_dispatch_cache(search)\n"
+    p = _project(("src/repro/kernels/ops.py", OPS),
+                 ("src/repro/core/search.py", src))
+    assert contracts.check_dispatch(p) == []
+
+
+def test_jitted_function_not_reaching_ops_needs_no_registration():
+    src = """\
+    import jax
+
+    @jax.jit
+    def pure(q):
+        return q * 2
+    """
+    p = _project(("src/repro/kernels/ops.py", OPS),
+                 ("src/repro/core/pure.py", src))
+    assert contracts.check_dispatch(p) == []
+
+
+# -- 3. runtime sanitizer ---------------------------------------------------
+
+def test_sanitizer_is_off_by_default():
+    assert not sanitize.enabled() or os.environ.get("REPRO_SANITIZE")
+    lock = sanitize.create_lock()
+    if not sanitize.enabled():
+        assert isinstance(lock, type(threading.Lock()))
+
+
+def test_instrumented_lock_tracks_owner():
+    lock = sanitize.InstrumentedLock()
+    assert not lock.held_by_me()
+    with lock:
+        assert lock.held_by_me()
+        assert lock.locked()
+    assert not lock.held_by_me()
+
+
+_SANITIZE_CODE = """
+import numpy as np
+from repro.analysis.sanitize import SanitizeError
+from repro.storage.format import IndexFileWriter
+
+wr = IndexFileWriter("/tmp/_san.dsix", n=8, w=4, card=4, capacity=4,
+                     n_real=16, n_blocks=4, tmp_path="/tmp/_san.partial")
+wr.append_raw_rows(np.zeros((4, 8), np.float32))   # locked path: fine
+
+with wr._lock:
+    wr._raw_rows = 0                                # held: fine
+
+try:
+    wr._raw_rows = 7                                # off-lock: must raise
+except SanitizeError:
+    print("CAUGHT")
+else:
+    print("MISSED")
+finally:
+    wr.abort()
+"""
+
+
+def test_sanitize_offlock_mutation_raises():
+    out = run_subprocess(
+        "import os; os.environ['REPRO_SANITIZE'] = '1'\n" + _SANITIZE_CODE,
+        devices=1)
+    assert "CAUGHT" in out and "MISSED" not in out
+
+
+def test_sanitize_off_means_no_assertion():
+    out = run_subprocess(
+        "import os; os.environ.pop('REPRO_SANITIZE', None)\n"
+        + _SANITIZE_CODE.replace("except SanitizeError:",
+                                 "except AssertionError:"),
+        devices=1)
+    assert "MISSED" in out     # plain lock, no holder tracking
+
+
+# -- 3b. regression tests for the races the checker surfaced ---------------
+
+def test_concurrent_append_raw_rows_get_disjoint_spans(tmp_path):
+    """Pre-fix, ``append_raw_rows`` read-then-bumped ``_raw_rows`` off
+    lock: two appenders could reserve the same start row and one
+    span's rows would be lost.  Reserve-under-lock makes concurrent
+    appends land each row exactly once."""
+    from repro.storage import format as format_lib
+    n, cap, n_blocks = 8, 4, 4
+    total = cap * n_blocks
+    path = tmp_path / "c.dsix"
+    wr = format_lib.IndexFileWriter(path, n=n, w=4, card=4, capacity=cap,
+                                    n_real=total, n_blocks=n_blocks)
+    start = threading.Barrier(8)
+
+    def appender(i):
+        rows = np.full((2, n), 0.0, np.float32)
+        rows[0, :] = 2 * i
+        rows[1, :] = 2 * i + 1
+        start.wait()
+        wr.append_raw_rows(rows)
+
+    threads = [threading.Thread(target=appender, args=(i,))
+               for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    wr.close()
+
+    idx = format_lib.open_index(path)
+    got = sorted(float(idx.host_raw.fetch(b)[r, 0])
+                 for b in range(n_blocks) for r in range(cap))
+    assert got == [float(v) for v in range(total)]
+
+
+def test_concurrent_submit_builds_one_coalescer(rng):
+    """Pre-fix, ``submit`` read ``_coalescer`` outside the lock
+    (double-checked init).  All concurrent submitters must share ONE
+    coalescer and every ticket must resolve exactly."""
+    import jax.numpy as jnp
+    import repro.core as core
+    from repro import storage
+    raw = rng.standard_normal((512, 64)).astype(np.float32)
+    idx = core.build(jnp.asarray(raw), capacity=64)
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        path = Path(d) / "rw.dsix"
+        storage.save_index(idx, path)
+        opened = storage.open_index(path)
+        qs = jnp.asarray(raw[:4])
+        with storage.SearchSession(opened, cache_blocks=16) as sess:
+            want = sess.search(qs, k=3)
+            start = threading.Barrier(6)
+            tickets = [None] * 6
+
+            def submitter(i):
+                start.wait()
+                tickets[i] = sess.submit(qs, k=3)
+
+            threads = [threading.Thread(target=submitter, args=(i,))
+                       for i in range(6)]
+            for t in threads:
+                t.start()
+            for t in threads:
+                t.join()
+            coalescers = {t._coalescer for t in tickets}
+            assert len(coalescers) == 1
+            sess.drain()
+            for t in tickets:
+                got = t.result(timeout=60)
+                assert np.array_equal(np.asarray(got.idx),
+                                      np.asarray(want.idx))
+                assert np.array_equal(np.asarray(got.dist),
+                                      np.asarray(want.dist))
